@@ -1,0 +1,113 @@
+"""Shared benchmark scaffolding: the paper's experimental grid on the
+synthetic tasks (offline container — see DESIGN.md §7), reduced-scale by
+default so a full figure reproduces in CPU minutes."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import masking, federated
+from repro.models import cnn
+from repro.data import synthetic, partition
+
+SPEC = masking.MaskSpec()
+
+
+def make_setup(dataset: str, k: int, c: int | None, seed: int = 0,
+               n: int = 1024):
+    """dataset in {mnist-like, cifar10-like, cifar100-like}: difficulty
+    emulated via prototype scale / noise; ConvN per paper Sec. IV."""
+    key = jax.random.PRNGKey(seed)
+    if dataset == "mnist-like":
+        cfg = cnn.ConvConfig("conv4", (16, 16, 32, 32), (64,),
+                             n_classes=10, img_size=16, in_channels=1)
+        task = synthetic.make_image_task(key, n=n, img=16, channels=1,
+                                         proto_scale=1.4, noise=0.45)
+    elif dataset == "cifar10-like":
+        cfg = cnn.ConvConfig("conv6", (16, 16, 32, 32, 64, 64), (64,),
+                             n_classes=10, img_size=16)
+        task = synthetic.make_image_task(key, n=n, img=16,
+                                         proto_scale=1.0, noise=0.7)
+    elif dataset == "cifar100-like":
+        cfg = cnn.ConvConfig("conv10",
+                             (16, 16, 32, 32, 64, 64, 64, 64, 64, 64),
+                             (64,), n_classes=20, img_size=16)
+        task = synthetic.make_image_task(key, n=n, img=16, n_classes=20,
+                                         proto_scale=1.0, noise=0.7)
+    else:
+        raise ValueError(dataset)
+    rng = np.random.default_rng(seed)
+    labels = np.asarray(task.y)
+    if c is None:
+        cidx = partition.partition_iid(rng, labels, k)
+    else:
+        cidx = partition.partition_by_class(rng, labels, k, c)
+    params = cnn.init_params(key, cfg)
+    apply_fn = lambda p, b: cnn.forward(p, cfg, b["images"])
+    loss_fn = lambda out, b: cnn.ce_loss(out, b)
+    metric_fn = lambda out, b: cnn.accuracy(out, b)
+    test = {"images": task.x[: min(512, n)],
+            "labels": task.y[: min(512, n)]}
+    return dict(cfg=cfg, task=task, cidx=cidx, params=params,
+                apply_fn=apply_fn, loss_fn=loss_fn, metric_fn=metric_fn,
+                test=test, k=k)
+
+
+def run_fedpm_variant(setup, lam: float, rounds: int, local_steps=3,
+                      batch=32, lr=0.1, seed=0, participation=None):
+    """Returns per-round dict lists: acc, bpp, sparsity, loss."""
+    key = jax.random.PRNGKey(seed)
+    server = federated.init_server(key, setup["params"], SPEC)
+    fc = federated.FedConfig(lam=lam, local_steps=local_steps, lr=lr,
+                             optimizer="adam", float_lr=1e-3)
+    rf = federated.make_round_fn(setup["apply_fn"], setup["loss_fn"], fc,
+                                 setup["k"])
+    ev = federated.make_eval_fn(setup["apply_fn"], setup["metric_fn"],
+                                n_samples=2)
+    sizes = jnp.asarray([len(ci) for ci in setup["cidx"]], jnp.float32)
+    hist = {"acc": [], "bpp": [], "sparsity": [], "loss": []}
+    for r in range(rounds):
+        kr = jax.random.fold_in(key, r)
+        data = synthetic.federated_batches(
+            kr, setup["task"], setup["cidx"], setup["k"], local_steps,
+            batch)
+        part = (jnp.ones((setup["k"],), bool) if participation is None
+                else participation(r))
+        server, m = rf(server, data, part, sizes, kr)
+        hist["bpp"].append(float(m["uplink_bpp"]))
+        hist["sparsity"].append(float(m["sparsity"]))
+        hist["loss"].append(float(m["loss"]))
+        hist["acc"].append(float(ev(server, setup["test"], kr)))
+    return hist, server
+
+
+def run_baseline(setup, algo, rounds: int, local_steps=3, batch=32,
+                 seed=0):
+    key = jax.random.PRNGKey(seed)
+    st = algo.init(key, setup["params"])
+    sizes = jnp.asarray([len(ci) for ci in setup["cidx"]], jnp.float32)
+    part = jnp.ones((setup["k"],), bool)
+    hist = {"acc": [], "bpp": [], "loss": []}
+    for r in range(rounds):
+        kr = jax.random.fold_in(key, 1000 + r)
+        data = synthetic.federated_batches(
+            kr, setup["task"], setup["cidx"], setup["k"], local_steps,
+            batch)
+        st, m = algo.round(st, data, part, sizes, kr)
+        hist["bpp"].append(float(m["uplink_bpp"]))
+        hist["loss"].append(float(m["loss"]))
+        eff = algo.eval_params(st, kr)
+        out = setup["apply_fn"](eff, setup["test"])
+        hist["acc"].append(float(setup["metric_fn"](out, setup["test"])))
+    return hist, st
+
+
+class Timer:
+    def __init__(self):
+        self.t0 = time.time()
+
+    def us_per(self, calls: int) -> float:
+        return (time.time() - self.t0) * 1e6 / max(calls, 1)

@@ -1,0 +1,47 @@
+"""Paper Fig. 1: IID — validation accuracy & average Bpp vs rounds,
+FedPM vs FedPM+regularization (lambda=1), three datasets.
+
+Prints CSV: dataset,algo,round,acc,bpp,sparsity
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks import common
+
+
+def main(rounds: int = 12, k: int = 10, datasets=None):
+    datasets = datasets or ["mnist-like", "cifar10-like",
+                            "cifar100-like"]
+    print("dataset,algo,round,acc,bpp,sparsity")
+    summary = []
+    for ds in datasets:
+        setup = common.make_setup(ds, k=k, c=None)
+        for lam, name in [(0.0, "fedpm"), (1.0, "fedpm+reg"),
+                          (4.0, "fedpm+reg4")]:
+            hist, _ = common.run_fedpm_variant(setup, lam, rounds)
+            for r in range(rounds):
+                print(f"{ds},{name},{r},{hist['acc'][r]:.4f},"
+                      f"{hist['bpp'][r]:.4f},{hist['sparsity'][r]:.4f}")
+            summary.append((ds, name, hist["acc"][-1], hist["bpp"][-1]))
+    print("# summary: dataset algo final_acc final_bpp", file=sys.stderr)
+    gains = {}
+    for ds, name, acc, bpp in summary:
+        print(f"# {ds:14s} {name:10s} acc={acc:.3f} bpp={bpp:.3f}",
+              file=sys.stderr)
+        gains.setdefault(ds, {})[name] = (acc, bpp)
+    for ds, g in gains.items():
+        for variant in ("fedpm+reg", "fedpm+reg4"):
+            if variant in g and "fedpm" in g:
+                dbpp = g["fedpm"][1] - g[variant][1]
+                dacc = g["fedpm"][0] - g[variant][0]
+                print(f"# {ds} {variant}: Bpp saved={dbpp:+.3f}, "
+                      f"acc delta={-dacc:+.3f} (paper trend: reg saves "
+                      "Bpp at ~0 acc cost; grows with rounds/lambda)",
+                      file=sys.stderr)
+    return gains
+
+
+if __name__ == "__main__":
+    rounds = int(sys.argv[1]) if len(sys.argv) > 1 else 12
+    main(rounds)

@@ -1,0 +1,150 @@
+"""Roofline analysis from the dry-run compiled artifacts.
+
+Terms (v5e targets, per DESIGN):
+    compute    = HLO_FLOPs_per_chip / 197e12          [s]
+    memory     = HLO_bytes_per_chip / 819e9           [s]
+    collective = collective_operand_bytes_per_chip / 50e9  [s]
+
+cost_analysis() is PER-PARTITION (verified against a hand-sharded
+matmul), so the per-chip terms read off directly. Caveat (documented in
+EXPERIMENTS.md): XLA cost analysis counts a lax.scan body ONCE, so
+layer-stacked HLO_FLOPs under-count by ~n_layers for scanned stacks; the
+hillclimb cells are re-lowered with scan_unroll=n_layers for exact
+numbers, and MODEL_FLOPS = 6*N_active*D provides the analytic anchor
+for every cell.
+
+Usage: python -m benchmarks.roofline [dryrun_results.json] [--md]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.configs import get_config, SHAPES
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / link (ICI)
+
+CHIPS = {"pod16x16": 256, "pod2x16x16": 512}
+
+
+def model_flops(arch: str, shape_name: str, step: str) -> float:
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    n_act = cfg.active_param_count()
+    if step in ("train_step",):
+        tokens = sh.global_batch * sh.seq_len
+        return 6.0 * n_act * tokens
+    if step == "prefill_step":
+        tokens = sh.global_batch * sh.seq_len
+        return 2.0 * n_act * tokens
+    if step == "serve_step":
+        return 2.0 * n_act * sh.global_batch
+    return 0.0  # round_step: communication, not model compute
+
+
+def scan_trip_count(arch: str) -> int:
+    """Approximate scan under-count factor (layers per scan body)."""
+    cfg = get_config(arch)
+    if cfg.family == "hybrid":
+        return cfg.n_layers // len(cfg.block_pattern)
+    if cfg.family == "encdec":
+        return cfg.n_layers  # enc and dec scans, both ~n_layers
+    if cfg.n_experts:
+        return cfg.n_layers - cfg.first_dense_layers
+    return cfg.n_layers
+
+
+def analyze(results: dict):
+    rows = []
+    for cell, v in sorted(results.items()):
+        if not v.get("ok"):
+            continue
+        arch, shape, mesh = cell.split("|")
+        chips = CHIPS[mesh]
+        for step, d in v.items():
+            if step in ("ok",):
+                continue
+            if not isinstance(d, dict) or "flops" not in d:
+                continue
+            f = d["flops"]
+            b = d["bytes_accessed"]
+            cb = d["collective_bytes"].get("total", 0)
+            t_c = f / PEAK_FLOPS
+            t_m = b / HBM_BW
+            t_x = cb / LINK_BW
+            dom = max((t_c, "compute"), (t_m, "memory"),
+                      (t_x, "collective"))[1]
+            mf = model_flops(arch, shape, step)
+            hlo_global = f * chips
+            trip = scan_trip_count(arch)
+            hlo_corrected = hlo_global * trip  # scan-once correction
+            ratio = mf / hlo_corrected if hlo_corrected else 0.0
+            rows.append(dict(
+                arch=arch, shape=shape, mesh=mesh, step=step,
+                chips=chips, t_compute=t_c, t_memory=t_m,
+                t_collective=t_x, dominant=dom,
+                model_flops=mf, hlo_flops_per_chip=f,
+                hlo_flops_global_scan_corrected=hlo_corrected,
+                useful_ratio=ratio,
+                collective_bytes=cb,
+                bytes_per_chip=b,
+            ))
+    return rows
+
+
+SUGGEST = {
+    ("compute",): "increase per-chip arithmetic intensity (bigger local "
+                  "batch / fuse mask into matmul kernel)",
+    ("memory",): "cut HBM traffic: fused masked matmul (no materialized "
+                 "m*w), bf16 scores, remat policy",
+    ("collective",): "bitpack the mask exchange / reshard to reduce "
+                     "all-gather volume",
+}
+
+
+_MOVE = {
+    "compute": "raise arithmetic intensity: fused masked-matmul kernel, "
+               "larger per-chip batch, fewer redundant dispatch FLOPs",
+    "memory": "cut HBM traffic: remat, microbatching, vocab-sharded "
+              "logits, ring KV caches, fused mask (no m*w in HBM)",
+    "collective": "cut wire bytes: bitpacked mask exchange, TP-only "
+                  "weight sharding for inference (drop FSDP gathers)",
+}
+
+
+def to_markdown(rows):
+    out = ["| arch | shape | mesh | step | compute s | memory s | "
+           "collective s | dominant | MODEL_FLOPS | useful ratio | "
+           "to move the dominant term |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['step']} "
+            f"| {r['t_compute']:.2e} | {r['t_memory']:.2e} "
+            f"| {r['t_collective']:.2e} | **{r['dominant']}** "
+            f"| {r['model_flops']:.2e} | {r['useful_ratio']:.2f} "
+            f"| {_MOVE[r['dominant']]} |")
+    return "\n".join(out)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    with open(path) as f:
+        results = json.load(f)
+    rows = analyze(results)
+    if "--md" in sys.argv:
+        print(to_markdown(rows))
+        return
+    print("arch,shape,mesh,step,t_compute,t_memory,t_collective,"
+          "dominant,model_flops,useful_ratio")
+    for r in rows:
+        print(f"{r['arch']},{r['shape']},{r['mesh']},{r['step']},"
+              f"{r['t_compute']:.3e},{r['t_memory']:.3e},"
+              f"{r['t_collective']:.3e},{r['dominant']},"
+              f"{r['model_flops']:.3e},{r['useful_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Benchmark driver: one function per paper figure/table.
+
+  fig1   - IID accuracy + Bpp vs rounds (paper Fig. 1)
+  fig2   - non-IID lambda trade-off vs baselines (paper Fig. 2)
+  kernels- masked-matmul / bitpack micro-benchmarks
+  roofline (separate: python -m benchmarks.roofline dryrun_results.json)
+
+Prints ``name,us_per_call,derived`` CSV blocks per benchmark.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    rounds = int(sys.argv[1]) if len(sys.argv) > 1 else 36
+    from benchmarks import fig1_iid, fig2_noniid, kernels_bench
+
+    print("== kernels ==")
+    kernels_bench.main()
+
+    print("== fig1 (IID) ==")
+    t0 = time.time()
+    fig1_iid.main(rounds=rounds, k=6, datasets=["mnist-like",
+                                                "cifar10-like"])
+    print(f"# fig1 wall: {time.time()-t0:.0f}s", file=sys.stderr)
+
+    print("== fig2 (non-IID) ==")
+    t0 = time.time()
+    fig2_noniid.main(rounds=max(rounds // 2, 8), k=6, c=2)
+    print(f"# fig2 wall: {time.time()-t0:.0f}s", file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,81 @@
+"""Serving example: load a (seed, bitpacked-mask) artifact, materialize
+the sparse sub-network, and decode with a KV cache under batched
+requests — the paper's "SEED + binary mask is the whole model" claim,
+live.
+
+    PYTHONPATH=src:. python examples/serve_masked.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import masking, federated
+from repro.models import build_model
+from repro.launch import steps as steplib
+
+
+def main():
+    cfg = ArchConfig(name="serve-demo", family="dense", n_layers=4,
+                     d_model=256, n_heads=4, n_kv_heads=2, d_ff=1024,
+                     vocab=4096, head_dim=64)
+    api = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    spec = masking.MaskSpec()
+
+    # --- "train side": produce the artifact ---------------------------
+    params_like = api.init_params(key)
+    server = federated.init_server(key, params_like, spec)
+    art = federated.final_artifact(server, key)
+    n = sum(int(np.prod(sh)) for _, (w, sh) in art["masks"].items())
+    packed_bytes = sum(int(w.size) * 4 for _, (w, sh)
+                       in art["masks"].items())
+    print(f"artifact: {n} masked params -> {packed_bytes} packed bytes "
+          f"({8*packed_bytes/n:.2f} bits/param)")
+
+    # --- "serve side": regenerate weights from the seed, apply mask ---
+    from repro.core import aggregation
+    mp = masking.init_masked(key, params_like, spec)  # same seed
+    flat = {p: l for p, l in masking.leaves_with_paths(mp.weights)}
+
+    def materialize(path, w):
+        if w is None or path not in art["masks"]:
+            return w
+        words, shape = art["masks"][path]
+        m = aggregation.unpack_bits(jnp.asarray(words),
+                                    int(np.prod(shape))).reshape(shape)
+        return (m.astype(w.dtype) * w)
+
+    eff = jax.tree_util.tree_map_with_path(
+        lambda p, w: materialize(
+            "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in p), w),
+        mp.weights, is_leaf=lambda x: x is None)
+    # float leaves from the artifact
+    eff = jax.tree_util.tree_map(
+        lambda e, f: f if e is None else e, eff, mp.floats,
+        is_leaf=lambda x: x is None)
+
+    # --- batched decode ------------------------------------------------
+    B, prompt_len, gen = 8, 32, 16
+    serve = jax.jit(steplib.make_serve_step(api))
+    cache = api.init_cache(B, prompt_len + gen)
+    prompt = jax.random.randint(key, (B, prompt_len), 0, cfg.vocab)
+    # prefill by stepping (simple reference path)
+    tok = prompt[:, 0]
+    t0 = time.time()
+    for t in range(prompt_len + gen - 1):
+        logits, cache = serve(eff, cache, tok,
+                              jnp.asarray(t, jnp.int32))
+        tok = (prompt[:, t + 1] if t + 1 < prompt_len
+               else jnp.argmax(logits, -1).astype(jnp.int32))
+    dt = time.time() - t0
+    print(f"decoded {gen} tokens x {B} requests in {dt:.2f}s "
+          f"({B*gen/dt:.1f} tok/s on CPU)")
+    print("sample continuation ids:", np.asarray(tok)[:8])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+# The paper's primary contribution: regularized sparse random-network
+# federated training (FedPM + entropy-proxy regularizer).
+from repro.core import masking, regularizer, aggregation, federated  # noqa
+from repro.core.masking import MaskSpec, MaskedParams  # noqa: F401
+from repro.core.federated import FedConfig, ServerState  # noqa: F401

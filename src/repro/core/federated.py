@@ -1,0 +1,219 @@
+"""Federated round orchestration (host-simulation, the paper-faithful path).
+
+Protocol per round t (Sec. II of the paper):
+  1. Server holds global probability mask theta(t) (+ float leaves).
+  2. Each participating client i: s_i <- logit(theta(t))            (eq. 4)
+  3. H local mini-batch steps on scores with STE + entropy-proxy reg
+     (eqs. 6, 7, 12).
+  4. Sample uplink mask  m̂_i ~ Bern(sigmoid(s_i)).
+  5. Server: theta(t+1) = weighted mean of masks                    (eq. 8)
+
+Clients are vmapped: `client_data` carries a leading K axis. Partial
+participation / node failure / stragglers are a per-round boolean vector:
+missing clients are renormalized out of the mean — this IS the fault
+model at 1000-node scale (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masking, regularizer, aggregation
+from repro.optim import optimizers as optlib
+
+Pytree = Any
+
+
+class ServerState(NamedTuple):
+    theta: Pytree      # global probability mask (None for float leaves)
+    floats: Pytree     # FedAvg'd float leaves (None for masked leaves)
+    weights: Pytree    # frozen random weights (regenerable from seed)
+    seed: jax.Array    # the init seed (the only weight "payload")
+    round: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    lam: float = 1.0            # regularization strength lambda
+    local_steps: int = 3        # H: local mini-batch iterations per round
+    lr: float = 0.1             # score learning rate
+    float_lr: float = 0.01      # lr for non-masked float leaves
+    optimizer: str = "sgd"      # "sgd" | "momentum" | "adam"
+    bayesian: bool = False      # FedPM beta aggregation
+    train_floats: bool = True
+
+
+def init_server(key: jax.Array, params_like: Pytree,
+                spec: masking.MaskSpec) -> ServerState:
+    seed = jax.random.key_data(key)[..., -1].astype(jnp.uint32)
+    mp = masking.init_masked(key, params_like, spec)
+    theta = jax.tree_util.tree_map(
+        lambda s: None if s is None else jax.nn.sigmoid(
+            s.astype(jnp.float32)),
+        mp.scores, is_leaf=lambda x: x is None)
+    return ServerState(theta=theta, floats=mp.floats, weights=mp.weights,
+                       seed=seed, round=jnp.zeros((), jnp.int32))
+
+
+def _make_opt(name: str, lr: float) -> optlib.Optimizer:
+    if name == "sgd":
+        return optlib.sgd(lr)
+    if name == "momentum":
+        return optlib.momentum(lr)
+    if name == "adam":
+        return optlib.adam(lr)
+    raise ValueError(name)
+
+
+def make_client_update(apply_fn: Callable, loss_fn: Callable,
+                       cfg: FedConfig):
+    """Build the jittable single-client local-update function.
+
+    apply_fn(effective_params, batch) -> model outputs
+    loss_fn(outputs, batch) -> scalar data loss (e.g. mean CE)
+
+    Returns fn(weights, floats, theta, data, key) ->
+        (mask_uint8_tree, new_floats, metrics)
+    where `data` is a pytree with leading axis = cfg.local_steps
+    (one mini-batch per local iteration).
+    """
+    opt = _make_opt(cfg.optimizer, cfg.lr)
+    fopt = _make_opt(cfg.optimizer, cfg.float_lr)
+
+    def local_loss(scores, floats, weights, batch, key):
+        mp = masking.MaskedParams(weights, scores, floats)
+        eff = masking.sample_effective(mp, key, mode="sample")
+        out = apply_fn(eff, batch)
+        data_loss = loss_fn(out, batch)
+        reg = regularizer.entropy_proxy(scores)
+        return data_loss + cfg.lam * reg, (data_loss, reg)
+
+    def client(weights, floats, theta, data, key):
+        scores = masking.scores_from_theta(theta)  # eq. (4)
+        ostate = opt.init(scores)
+        fstate = fopt.init(floats)
+
+        def step(carry, xs):
+            scores, floats, ostate, fstate = carry
+            batch, k = xs
+            (loss, (dl, reg)), grads = jax.value_and_grad(
+                local_loss, argnums=(0, 1), has_aux=True)(
+                    scores, floats, weights, batch, k)
+            gs, gf = grads
+            upd, ostate = opt.update(gs, ostate, scores)
+            scores = optlib.apply_updates(scores, upd)
+            if cfg.train_floats:
+                updf, fstate = fopt.update(gf, fstate, floats)
+                floats = optlib.apply_updates(floats, updf)
+            return (scores, floats, ostate, fstate), (loss, dl, reg)
+
+        keys = jax.random.split(key, cfg.local_steps + 1)
+        (scores, floats, _, _), (losses, dls, regs) = jax.lax.scan(
+            step, (scores, floats, ostate, fstate),
+            (data, keys[:cfg.local_steps]))
+
+        mask = masking.final_mask(
+            masking.MaskedParams(weights, scores, floats), keys[-1])
+        metrics = {
+            "loss": losses[-1], "data_loss": dls[-1], "reg": regs[-1],
+            "uplink_bpp": regularizer.empirical_entropy(mask),
+            "sparsity": regularizer.sparsity(mask),
+        }
+        return mask, floats, metrics
+
+    return client
+
+
+def make_round_fn(apply_fn: Callable, loss_fn: Callable, cfg: FedConfig,
+                  n_clients: int):
+    """Build the jitted full-round function over K vmapped clients.
+
+    round_fn(server: ServerState, data: pytree[K, H, ...],
+             participation: bool[K], sizes: f32[K], key)
+        -> (ServerState, metrics)
+    """
+    client = make_client_update(apply_fn, loss_fn, cfg)
+    vclient = jax.vmap(client, in_axes=(None, None, None, 0, 0))
+
+    def round_fn(server: ServerState, data, participation, sizes, key):
+        keys = jax.random.split(key, n_clients)
+        masks, floats, metrics = vclient(
+            server.weights, server.floats, server.theta, data, keys)
+
+        # effective weight per client: |D_i| * participated (eq. 8 with
+        # dropped nodes renormalized out)
+        w = sizes * participation.astype(jnp.float32)
+        wsum = jnp.maximum(jnp.sum(w), 1e-9)
+        wn = w / wsum
+
+        def agg_mask(m):
+            if m is None:
+                return None
+            if cfg.bayesian:
+                ones = jnp.sum(m.astype(jnp.float32)
+                               * wn.reshape((-1,) + (1,) * (m.ndim - 1))
+                               * jnp.sum(participation), axis=0)
+                k = jnp.sum(participation.astype(jnp.float32))
+                return (1.0 + ones) / (2.0 + k)
+            return jnp.tensordot(wn, m.astype(jnp.float32), axes=(0, 0))
+
+        def agg_float(f):
+            if f is None:
+                return None
+            return jnp.tensordot(wn, f.astype(jnp.float32),
+                                 axes=(0, 0)).astype(f.dtype)
+
+        theta = jax.tree_util.tree_map(agg_mask, masks,
+                                       is_leaf=lambda x: x is None)
+        new_floats = jax.tree_util.tree_map(agg_float, floats,
+                                            is_leaf=lambda x: x is None)
+        mmean = {k: jnp.sum(v * wn) if v.ndim == 1 else v
+                 for k, v in metrics.items()}
+        new_server = ServerState(theta=theta, floats=new_floats,
+                                 weights=server.weights, seed=server.seed,
+                                 round=server.round + 1)
+        return new_server, mmean
+
+    return jax.jit(round_fn)
+
+
+def make_eval_fn(apply_fn: Callable, metric_fn: Callable,
+                 mode: str = "sample", n_samples: int = 1):
+    """Global-model evaluation: sample (or threshold) masks from theta.
+
+    metric_fn(outputs, batch) -> scalar (e.g. accuracy).
+    """
+    def eval_fn(server: ServerState, batch, key):
+        scores = masking.scores_from_theta(server.theta)
+        mp = masking.MaskedParams(server.weights, scores, server.floats)
+
+        def one(k):
+            eff = masking.sample_effective(mp, k, mode=mode)
+            return metric_fn(apply_fn(eff, batch), batch)
+
+        keys = jax.random.split(key, n_samples)
+        return jnp.mean(jax.vmap(one)(keys))
+
+    return jax.jit(eval_fn)
+
+
+def final_artifact(server: ServerState, key: jax.Array):
+    """The deployable artifact: (seed, one bitpacked mask per leaf).
+
+    Total size ~ n/8 bytes + 4 — the paper's "SEED + binary mask" claim.
+    """
+    scores = masking.scores_from_theta(server.theta)
+    mask = masking.final_mask(
+        masking.MaskedParams(server.weights, scores, server.floats), key)
+
+    packed = {}
+    for path, m in masking.leaves_with_paths(mask):
+        if m is None:
+            continue
+        flat, _ = aggregation._pad32(m.reshape(-1))
+        packed[path] = (aggregation.pack_bits(flat), m.shape)
+    return {"seed": server.seed, "masks": packed, "floats": server.floats}

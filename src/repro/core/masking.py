@@ -1,0 +1,283 @@
+"""Core mask-training primitives (the paper's technique).
+
+The paper trains *scores* ``s`` over a frozen random network ``w_init``:
+
+    theta = sigmoid(s)                 # probability mask, eq. (4) inverse
+    m ~ Bernoulli(theta)               # sampled sub-network selector
+    y(x) = f(x; m * w_init)            # eq. (1)
+
+Gradients reach ``s`` through the non-differentiable sample via a
+straight-through estimator (STE): d m / d theta := 1.
+
+Everything here is pytree-generic: a model is any pytree of parameter
+leaves; which leaves are maskable is decided by a `MaskSpec` predicate so
+norm scales / biases / routers can stay float (see DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+# ---------------------------------------------------------------------------
+# Frozen random weights (the "SEED, not weights" artifact)
+# ---------------------------------------------------------------------------
+
+
+def signed_constant_init(key: jax.Array, shape, fan_in: int, dtype=jnp.float32):
+    """Paper §IV: weights ~ Uniform{-c, +c} with c = std of Kaiming Normal.
+
+    Kaiming Normal std for fan_in is sqrt(2 / fan_in).
+    """
+    c = jnp.sqrt(jnp.asarray(2.0 / max(fan_in, 1), dtype=dtype))
+    sign = jax.random.rademacher(key, shape, dtype=dtype)
+    return sign * c
+
+
+def score_init(key: jax.Array, shape, dtype=jnp.float32, p0: float = 0.5,
+               jitter: float = 0.0):
+    """Initial scores such that sigmoid(s) ~= p0 (paper: theta ~ U[0,1]).
+
+    With jitter > 0, theta ~ U[p0-jitter, p0+jitter] via logit sampling.
+    The paper samples the *global* initial theta from U[0,1]; we default
+    to exactly that when p0=0.5, jitter=0.5.
+    """
+    if jitter > 0:
+        u = jax.random.uniform(key, shape, dtype=dtype,
+                               minval=max(p0 - jitter, 1e-4),
+                               maxval=min(p0 + jitter, 1 - 1e-4))
+        return jnp.log(u) - jnp.log1p(-u)  # logit
+    p = jnp.asarray(min(max(p0, 1e-4), 1 - 1e-4), dtype=dtype)
+    return jnp.full(shape, jnp.log(p) - jnp.log1p(-p), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# STE Bernoulli sampling
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def ste_bernoulli(theta: jax.Array, u: jax.Array) -> jax.Array:
+    """m = 1[u < theta], straight-through: dm/dtheta := 1.
+
+    ``u`` is uniform noise with theta's shape (passed in so the caller
+    controls the RNG stream; keeps this function re-traceable under scan).
+    """
+    return (u < theta).astype(theta.dtype)
+
+
+def _ste_fwd(theta, u):
+    return ste_bernoulli(theta, u), None
+
+
+def _ste_bwd(_, g):
+    return (g, None)
+
+
+ste_bernoulli.defvjp(_ste_fwd, _ste_bwd)
+
+
+@jax.custom_vjp
+def ste_threshold(theta: jax.Array, tau: float) -> jax.Array:
+    """Deterministic mask m = 1[theta > tau] with STE (FedMask-style)."""
+    return (theta > tau).astype(theta.dtype)
+
+
+def _stet_fwd(theta, tau):
+    return ste_threshold(theta, tau), None
+
+
+def _stet_bwd(_, g):
+    return (g, None)
+
+
+ste_threshold.defvjp(_stet_fwd, _stet_bwd)
+
+
+def sigmoid(s):
+    return jax.nn.sigmoid(s)
+
+
+def logit(theta, eps=1e-6):
+    theta = jnp.clip(theta, eps, 1.0 - eps)
+    return jnp.log(theta) - jnp.log1p(-theta)
+
+
+# ---------------------------------------------------------------------------
+# MaskSpec: which leaves of a model are masked
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskSpec:
+    """Decides per-leaf (by pytree path) whether the paper's technique
+    applies. Default: mask every >=2D tensor except paths matching
+    `float_patterns` (norms, biases, routers, recurrence params...).
+    """
+    float_patterns: tuple = ("norm", "bias", "scale", "router", "a_param",
+                             "dt", "A_log", "D", "embed_float")
+    mask_embeddings: bool = False
+    min_ndim: int = 2
+
+    def is_masked(self, path: str, leaf: jax.Array) -> bool:
+        lp = path.lower()
+        if any(p in lp for p in self.float_patterns):
+            return False
+        if not self.mask_embeddings and ("embed" in lp or "unembed" in lp
+                                         or "lm_head" in lp):
+            return False
+        if getattr(leaf, "ndim", 0) < self.min_ndim:
+            return False
+        return True
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def leaves_with_paths(tree: Pytree):
+    return [( _path_str(p), l) for p, l in
+            jax.tree_util.tree_flatten_with_path(tree)[0]]
+
+
+# ---------------------------------------------------------------------------
+# MaskedState: (frozen weights, scores) pytrees
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MaskedParams:
+    """Pytree wrapper for a model under mask-training.
+
+    weights: frozen random values (regenerable from `seed`).
+    scores:  trainable logits; None-shaped (0-size) where spec says float.
+    floats:  trainable float leaves (norms, biases, ...) — FedAvg'd.
+    """
+    weights: Pytree
+    scores: Pytree
+    floats: Pytree
+
+    def tree_flatten(self):
+        return (self.weights, self.scores, self.floats), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def split_params(params: Pytree, spec: MaskSpec):
+    """Split a plain param pytree into (maskable, float) by spec.
+
+    Returns boolean pytree `is_masked` mirroring params.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    treedef = flat[1]
+    decisions = [spec.is_masked(_path_str(p), l) for p, l in flat[0]]
+    return jax.tree_util.tree_unflatten(treedef, decisions)
+
+
+def init_masked(key: jax.Array, params_like: Pytree, spec: MaskSpec,
+                fan_in_fn: Callable = None, score_dtype=jnp.float32,
+                weight_dtype=jnp.bfloat16) -> MaskedParams:
+    """Build MaskedParams from a template pytree (shapes/dtypes).
+
+    For maskable leaves: weights <- signed-constant init, scores <- logit
+    of U[0,1] (paper's theta init).  Float leaves keep the template value.
+    """
+    is_masked = split_params(params_like, spec)
+    flat, treedef = jax.tree_util.tree_flatten(params_like)
+    flat_mask, _ = jax.tree_util.tree_flatten(is_masked)
+    n = len(flat)
+    keys = jax.random.split(key, 2 * n)
+
+    weights, scores, floats = [], [], []
+    for i, (leaf, masked) in enumerate(zip(flat, flat_mask)):
+        if masked:
+            fan_in = leaf.shape[0] if leaf.ndim >= 2 else leaf.size
+            if fan_in_fn is not None:
+                fan_in = fan_in_fn(leaf)
+            weights.append(signed_constant_init(keys[2 * i], leaf.shape,
+                                                fan_in, weight_dtype))
+            scores.append(score_init(keys[2 * i + 1], leaf.shape,
+                                     score_dtype, p0=0.5, jitter=0.5))
+            floats.append(None)
+        else:
+            weights.append(None)
+            scores.append(None)
+            floats.append(leaf)
+
+    mk = lambda lst: jax.tree_util.tree_unflatten(treedef, lst)
+    return MaskedParams(mk(weights), mk(scores), mk(floats))
+
+
+def sample_effective(mp: MaskedParams, key: jax.Array,
+                     mode: str = "sample", tau: float = 0.5) -> Pytree:
+    """Materialize effective params: m * w for masked leaves, floats as-is.
+
+    mode: "sample"    -> m ~ Bern(sigmoid(s)) with STE (training, paper)
+          "threshold" -> m = 1[sigmoid(s) > tau]        (eval / FedMask)
+          "expected"  -> m = sigmoid(s)                  (mean network)
+    """
+    flat_w, treedef = jax.tree_util.tree_flatten(
+        mp.weights, is_leaf=lambda x: x is None)
+    flat_s, _ = jax.tree_util.tree_flatten(
+        mp.scores, is_leaf=lambda x: x is None)
+    flat_f, _ = jax.tree_util.tree_flatten(
+        mp.floats, is_leaf=lambda x: x is None)
+
+    n_masked = sum(1 for w in flat_w if w is not None)
+    keys = jax.random.split(key, max(n_masked, 1))
+    out, ki = [], 0
+    for w, s, f in zip(flat_w, flat_s, flat_f):
+        if w is None:
+            out.append(f)
+            continue
+        theta = sigmoid(s.astype(jnp.float32))
+        if mode == "sample":
+            u = jax.random.uniform(keys[ki], s.shape, dtype=jnp.float32)
+            m = ste_bernoulli(theta, u)
+        elif mode == "threshold":
+            m = ste_threshold(theta, tau)
+        elif mode == "expected":
+            m = theta
+        else:
+            raise ValueError(mode)
+        ki += 1
+        out.append((m.astype(w.dtype) * w))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def final_mask(mp: MaskedParams, key: jax.Array) -> Pytree:
+    """Sample the per-round uplink mask m̂_i ~ Bern(θ̂_i)  (eq. before (8)).
+
+    Returns a pytree with uint8 {0,1} leaves for masked params, None else.
+    """
+    def one(s, k):
+        if s is None:
+            return None
+        u = jax.random.uniform(k, s.shape, dtype=jnp.float32)
+        return (u < sigmoid(s.astype(jnp.float32))).astype(jnp.uint8)
+
+    flat_s, treedef = jax.tree_util.tree_flatten(
+        mp.scores, is_leaf=lambda x: x is None)
+    keys = jax.random.split(key, max(len(flat_s), 1))
+    out = [one(s, k) for s, k in zip(flat_s, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def scores_from_theta(theta_tree: Pytree) -> Pytree:
+    """Client-side round start: s = logit(theta)  (eq. 4)."""
+    return jax.tree_util.tree_map(
+        lambda t: None if t is None else logit(t.astype(jnp.float32)),
+        theta_tree, is_leaf=lambda x: x is None)
+
+
+def count_params(tree: Pytree) -> int:
+    return sum(l.size for l in jax.tree_util.tree_leaves(tree)
+               if l is not None)

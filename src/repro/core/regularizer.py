@@ -1,0 +1,78 @@
+"""Entropy-proxy regularizer (the paper's contribution, eq. 10-12) and the
+empirical Bpp/entropy meter (eq. 13)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def entropy_proxy(scores: Pytree) -> jax.Array:
+    """(1/n) * sum_j sigmoid(s_j)  over every masked leaf — eq. (12)'s
+    regularization term without lambda. Minimizing it maximizes p_0,
+    driving the transmitted-mask entropy down.
+    """
+    tot, n = jnp.float32(0.0), 0
+    for s in jax.tree_util.tree_leaves(scores):
+        if s is None:
+            continue
+        tot = tot + jnp.sum(jax.nn.sigmoid(s.astype(jnp.float32)))
+        n += s.size
+    if n == 0:
+        return jnp.float32(0.0)
+    return tot / jnp.float32(n)
+
+
+def binary_entropy(p: jax.Array, eps: float = 1e-7) -> jax.Array:
+    """H(p) in bits. eps is float32-safe (1 - 1e-7 != 1 in f32)."""
+    p = jnp.clip(p.astype(jnp.float32), eps, 1.0 - eps)
+    return -(p * jnp.log2(p) + (1 - p) * jnp.log2(1 - p))
+
+
+def empirical_entropy(mask: Pytree) -> jax.Array:
+    """Ĥ of one client's transmitted binary mask — eq. (13) inner term.
+
+    This is the average achievable bits-per-parameter under an ideal
+    entropy coder, the paper's reported communication metric.
+    """
+    ones, n = jnp.float32(0.0), 0
+    for m in jax.tree_util.tree_leaves(mask):
+        if m is None:
+            continue
+        ones = ones + jnp.sum(m.astype(jnp.float32))
+        n += m.size
+    if n == 0:
+        return jnp.float32(0.0)
+    p1 = ones / jnp.float32(n)
+    return binary_entropy(p1)
+
+
+def sparsity(mask: Pytree) -> jax.Array:
+    """Fraction of zeros in the transmitted mask."""
+    ones, n = jnp.float32(0.0), 0
+    for m in jax.tree_util.tree_leaves(mask):
+        if m is None:
+            continue
+        ones = ones + jnp.sum(m.astype(jnp.float32))
+        n += m.size
+    if n == 0:
+        return jnp.float32(0.0)
+    return 1.0 - ones / jnp.float32(n)
+
+
+def theta_entropy(scores: Pytree) -> jax.Array:
+    """Expected transmitted entropy E[Ĥ] = mean_j H(sigmoid(s_j)) — a
+    differentiable upper-bound companion to eq. (13), reported in logs."""
+    tot, n = jnp.float32(0.0), 0
+    for s in jax.tree_util.tree_leaves(scores):
+        if s is None:
+            continue
+        tot = tot + jnp.sum(binary_entropy(jax.nn.sigmoid(
+            s.astype(jnp.float32))))
+        n += s.size
+    if n == 0:
+        return jnp.float32(0.0)
+    return tot / jnp.float32(n)

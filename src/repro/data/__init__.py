@@ -1,0 +1,4 @@
+from repro.data.synthetic import (  # noqa: F401
+    make_image_task, make_lm_stream, federated_batches,
+)
+from repro.data.partition import partition_iid, partition_by_class  # noqa

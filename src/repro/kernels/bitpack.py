@@ -1,0 +1,72 @@
+"""Bit-pack / unpack Pallas kernels for the 1-Bpp mask uplink.
+
+pack:   (W, 32) {0,1} -> (W,) uint32   (little-endian bit order)
+unpack: (W,) uint32   -> (W, 32) uint8
+
+TPU adaptation: GPU implementations use warp ballots; on TPU we pack by
+a vectorized shift-OR across the 32-lane minor axis. Blocks are (512,
+32): the sublane axis carries words (multiple of 8) while the 32-bit
+lanes hold the bits — Mosaic relayouts this to native tiling. The packed
+uplink then rides jax.lax.all_gather at 1/16 the bytes of a bf16 psum.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pack_kernel(m_ref, o_ref):
+    bits = m_ref[...].astype(jnp.uint32)                   # (bw, 32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, bits.shape, 1)
+    o_ref[...] = jnp.sum(bits << shifts, axis=1).astype(jnp.uint32)
+
+
+def _unpack_kernel(w_ref, o_ref):
+    words = w_ref[...].astype(jnp.uint32)                  # (bw,)
+    shifts = jax.lax.broadcasted_iota(
+        jnp.uint32, (words.shape[0], 32), 1)
+    o_ref[...] = ((words[:, None] >> shifts)
+                  & jnp.uint32(1)).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("bw", "interpret"))
+def pack_bits(mask_flat: jax.Array, *, bw: int = 512,
+              interpret: bool = False) -> jax.Array:
+    """mask_flat: (n,) with n % 32 == 0, values in {0,1}. -> (n//32,)
+    uint32."""
+    assert mask_flat.ndim == 1 and mask_flat.size % 32 == 0
+    W = mask_flat.size // 32
+    bw_ = min(bw, W)
+    while W % bw_:
+        bw_ //= 2
+    m2 = mask_flat.reshape(W, 32)
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=(W // bw_,),
+        in_specs=[pl.BlockSpec((bw_, 32), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bw_,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((W,), jnp.uint32),
+        interpret=interpret,
+    )(m2)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "bw", "interpret"))
+def unpack_bits(words: jax.Array, n: int, *, bw: int = 512,
+                interpret: bool = False) -> jax.Array:
+    """words: (W,) uint32 -> (n,) uint8 (n <= 32*W)."""
+    W = words.size
+    bw_ = min(bw, W)
+    while W % bw_:
+        bw_ //= 2
+    bits = pl.pallas_call(
+        _unpack_kernel,
+        grid=(W // bw_,),
+        in_specs=[pl.BlockSpec((bw_,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((bw_, 32), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((W, 32), jnp.uint8),
+        interpret=interpret,
+    )(words)
+    return bits.reshape(-1)[:n]

@@ -1,0 +1,78 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+`masked_dense` is the drop-in for the mask-training forward on a Dense
+layer, with the STE custom-vjp: forward uses the fused kernel (never
+materializes the masked weights); backward recomputes the mask cheaply
+(elementwise) and routes gradients to x and to the scores via STE:
+
+    dL/dx = g @ (m*w)^T
+    dL/ds = (x^T @ g) * w * sigmoid'(s)      [STE through the sample]
+
+On non-TPU backends (this CPU container) the wrappers call the kernels
+in interpret mode or fall back to ref.py — selected by `repro_backend()`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import masked_matmul as _mm
+from repro.kernels import bitpack as _bp
+from repro.kernels import ref
+
+
+def repro_backend() -> str:
+    return jax.default_backend()
+
+
+def _use_interpret() -> bool:
+    return repro_backend() != "tpu"
+
+
+def pack_bits(mask_flat: jax.Array) -> jax.Array:
+    if mask_flat.size % 32:
+        pad = 32 - mask_flat.size % 32
+        mask_flat = jnp.concatenate(
+            [mask_flat, jnp.zeros((pad,), mask_flat.dtype)])
+    return _bp.pack_bits(mask_flat, interpret=_use_interpret())
+
+
+def unpack_bits(words: jax.Array, n: int) -> jax.Array:
+    return _bp.unpack_bits(words, n, interpret=_use_interpret())
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def masked_dense(x, w, s, seed):
+    """y = x @ (bern(sigmoid(s); seed) * w), STE backward. x: (..., K)."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    M = x2.shape[0]
+    if M % 128 == 0 and w.shape[0] % 512 == 0 and w.shape[1] % 512 == 0:
+        y = _mm.masked_matmul(x2, w, s, seed, interpret=_use_interpret())
+    else:
+        y = ref.masked_matmul(x2, w, s, seed)
+    return y.reshape(shape[:-1] + (w.shape[1],))
+
+
+def _fwd(x, w, s, seed):
+    return masked_dense(x, w, s, seed), (x, w, s, seed)
+
+
+def _bwd(res, g):
+    x, w, s, seed = res
+    K, N = w.shape
+    x2 = x.reshape(-1, K)
+    g2 = g.reshape(-1, N)
+    m = ref.sample_mask(s, seed).astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    wm = (m * wf).astype(x.dtype)
+    dx = (g2 @ wm.T).reshape(x.shape).astype(x.dtype)
+    xg = (x2.astype(jnp.float32).T @ g2.astype(jnp.float32))
+    sig = jax.nn.sigmoid(s.astype(jnp.float32))
+    ds = (xg * wf * sig * (1.0 - sig)).astype(s.dtype)
+    return dx, None, ds, None
+
+
+masked_dense.defvjp(_fwd, _bwd)

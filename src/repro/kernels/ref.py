@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hash_uniform(idx: jax.Array, seed) -> jax.Array:
+    """Must match masked_matmul._hash_uniform exactly."""
+    x = idx.astype(jnp.uint32) + jnp.uint32(0x9E3779B9) * (
+        jnp.asarray(seed, jnp.uint32) + jnp.uint32(1))
+    x = (x ^ (x >> 16)) * jnp.uint32(0x85EBCA6B)
+    x = (x ^ (x >> 13)) * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return (x >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def masked_matmul(x, w, s, seed):
+    K, N = w.shape
+    idx = (jnp.arange(K, dtype=jnp.uint32)[:, None] * jnp.uint32(N)
+           + jnp.arange(N, dtype=jnp.uint32)[None, :])
+    u = hash_uniform(idx, seed)
+    theta = jax.nn.sigmoid(s.astype(jnp.float32))
+    m = (u < theta)
+    wm = jnp.where(m, w.astype(jnp.float32), 0.0)
+    return (x.astype(jnp.float32) @ wm).astype(x.dtype)
+
+
+def sample_mask(s, seed):
+    """The mask the fused kernel implicitly uses (for uplink packing)."""
+    K, N = s.shape
+    idx = (jnp.arange(K, dtype=jnp.uint32)[:, None] * jnp.uint32(N)
+           + jnp.arange(N, dtype=jnp.uint32)[None, :])
+    u = hash_uniform(idx, seed)
+    return (u < jax.nn.sigmoid(s.astype(jnp.float32))).astype(jnp.uint8)
+
+
+def pack_bits(mask_flat):
+    bits = mask_flat.astype(jnp.uint32).reshape(-1, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=1).astype(jnp.uint32)
+
+
+def unpack_bits(words, n):
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[:, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(-1)[:n].astype(jnp.uint8)

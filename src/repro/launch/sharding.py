@@ -1,0 +1,174 @@
+"""Sharding rules: pytree-path + shape -> PartitionSpec.
+
+Strategy (DESIGN.md §2):
+  * weights/scores/optimizer state: last dim -> "model" (TP), the
+    second-to-last -> "data" (FSDP-style). Leading stack axes (layer /
+    group / expert scan dims) are never sharded — except MoE expert
+    axes, which go to "model" (EP) when the feature dims are too small
+    to make TP worthwhile (deepseek-v2 experts: d_ff 1408/1536).
+  * activations/batch: batch dim -> ("pod", "data"); long-context
+    decode (batch 1) shards the KV-cache sequence dim instead (SP).
+  * norms/scalars: replicated.
+
+The rules are heuristic but DETERMINISTIC and shape-validated: a dim is
+only sharded if divisible by the mesh axis size; otherwise the next
+candidate dim is tried — so every (arch x mesh) lowers cleanly.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+
+def _axis_size(mesh, name) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def param_spec(path: str, shape, mesh, *, scan_dims: int = 1) -> P:
+    """PartitionSpec for a parameter-like leaf.
+
+    scan_dims: number of leading stacked axes (layers/groups) to skip.
+    """
+    nd = len(shape)
+    dmodel = _axis_size(mesh, "model")
+    ddata = _axis_size(mesh, "data")
+    spec = [None] * nd
+    if nd == 0:
+        return P()
+    lp = path.lower()
+    # scalars / 1D / norms / small: replicate
+    if nd <= scan_dims or all(s == 1 for s in shape):
+        return P(*spec)
+
+    body = list(range(scan_dims, nd)) if nd > scan_dims else []
+    if not body:
+        return P(*spec)
+
+    # embeddings: (V, D) with no scan dim
+    if "embed" in lp or "lm_head" in lp:
+        if shape[-2] % ddata == 0:
+            spec[-2] = "data"
+        if shape[-1] % dmodel == 0:
+            spec[-1] = "model"
+        return P(*spec)
+
+    # MoE stacked experts: (..., E, d_in, d_out) — expert axis -> model.
+    # (Tried F-on-data co-sharding for the block-dispatch einsum chain:
+    # REFUTED — bytes +18%, collective +31%; see §Perf-log. Kept d_in.)
+    if ("w_up" in lp or "w_gate" in lp or "w_down" in lp) and \
+            nd - scan_dims == 3:
+        e_ax = nd - 3
+        if shape[e_ax] % dmodel == 0:
+            spec[e_ax] = "model"
+            if shape[-2] % ddata == 0:
+                spec[-2] = "data"
+            return P(*spec)
+
+    # generic 2D body: last -> model, second-to-last -> data
+    if shape[-1] % dmodel == 0:
+        spec[-1] = "model"
+    if nd - scan_dims >= 2 and shape[-2] % ddata == 0:
+        spec[-2] = "data"
+    # 1D body (biases): shard on model if large & divisible
+    if nd - scan_dims == 1 and shape[-1] % dmodel == 0 \
+            and shape[-1] >= 4 * dmodel:
+        spec[-1] = "model"
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def tree_param_shardings(tree: Pytree, mesh, scan_dims_fn=None,
+                         tp_only: bool = False) -> Pytree:
+    """NamedSharding pytree for a parameter tree (works on
+    ShapeDtypeStruct trees too). None leaves stay None.
+
+    tp_only=True drops the FSDP ("data") dims — the inference layout:
+    weights have no optimizer state, so the HBM saved by FSDP is small
+    while its per-layer all-gathers dominate prefill (§Roofline). Used
+    by the serving path / §Perf prefill iteration."""
+    def one(path, leaf):
+        if leaf is None:
+            return None
+        p = _path_str(path)
+        sd = scan_dims_fn(p, leaf) if scan_dims_fn else _default_scan_dims(p)
+        sd = min(sd, max(len(leaf.shape) - 1, 0))
+        ps = param_spec(p, leaf.shape, mesh, scan_dims=sd)
+        if tp_only:
+            ps = P(*[None if a == "data" else a for a in ps])
+        return NamedSharding(mesh, ps)
+    return jax.tree_util.tree_map_with_path(
+        one, tree, is_leaf=lambda x: x is None)
+
+
+def _default_scan_dims(path: str) -> int:
+    lp = path.lower()
+    if "groups" in lp:          # hybrid: (n_groups, ...)
+        return 1
+    if "embed" in lp or "final_norm" in lp or "lm_head" in lp \
+            or "pos_embed" in lp:
+        return 0
+    return 1                    # stacked layers
+
+
+def batch_spec(mesh) -> P:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(axes)
+
+
+def batch_shardings(batch_tree: Pytree, mesh) -> Pytree:
+    bs = batch_spec(mesh)
+
+    def one(leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        spec = [None] * nd
+        if leaf.shape[0] % int(np.prod([mesh.shape[a] for a in bs[0]])
+                               if bs[0] else 1) == 0 and bs[0]:
+            spec[0] = bs[0]
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+def cache_shardings(cache_tree: Pytree, mesh, batch: int) -> Pytree:
+    """KV caches: (L, B, S, heads, hd) — batch -> client axes when
+    divisible, else sequence -> "data" (SP for batch-1 long context);
+    heads -> "model" when divisible, else seq -> model."""
+    client = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    csize = int(np.prod([mesh.shape[a] for a in client])) if client else 1
+    dmodel = _axis_size(mesh, "model")
+
+    def one(path, leaf):
+        p = _path_str(path).lower()
+        shape = leaf.shape
+        nd = len(shape)
+        spec = [None] * nd
+        if nd >= 2 and shape[1] % csize == 0 and csize > 1:
+            spec[1] = client
+            # heads or seq on model
+            if nd >= 4 and shape[3] % dmodel == 0:
+                spec[3] = "model"
+            elif nd >= 3 and shape[2] % dmodel == 0:
+                spec[2] = "model"
+        elif nd >= 3:
+            # batch too small: shard seq across data (+ model if needed)
+            if shape[2] % (csize * dmodel) == 0 and csize > 1:
+                spec[2] = client + ("model",)
+            elif shape[2] % dmodel == 0:
+                spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,122 @@
+"""Production training launcher.
+
+    python -m repro.launch.train --arch internlm2-1.8b --smoke \
+        --steps 100 --round-every 10 --ckpt-dir /tmp/ckpt
+
+On real hardware the same entry point runs the production mesh; on this
+container use --smoke (reduced config, 1 device). Handles:
+  * checkpoint/restart (atomic, async)
+  * round-boundary mask exchange (the paper's protocol)
+  * elastic re-entry: --cohorts may differ across restarts; theta is
+    mesh-agnostic so the run continues
+  * fedavg baseline via --algo fedavg (the 32-Bpp reference)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import masking
+from repro.models import build_model
+from repro.data import synthetic
+from repro.launch import steps as steplib
+from repro.launch import mesh as meshlib
+from repro.runtime import fault
+from repro import ckpt as ckptlib
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--algo", default="fedpm_reg",
+                    choices=["fedpm_reg", "fedpm", "fedavg"])
+    ap.add_argument("--lam", type=float, default=1.0)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--round-every", type=int, default=10)
+    ap.add_argument("--cohorts", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.3)
+    ap.add_argument("--score-opt", default="momentum",
+                    choices=["momentum", "adam"])
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--fail-prob", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    api = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    lam = args.lam if args.algo == "fedpm_reg" else 0.0
+    scfg = steplib.StepConfig(lam=lam, lr=args.lr,
+                              optimizer=args.score_opt)
+
+    if args.algo == "fedavg":
+        state = steplib.init_fedavg_state(key, api)
+        step_fn = jax.jit(steplib.make_fedavg_step(api, scfg))
+        round_fn = None
+    else:
+        state = steplib.init_fed_state(key, api, masking.MaskSpec(),
+                                       C=args.cohorts,
+                                       optimizer=args.score_opt)
+        step_fn = jax.jit(steplib.make_train_step(api, scfg))
+        round_fn = jax.jit(steplib.make_round_step(api, scfg))
+
+    start = 0
+    saver = None
+    if args.ckpt_dir:
+        saver = ckptlib.AsyncCheckpointer(args.ckpt_dir, keep=2)
+        if ckptlib.latest_step(args.ckpt_dir) is not None:
+            try:
+                state, start = ckptlib.restore_checkpoint(args.ckpt_dir,
+                                                          state)
+                print(f"resumed at step {start}")
+            except KeyError:
+                print("checkpoint incompatible (elastic resize); "
+                      "restarting from theta is not available in this "
+                      "demo path — fresh start")
+
+    toks = synthetic.make_lm_stream(key, 500_000, cfg.vocab)
+    sim = (fault.FaultSimulator(args.cohorts, fail_prob=args.fail_prob)
+           if args.fail_prob > 0 else None)
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        kd = jax.random.fold_in(key, step)
+        if args.algo == "fedavg":
+            idx = jax.random.randint(kd, (args.batch,), 0,
+                                     toks.shape[0] - args.seq - 1)
+            batch = {"tokens": jax.vmap(
+                lambda i: jax.lax.dynamic_slice(
+                    toks, (i,), (args.seq,)))(idx)}
+        else:
+            idx = jax.random.randint(kd, (args.cohorts, args.batch), 0,
+                                     toks.shape[0] - args.seq - 1)
+            batch = {"tokens": jax.vmap(jax.vmap(
+                lambda i: jax.lax.dynamic_slice(
+                    toks, (i,), (args.seq,))))(idx)}
+        state, m = step_fn(state, batch)
+        if round_fn is not None and (step + 1) % args.round_every == 0:
+            alive = sim.sample_round() if sim is not None else None
+            state, rm = round_fn(state)
+            msg = (f"step {step+1}: loss={float(m['loss']):.3f} "
+                   f"uplink={float(rm['bpp']):.3f}Bpp")
+            if alive is not None:
+                msg += f" alive={alive.sum()}/{args.cohorts}"
+            print(msg + f" ({time.time()-t0:.0f}s)", flush=True)
+            if saver:
+                saver.save(step + 1, state)
+        elif (step + 1) % 10 == 0:
+            print(f"step {step+1}: loss={float(m['loss']):.3f}",
+                  flush=True)
+    if saver:
+        saver.close()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Model zoo dispatcher: family -> (init, forward, loss, cache, decode)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer, ssm, hybrid, encdec, cnn  # noqa: F401
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ArchConfig
+    init_params: Callable
+    forward: Callable            # (params, batch, chunk_kv=None) -> (logits, aux)
+    loss: Callable               # (outputs, batch) -> scalar
+    init_cache: Optional[Callable]
+    decode_step: Callable        # (params, cache, token, pos) -> (logits, cache)
+
+
+def build_model(cfg: ArchConfig) -> ModelApi:
+    if cfg.family in ("dense", "moe", "vlm"):
+        mod = transformer
+
+        def fwd(params, batch, chunk_kv=None):
+            return mod.forward(params, cfg, batch["tokens"],
+                               vis_embeds=batch.get("vis_embeds"),
+                               chunk_kv=chunk_kv)
+
+        windowed = (cfg.window_kv_cache and cfg.sliding_window
+                    and cfg.global_every > 0)
+
+        def dec(params, cache, token, pos):
+            if windowed:
+                return mod.decode_step_windowed(params, cfg, cache,
+                                                token, pos)
+            return mod.decode_step(params, cfg, cache, token, pos)
+
+        def mk_cache(b, s):
+            if windowed:
+                return mod.init_cache_windowed(cfg, b, s)
+            return mod.init_cache(cfg, b, s)
+
+        return ModelApi(cfg, lambda k: mod.init_params(k, cfg), fwd,
+                        transformer.lm_loss, mk_cache, dec)
+
+    if cfg.family == "ssm":
+        def fwd(params, batch, chunk_kv=None):
+            return ssm.forward(params, cfg, batch["tokens"],
+                               chunk_kv=chunk_kv)
+
+        def dec(params, cache, token, pos):
+            return ssm.decode_step(params, cfg, cache, token, pos)
+
+        return ModelApi(cfg, lambda k: ssm.init_params(k, cfg), fwd,
+                        transformer.lm_loss,
+                        lambda b, s: ssm.init_cache(cfg, b, s), dec)
+
+    if cfg.family == "hybrid":
+        def fwd(params, batch, chunk_kv=None):
+            return hybrid.forward(params, cfg, batch["tokens"],
+                                  chunk_kv=chunk_kv)
+
+        def dec(params, cache, token, pos):
+            return hybrid.decode_step(params, cfg, cache, token, pos)
+
+        return ModelApi(cfg, lambda k: hybrid.init_params(k, cfg), fwd,
+                        transformer.lm_loss,
+                        lambda b, s: hybrid.init_cache(cfg, b, s), dec)
+
+    if cfg.family == "encdec":
+        def fwd(params, batch, chunk_kv=None):
+            return encdec.forward(params, cfg, batch["tokens"],
+                                  frames=batch.get("frames"),
+                                  chunk_kv=chunk_kv)
+
+        def dec(params, cache, token, pos):
+            return encdec.decode_step(params, cfg, cache, token, pos)
+
+        return ModelApi(cfg, lambda k: encdec.init_params(k, cfg), fwd,
+                        transformer.lm_loss,
+                        lambda b, s: encdec.init_cache(cfg, b, s), dec)
+
+    raise ValueError(f"unknown family {cfg.family}")

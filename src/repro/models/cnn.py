@@ -1,0 +1,87 @@
+"""The paper's own experiment models: Conv4 / Conv6 / Conv10 feed-forward
+CNNs (as in Zhou et al. [9] / Ramanujan et al. [4]), for MNIST/CIFAR-
+style (B, H, W, C) inputs. These are the faithful-reproduction models;
+every conv and dense kernel is maskable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvConfig:
+    name: str
+    conv_planes: Tuple[int, ...]   # channels per conv layer; pool after each pair
+    dense_sizes: Tuple[int, ...]
+    n_classes: int = 10
+    in_channels: int = 3
+    img_size: int = 32
+
+
+CONV4 = ConvConfig("conv4", (64, 64, 128, 128), (256, 256))
+CONV6 = ConvConfig("conv6", (64, 64, 128, 128, 256, 256), (256, 256))
+CONV10 = ConvConfig("conv10",
+                    (64, 64, 128, 128, 256, 256, 512, 512, 512, 512),
+                    (256, 256))
+
+
+def init_params(key, cfg: ConvConfig) -> Pytree:
+    params = {"convs": [], "denses": []}
+    ks = jax.random.split(key, len(cfg.conv_planes) + len(cfg.dense_sizes)
+                          + 1)
+    cin = cfg.in_channels
+    for i, cout in enumerate(cfg.conv_planes):
+        fan_in = 3 * 3 * cin
+        params["convs"].append({
+            "w_conv": L.dense_init(ks[i], (3, 3, cin, cout),
+                                   fan_in=fan_in),
+            "bias": jnp.zeros((cout,), jnp.float32)})
+        cin = cout
+    side = cfg.img_size // (2 ** (len(cfg.conv_planes) // 2))
+    din = side * side * cin
+    for j, dout in enumerate(cfg.dense_sizes + (cfg.n_classes,)):
+        k = ks[len(cfg.conv_planes) + j]
+        params["denses"].append({
+            "w_dense": L.dense_init(k, (din, dout), fan_in=din),
+            "bias": jnp.zeros((dout,), jnp.float32)})
+        din = dout
+    return params
+
+
+def forward(params, cfg: ConvConfig, images):
+    """images: (B, H, W, C) -> logits (B, n_classes)."""
+    x = images.astype(jnp.float32)
+    for i, cp in enumerate(params["convs"]):
+        x = jax.lax.conv_general_dilated(
+            x, cp["w_conv"].astype(jnp.float32), (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x + cp["bias"])
+        if i % 2 == 1:
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                "VALID")
+    x = x.reshape(x.shape[0], -1)
+    for j, dp in enumerate(params["denses"]):
+        x = x @ dp["w_dense"].astype(jnp.float32) + dp["bias"]
+        if j < len(params["denses"]) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def ce_loss(logits, batch):
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(lp, batch["labels"][:, None], axis=-1)
+    return jnp.mean(nll)
+
+
+def accuracy(logits, batch):
+    return jnp.mean((jnp.argmax(logits, -1) == batch["labels"])
+                    .astype(jnp.float32))

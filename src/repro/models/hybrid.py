@@ -1,0 +1,316 @@
+"""RecurrentGemma (Griffin, arXiv:2402.19427): RG-LRU recurrent blocks
+interleaved with local (sliding-window, MQA) attention at a 2:1 ratio.
+
+Layout: the layer list is grouped as repeats of cfg.block_pattern
+("rec","rec","attn"); full groups ride one lax.scan, the remainder rides
+a second rec-only scan. The RG-LRU temporal mix uses an associative scan
+(log-depth on TPU) for training and an O(1)-state recurrence for decode
+— this is the long_500k path.
+
+Float (non-masked) params: recurrence decay `a_param` (Lambda), conv
+bias, gate biases, norms — masking a decay destroys stability
+(DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+Pytree = Any
+
+_C = 8.0  # RG-LRU decay sharpness constant (Griffin paper)
+
+
+def _lru_width(cfg):
+    return cfg.lru_width or cfg.d_model
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _rec_block_init(key, cfg: ArchConfig):
+    d, w = cfg.d_model, _lru_width(cfg)
+    ks = jax.random.split(key, 6)
+    # Lambda init so a^c in [0.9, 0.999] (Griffin)
+    u = jax.random.uniform(ks[5], (w,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    a_param = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1
+    return {
+        "norm": L.rms_norm_init(d),
+        "w_x": L.dense_init(ks[0], (d, w)),
+        "w_y": L.dense_init(ks[1], (d, w)),
+        "conv": L.conv1d_init(ks[2], cfg.conv_width, w),
+        "w_rg": L.dense_init(ks[3], (w, w)),   # recurrence gate
+        "w_ri": L.dense_init(ks[4], (w, w)),   # input gate
+        "bias_rg": jnp.zeros((w,), jnp.float32),
+        "bias_ri": jnp.zeros((w,), jnp.float32),
+        "a_param": a_param,
+        "w_out": L.dense_init(key, (w, d), fan_in=w),
+        "mlp_norm": L.rms_norm_init(d),
+        "mlp": L.mlp_init(key, d, cfg.d_ff, act=cfg.act),
+    }
+
+
+def _attn_block_init(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "norm": L.rms_norm_init(cfg.d_model),
+        "attn": L.gqa_init(ks[0], cfg.d_model, cfg.n_heads,
+                           cfg.n_kv_heads, cfg.hd),
+        "mlp_norm": L.rms_norm_init(cfg.d_model),
+        "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, act=cfg.act),
+    }
+
+
+def _group_counts(cfg: ArchConfig):
+    plen = len(cfg.block_pattern)
+    n_groups = cfg.n_layers // plen
+    n_tail = cfg.n_layers - n_groups * plen  # leading-pattern remainder
+    return n_groups, n_tail
+
+
+def init_params(key, cfg: ArchConfig) -> Pytree:
+    ks = jax.random.split(key, 4)
+    n_groups, n_tail = _group_counts(cfg)
+
+    def group_init(k):
+        gks = jax.random.split(k, len(cfg.block_pattern))
+        return {f"b{i}_{kind}": (_rec_block_init(gk, cfg) if kind == "rec"
+                                 else _attn_block_init(gk, cfg))
+                for i, (kind, gk) in enumerate(zip(cfg.block_pattern, gks))}
+
+    params = {
+        "embed": {"table": L.embed_init(ks[0], (cfg.vocab, cfg.d_model))},
+        "groups": jax.vmap(group_init)(jax.random.split(ks[1], n_groups)),
+        "final_norm": L.rms_norm_init(cfg.d_model),
+    }
+    if n_tail:
+        tails = []
+        tk = jax.random.split(ks[2], n_tail)
+        for i in range(n_tail):
+            kind = cfg.block_pattern[i]
+            tails.append(_rec_block_init(tk[i], cfg) if kind == "rec"
+                         else _attn_block_init(tk[i], cfg))
+        params["tail"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *tails) if all(
+                cfg.block_pattern[i] == cfg.block_pattern[0]
+                for i in range(n_tail)) else tails
+    return params
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+
+def rg_lru_scan(u, r, i, a_param):
+    """h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * u_t), associative scan.
+
+    u, r, i: (B, S, W) float32. Returns h (B, S, W) and final h.
+    """
+    log_a = -_C * jax.nn.softplus(a_param) * r          # (B,S,W) <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * u)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    A, Bv = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return Bv, Bv[:, -1]
+
+
+def _rec_mix(cfg, lp, x):
+    """RG-LRU mixer on (B, S, D) -> (B, S, D)."""
+    w = _lru_width(cfg)
+    gate = jax.nn.gelu((x @ lp["w_y"]).astype(jnp.float32))
+    u = x @ lp["w_x"]
+    u = L.conv1d_causal(lp["conv"], u).astype(jnp.float32)
+    r = jax.nn.sigmoid((u @ lp["w_rg"].astype(jnp.float32)) + lp["bias_rg"])
+    i = jax.nn.sigmoid((u @ lp["w_ri"].astype(jnp.float32)) + lp["bias_ri"])
+    h, _ = rg_lru_scan(u, r, i, lp["a_param"])
+    return ((h * gate).astype(x.dtype)) @ lp["w_out"]
+
+
+def _rec_step(cfg, lp, x_t, h_prev, conv_buf):
+    """One decode step. x_t: (B, D); h_prev: (B, W)."""
+    gate = jax.nn.gelu((x_t @ lp["w_y"]).astype(jnp.float32))
+    u = x_t @ lp["w_x"]
+    conv_buf, u = L.conv1d_step(lp["conv"], conv_buf, u)
+    u = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(u @ lp["w_rg"].astype(jnp.float32) + lp["bias_rg"])
+    i = jax.nn.sigmoid(u @ lp["w_ri"].astype(jnp.float32) + lp["bias_ri"])
+    log_a = -_C * jax.nn.softplus(lp["a_param"]) * r
+    a = jnp.exp(log_a)
+    h = a * h_prev + jnp.sqrt(jnp.maximum(1 - jnp.exp(2 * log_a), 1e-12)) \
+        * (i * u)
+    return ((h * gate).astype(x_t.dtype)) @ lp["w_out"], h, conv_buf
+
+
+def _block_fwd(cfg, kind, lp, x, positions, chunk_kv):
+    h = L.rms_norm(lp["norm"], x)
+    if kind == "rec":
+        x = x + _rec_mix(cfg, lp, h)
+    else:
+        out, _ = L.gqa_apply(lp["attn"], h, positions, cfg.n_heads,
+                             cfg.n_kv_heads, cfg.hd,
+                             window=cfg.sliding_window, causal=True,
+                             rope_theta=cfg.rope_theta, chunk_kv=chunk_kv)
+        x = x + out
+    h = L.rms_norm(lp["mlp_norm"], x)
+    return x + L.mlp_apply(lp["mlp"], h, cfg.act)
+
+
+def forward(params, cfg: ArchConfig, tokens, chunk_kv=None, **_):
+    x = L.embed_lookup(params["embed"]["table"], tokens)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    positions = jnp.arange(tokens.shape[1])
+
+    def group_body(x, gp):
+        def blk(x, gp):
+            for i, kind in enumerate(cfg.block_pattern):
+                x = _block_fwd(cfg, kind, gp[f"b{i}_{kind}"], x,
+                               positions, chunk_kv)
+            return x
+        if cfg.remat:
+            blk = jax.checkpoint(
+                blk, policy=jax.checkpoint_policies.nothing_saveable)
+        return blk(x, gp), None
+
+    x, _ = jax.lax.scan(group_body, x, params["groups"],
+                        unroll=cfg.scan_unroll)
+
+    if "tail" in params:
+        def tail_body(x, lp):
+            return _block_fwd(cfg, cfg.block_pattern[0], lp, x,
+                              positions, chunk_kv), None
+        x, _ = jax.lax.scan(tail_body, x, params["tail"])
+
+    x = L.rms_norm(params["final_norm"], x)
+    return L.unembed(params["embed"]["table"], x), jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# Decode: O(1) recurrent state + ring-buffer local-attention cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Pytree:
+    n_groups, n_tail = _group_counts(cfg)
+    w = _lru_width(cfg)
+    W = min(cfg.sliding_window or max_seq, max_seq)
+    n_rec_per_group = cfg.block_pattern.count("rec")
+    n_attn_per_group = len(cfg.block_pattern) - n_rec_per_group
+    cache = {
+        "h": jnp.zeros((n_groups, n_rec_per_group, batch, w), jnp.float32),
+        "conv": jnp.zeros((n_groups, n_rec_per_group, batch,
+                           cfg.conv_width - 1, w), dtype),
+        # ring buffer for local attention: only `window` keys retained
+        "k": jnp.zeros((n_groups, n_attn_per_group, batch, W,
+                        cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((n_groups, n_attn_per_group, batch, W,
+                        cfg.n_kv_heads, cfg.hd), dtype),
+        "k_pos": jnp.full((n_groups, n_attn_per_group, W), -NEG_POS,
+                          jnp.int32),
+    }
+    if n_tail:
+        cache["tail_h"] = jnp.zeros((n_tail, batch, w), jnp.float32)
+        cache["tail_conv"] = jnp.zeros((n_tail, batch, cfg.conv_width - 1,
+                                        w), dtype)
+    return cache
+
+
+NEG_POS = 1 << 30
+
+
+def _attn_step_ring(cfg, lp, x_t, kc, vc, kpos, pos):
+    """Decode attention with a ring-buffer window cache.
+
+    x_t: (B, D); kc/vc: (B, W, Kv, Hd); kpos: (W,) positions stored.
+    """
+    B = x_t.shape[0]
+    W = kc.shape[1]
+    h = x_t[:, None]  # (B,1,D)
+    slot = pos % W
+    k_new = (h @ lp["attn"]["w_k"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+    v_new = (h @ lp["attn"]["w_v"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+    k_new = L.apply_rope(k_new, pos[None], cfg.rope_theta)
+    kc = jax.lax.dynamic_update_slice(kc, k_new.astype(kc.dtype),
+                                      (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v_new.astype(vc.dtype),
+                                      (0, slot, 0, 0))
+    kpos = jax.lax.dynamic_update_slice(kpos, pos[None], (slot,))
+    out, _ = L.gqa_apply(lp["attn"], h, pos[None], cfg.n_heads,
+                         cfg.n_kv_heads, cfg.hd,
+                         window=cfg.sliding_window, causal=True,
+                         rope_theta=cfg.rope_theta,
+                         kv_override=(kc, vc), k_positions=kpos)
+    return out[:, 0], kc, vc, kpos
+
+
+def decode_step(params, cfg: ArchConfig, cache, token, pos):
+    x = L.embed_lookup(params["embed"]["table"], token)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    rec_ids = [i for i, k in enumerate(cfg.block_pattern) if k == "rec"]
+    attn_ids = [i for i, k in enumerate(cfg.block_pattern) if k == "attn"]
+
+    def group_body(x, xs):
+        gp, h_st, conv_st, kc, vc, kpos = xs
+        new_h, new_conv, new_k, new_v, new_kp = [], [], [], [], []
+        ri = ai = 0
+        for i, kind in enumerate(cfg.block_pattern):
+            lp = gp[f"b{i}_{kind}"]
+            hin = L.rms_norm(lp["norm"], x[:, None])[:, 0]
+            if kind == "rec":
+                out, hh, cb = _rec_step(cfg, lp, hin, h_st[ri],
+                                        conv_st[ri])
+                new_h.append(hh)
+                new_conv.append(cb)
+                ri += 1
+            else:
+                out, k2, v2, kp2 = _attn_step_ring(cfg, lp, hin, kc[ai],
+                                                   vc[ai], kpos[ai], pos)
+                new_k.append(k2)
+                new_v.append(v2)
+                new_kp.append(kp2)
+                ai += 1
+            x = x + out
+            hmlp = L.rms_norm(lp["mlp_norm"], x[:, None])[:, 0]
+            x = x + L.mlp_apply(lp["mlp"], hmlp, cfg.act)
+        st = (jnp.stack(new_h), jnp.stack(new_conv), jnp.stack(new_k),
+              jnp.stack(new_v), jnp.stack(new_kp))
+        return x, st
+
+    x, (hs, convs, ks, vs, kps) = jax.lax.scan(
+        group_body, x,
+        (params["groups"], cache["h"], cache["conv"], cache["k"],
+         cache["v"], cache["k_pos"]), unroll=cfg.scan_unroll)
+    new_cache = dict(cache, h=hs, conv=convs, k=ks, v=vs, k_pos=kps)
+
+    if "tail" in params:
+        def tail_body(x, xs):
+            lp, h_st, conv_st = xs
+            hin = L.rms_norm(lp["norm"], x[:, None])[:, 0]
+            out, hh, cb = _rec_step(cfg, lp, hin, h_st, conv_st)
+            x = x + out
+            hmlp = L.rms_norm(lp["mlp_norm"], x[:, None])[:, 0]
+            return x + L.mlp_apply(lp["mlp"], hmlp, cfg.act), (hh, cb)
+
+        x, (th, tc) = jax.lax.scan(
+            tail_body, x, (params["tail"], cache["tail_h"],
+                           cache["tail_conv"]))
+        new_cache["tail_h"], new_cache["tail_conv"] = th, tc
+
+    x = L.rms_norm(params["final_norm"], x[:, None])[:, 0]
+    logits = L.unembed(params["embed"]["table"], x)
+    return logits, new_cache

@@ -1,0 +1,228 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Chunked SSD algorithm for training (quadratic-within-chunk, linear across
+chunks) and the recurrent form for decode. Attention-free: long_500k is
+the showcase shape (constant-memory state).
+
+Parameter naming: maskable tensors are w_*; the dynamical-system params
+(A_log, dt bias, D) stay float — Bernoulli-masking a decay rate destroys
+stability (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+Pytree = Any
+
+
+def _dims(cfg: ArchConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_headdim
+    return d_in, n_heads
+
+
+def _layer_init(key, cfg: ArchConfig):
+    d, N, G = cfg.d_model, cfg.ssm_state, cfg.ssm_ngroups
+    d_in, nh = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    conv_ch = d_in + 2 * G * N
+    return {
+        "norm": L.rms_norm_init(d),
+        # fused input projection: [z, x, B, C, dt]
+        "w_in": L.dense_init(ks[0], (d, 2 * d_in + 2 * G * N + nh)),
+        "conv": L.conv1d_init(ks[1], cfg.conv_width, conv_ch),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "gate_norm_scale": jnp.ones((d_in,), jnp.float32),
+        "w_out": L.dense_init(ks[2], (d_in, d), fan_in=d_in),
+    }
+
+
+def init_params(key, cfg: ArchConfig) -> Pytree:
+    ks = jax.random.split(key, 3)
+    lk = jax.random.split(ks[0], cfg.n_layers)
+    return {
+        "embed": {"table": L.embed_init(ks[1], (cfg.vocab, cfg.d_model))},
+        "layers": jax.vmap(lambda k: _layer_init(k, cfg))(lk),
+        "final_norm": L.rms_norm_init(cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan (training)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int = 256):
+    """SSD: y_t = C_t^T sum_{s<=t} (prod_{r=s+1..t} exp(A dt_r)) dt_s B_s x_s
+
+    x: (B, S, H, P); dt: (B, S, H); A: (H,) (negative);
+    Bm, Cm: (B, S, G, N). Heads map to groups by H // G repetition.
+    Returns y: (B, S, H, P), final_state: (B, H, P, N).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    nc = S // chunk
+    xc = x.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.reshape(Bsz, nc, chunk, G, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, G, N)
+
+    dA = dtc * A  # (B, nc, c, H)  negative
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    # intra-chunk (quadratic within chunk)
+    # L[b,n,h,i,j] = exp(dA_cs_i - dA_cs_j) for i >= j
+    diff = dA_cs[..., :, None, :] - dA_cs[..., None, :, :]  # (B,nc,c,c,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :,
+                                                    None]
+    # zero OFF-mask diffs BEFORE exp: exp(+big)*0 -> NaN in the vjp
+    diff = jnp.where(mask, diff, 0.0)
+    Ldec = jnp.where(mask, jnp.exp(diff), 0.0)
+    # scores: C_i . B_j  (group-shared)
+    CB = jnp.einsum("bucgs,bukgs->buckg", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))  # (B,nc,c,c,G)
+    CB = jnp.repeat(CB, rep, axis=-1)  # (B,nc,c,c,H)
+    W = CB * Ldec
+    xdt = xc.astype(jnp.float32) * dtc[..., None]
+    y_intra = jnp.einsum("buckh,bukhp->buchp", W, xdt)
+
+    # chunk-final states: state_n = sum_j exp(dA_cs_last - dA_cs_j) dt_j B_j x_j
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # (B,nc,c,H)
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (B,nc,c,H,N)
+    states = jnp.einsum("buch,buchs,buchp->buhps",
+                        decay_to_end, Bh.astype(jnp.float32), xdt)
+
+    # inter-chunk recurrence over nc (sequential, cheap)
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))  # (B, nc, H)
+
+    def body(carry, xs):
+        st_prev = carry                      # (B, H, P, N)
+        st_new, dec = xs                     # (B,H,P,N), (B,H)
+        st = st_prev * dec[..., None, None] + st_new
+        return st, st_prev
+
+    st0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    final_state, init_states = jax.lax.scan(
+        body, st0, (jnp.moveaxis(states, 1, 0),
+                    jnp.moveaxis(chunk_decay, 1, 0)))
+    init_states = jnp.moveaxis(init_states, 0, 1)  # (B,nc,H,P,N)
+
+    # contribution of carried-in state: y += C_i exp(dA_cs_i) state_in
+    Ch = jnp.repeat(Cc, rep, axis=3)  # (B,nc,c,H,N)
+    y_inter = jnp.einsum("buchs,buch,buhps->buchp",
+                         Ch.astype(jnp.float32), jnp.exp(dA_cs),
+                         init_states)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y, final_state
+
+
+def _mix(cfg: ArchConfig, lp, x, chunk=256):
+    """One mamba2 mixer on (B, S, D)."""
+    d_in, nh = _dims(cfg)
+    G, N, P = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_headdim
+    B_, S, D = x.shape
+    zxbcdt = x @ lp["w_in"]
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + G * N, 2 * d_in + 2 * G * N],
+        axis=-1)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_out = jax.nn.silu(L.conv1d_causal(lp["conv"], conv_in))
+    xs = conv_out[..., :d_in].reshape(B_, S, nh, P)
+    Bm = conv_out[..., d_in:d_in + G * N].reshape(B_, S, G, N)
+    Cm = conv_out[..., d_in + G * N:].reshape(B_, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    A = -jnp.exp(lp["A_log"])
+    y, _ = ssd_chunked(xs, dt, A, Bm, Cm, chunk=min(chunk, S))
+    y = y + xs.astype(jnp.float32) * lp["D"][..., None]
+    y = y.reshape(B_, S, d_in)
+    y = L.rms_norm({"scale": lp["gate_norm_scale"]},
+                   y.astype(x.dtype) * jax.nn.silu(z))
+    return y @ lp["w_out"]
+
+
+def forward(params, cfg: ArchConfig, tokens, chunk_kv=None, **_):
+    x = L.embed_lookup(params["embed"]["table"], tokens)
+
+    def body(x, lp):
+        def blk(x, lp):
+            h = L.rms_norm(lp["norm"], x)
+            return x + _mix(cfg, lp, h)
+        if cfg.remat:
+            blk = jax.checkpoint(
+                blk, policy=jax.checkpoint_policies.nothing_saveable)
+        return blk(x, lp), None
+
+    x, _ = jax.lax.scan(body, x, params["layers"],
+                        unroll=cfg.scan_unroll)
+    x = L.rms_norm(params["final_norm"], x)
+    logits = L.unembed(params["embed"]["table"], x)
+    return logits, jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# Recurrent decode (constant memory — the long_500k path)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Pytree:
+    d_in, nh = _dims(cfg)
+    G, N, P = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_headdim
+    conv_ch = d_in + 2 * G * N
+    return {
+        "ssm_state": jnp.zeros((cfg.n_layers, batch, nh, P, N),
+                               jnp.float32),
+        "conv_buf": jnp.zeros((cfg.n_layers, batch, cfg.conv_width - 1,
+                               conv_ch), dtype),
+    }
+
+
+def decode_step(params, cfg: ArchConfig, cache, token, pos):
+    d_in, nh = _dims(cfg)
+    G, N, P = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_headdim
+    B_ = token.shape[0]
+    x = L.embed_lookup(params["embed"]["table"], token)  # (B, D)
+
+    def body(x, xs):
+        lp, st, buf = xs
+        h = L.rms_norm(lp["norm"], x[:, None])[:, 0]
+        zxbcdt = h @ lp["w_in"]
+        z, xin, Bm, Cm, dt = jnp.split(
+            zxbcdt, [d_in, 2 * d_in, 2 * d_in + G * N,
+                     2 * d_in + 2 * G * N], axis=-1)
+        conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+        buf, conv_out = L.conv1d_step(lp["conv"], buf, conv_in)
+        conv_out = jax.nn.silu(conv_out)
+        xin = conv_out[..., :d_in].reshape(B_, nh, P)
+        Bm = conv_out[..., d_in:d_in + G * N].reshape(B_, G, N)
+        Cm = conv_out[..., d_in + G * N:].reshape(B_, G, N)
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+        A = -jnp.exp(lp["A_log"])
+        dA = jnp.exp(dt * A)  # (B, nh)
+        rep = nh // G
+        Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)  # (B,nh,N)
+        Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+        st = st * dA[..., None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dt, Bh, xin.astype(jnp.float32))
+        y = jnp.einsum("bhpn,bhn->bhp", st, Ch)
+        y = y + xin.astype(jnp.float32) * lp["D"][..., None]
+        y = y.reshape(B_, d_in)
+        y = L.rms_norm({"scale": lp["gate_norm_scale"]},
+                       y.astype(x.dtype) * jax.nn.silu(z))
+        return x + y @ lp["w_out"], (st, buf)
+
+    x, (sts, bufs) = jax.lax.scan(
+        body, x, (params["layers"], cache["ssm_state"], cache["conv_buf"]),
+        unroll=cfg.scan_unroll)
+    x = L.rms_norm(params["final_norm"], x[:, None])[:, 0]
+    logits = L.unembed(params["embed"]["table"], x)
+    return logits, {"ssm_state": sts, "conv_buf": bufs}

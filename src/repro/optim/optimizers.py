@@ -1,0 +1,169 @@
+"""Minimal optax-style optimizer library (optax is not available offline).
+
+An Optimizer is a pair of pure functions:
+    init(params)           -> state
+    update(grads, state, params) -> (updates, state)
+Apply with `apply_updates`. All transforms are pytree-generic and
+None-leaf tolerant (masked trees carry None for non-applicable leaves).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def _map(f, *trees):
+    return jax.tree_util.tree_map(
+        lambda *xs: None if xs[0] is None else f(*xs), *trees,
+        is_leaf=lambda x: x is None)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Pytree], Pytree]
+    update: Callable[..., tuple]
+
+
+def apply_updates(params: Pytree, updates: Pytree) -> Pytree:
+    return _map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+# ---------------------------------------------------------------------------
+
+
+def sgd(lr: float) -> Optimizer:
+    return Optimizer(
+        init=lambda p: (),
+        update=lambda g, s, p=None: (_map(lambda x: -lr * x, g), s))
+
+
+def momentum(lr: float, beta: float = 0.9, nesterov: bool = False
+             ) -> Optimizer:
+    def init(p):
+        return _map(jnp.zeros_like, p)
+
+    def update(g, m, p=None):
+        m = _map(lambda mi, gi: beta * mi + gi, m, g)
+        if nesterov:
+            upd = _map(lambda mi, gi: -lr * (beta * mi + gi), m, g)
+        else:
+            upd = _map(lambda mi: -lr * mi, m)
+        return upd, m
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    count: jax.Array
+    mu: Pytree
+    nu: Pytree
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         ) -> Optimizer:
+    def init(p):
+        return AdamState(jnp.zeros((), jnp.int32),
+                         _map(lambda x: jnp.zeros_like(x, jnp.float32), p),
+                         _map(lambda x: jnp.zeros_like(x, jnp.float32), p))
+
+    def update(g, st, p=None):
+        c = st.count + 1
+        mu = _map(lambda m, gi: b1 * m + (1 - b1) * gi.astype(jnp.float32),
+                  st.mu, g)
+        nu = _map(lambda v, gi: b2 * v + (1 - b2)
+                  * jnp.square(gi.astype(jnp.float32)), st.nu, g)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+        upd = _map(lambda m, v: -lr * (m / bc1)
+                   / (jnp.sqrt(v / bc2) + eps), mu, nu)
+        return upd, AdamState(c, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    base = adam(lr, b1, b2, eps)
+
+    def update(g, st, p):
+        upd, st = base.update(g, st, p)
+        upd = _map(lambda u, pi: u - lr * weight_decay
+                   * pi.astype(jnp.float32), upd, p)
+        return upd, st
+
+    return Optimizer(base.init, update)
+
+
+# ---------------------------------------------------------------------------
+# Gradient transforms / schedules
+# ---------------------------------------------------------------------------
+
+
+def clip_by_global_norm(max_norm: float) -> Optimizer:
+    def update(g, s, p=None):
+        sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                 for x in jax.tree_util.tree_leaves(g) if x is not None)
+        norm = jnp.sqrt(sq)
+        scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+        return _map(lambda x: x * scale, g), s
+
+    return Optimizer(lambda p: (), update)
+
+
+def chain(*opts: Optimizer) -> Optimizer:
+    def init(p):
+        return tuple(o.init(p) for o in opts)
+
+    def update(g, states, p=None):
+        new_states = []
+        for o, s in zip(opts, states):
+            g, s = o.update(g, s, p)
+            new_states.append(s)
+        return g, tuple(new_states)
+
+    return Optimizer(init, update)
+
+
+def cosine_schedule(base_lr: float, total_steps: int, min_frac: float = 0.1):
+    def fn(step):
+        t = jnp.minimum(step.astype(jnp.float32), total_steps) / total_steps
+        return base_lr * (min_frac + (1 - min_frac)
+                          * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return fn
+
+
+def warmup_cosine(base_lr: float, warmup: int, total_steps: int,
+                  min_frac: float = 0.05):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup, 1), min_frac)
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        return jnp.where(s < warmup, base_lr * (s + 1) / warmup,
+                         cos(s - warmup))
+    return fn
+
+
+def scale_by_schedule(opt_fn: Callable[[float], Optimizer],
+                      schedule: Callable) -> Optimizer:
+    """Wrap an lr->Optimizer factory with a schedule on a step counter."""
+    unit = opt_fn(1.0)
+
+    class SchedState(NamedTuple):
+        count: jax.Array
+        inner: Any
+
+    def init(p):
+        return SchedState(jnp.zeros((), jnp.int32), unit.init(p))
+
+    def update(g, st, p=None):
+        upd, inner = unit.update(g, st.inner, p)
+        lr = schedule(st.count)
+        upd = _map(lambda u: u * lr, upd)
+        return upd, SchedState(st.count + 1, inner)
+
+    return Optimizer(init, update)

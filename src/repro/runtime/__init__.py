@@ -1,0 +1,4 @@
+from repro.runtime.fault import (  # noqa: F401
+    FaultSimulator, StragglerPolicy, participation_vector,
+)
+from repro.runtime.elastic import reshard_server, cohort_plan  # noqa

@@ -1,0 +1,47 @@
+"""Elastic scaling: resume a federated run on a different mesh / cohort
+count.
+
+Because the paper's global state is only (theta, seed, float leaves) —
+no per-client optimizer floats — re-entry after a resize is trivial:
+new cohorts re-derive local scores from theta (eq. 4). This module
+re-shards the restored host arrays onto the new mesh and re-plans the
+client->mesh-slice cohort assignment.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def reshard_server(host_tree: Pytree, shardings: Pytree) -> Pytree:
+    """Place host (numpy) arrays onto devices per `shardings` (a pytree
+    of jax.sharding.NamedSharding matching host_tree).  Works across mesh
+    shapes because the source is host-global."""
+    def place(x, s):
+        if x is None:
+            return None
+        return jax.device_put(x, s)
+    return jax.tree_util.tree_map(place, host_tree, shardings,
+                                  is_leaf=lambda x: x is None)
+
+
+def cohort_plan(n_clients: int, n_slices: int) -> list[np.ndarray]:
+    """Assign K logical clients to mesh data-slices (cohorts). On resize
+    (n_slices changes) the plan is recomputed; no state migrates because
+    clients are stateless between rounds."""
+    return [np.arange(i, n_clients, n_slices) for i in range(n_slices)]
+
+
+def scale_event_log():
+    """Tiny helper used by launch/train.py to record resize events."""
+    events = []
+
+    def record(step: int, old: int, new: int, reason: str = ""):
+        events.append({"step": int(step), "from": int(old),
+                       "to": int(new), "reason": reason})
+        return events
+    return record, events

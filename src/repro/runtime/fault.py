@@ -1,0 +1,78 @@
+"""Fault tolerance & straggler mitigation for 1000+ node federated runs.
+
+The paper's protocol is naturally elastic: a round aggregates whatever
+masks arrive, with the weighted mean renormalized over survivors
+(federated.make_round_fn handles the renormalization). This module
+produces per-round participation vectors from failure/straggler models,
+so the SAME mechanism covers:
+
+  * node crash           -> client missing this round
+  * network partition    -> whole cohort missing
+  * straggler            -> client past deadline, cut by policy
+  * elastic scale-down   -> trailing clients permanently removed
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """Deadline-based cohort cut: keep the first `quorum_frac` arrivals,
+    drop the rest (they are simply absent from the weighted mean).
+    `overprovision` asks the selector for K' > K clients so the expected
+    number of arrivals still meets the target cohort size."""
+    quorum_frac: float = 0.8
+    overprovision: float = 1.25
+
+    def cut(self, rng: np.random.Generator, latencies: np.ndarray
+            ) -> np.ndarray:
+        k = len(latencies)
+        keep = max(int(round(k * self.quorum_frac)), 1)
+        order = np.argsort(latencies)
+        mask = np.zeros(k, bool)
+        mask[order[:keep]] = True
+        return mask
+
+
+@dataclasses.dataclass
+class FaultSimulator:
+    """Per-round iid failures + heavy-tailed latencies (lognormal) +
+    optional correlated pod-level outages."""
+    n_clients: int
+    fail_prob: float = 0.05
+    pod_size: int = 0            # >0: clients grouped into pods
+    pod_outage_prob: float = 0.0
+    latency_sigma: float = 0.5
+    seed: int = 0
+
+    def __post_init__(self):
+        self.rng = np.random.default_rng(self.seed)
+
+    def sample_round(self, policy: Optional[StragglerPolicy] = None
+                     ) -> np.ndarray:
+        alive = self.rng.random(self.n_clients) >= self.fail_prob
+        if self.pod_size and self.pod_outage_prob > 0:
+            n_pods = (self.n_clients + self.pod_size - 1) // self.pod_size
+            pod_down = self.rng.random(n_pods) < self.pod_outage_prob
+            for p in np.where(pod_down)[0]:
+                alive[p * self.pod_size:(p + 1) * self.pod_size] = False
+        if policy is not None:
+            lat = self.rng.lognormal(0.0, self.latency_sigma,
+                                     self.n_clients)
+            lat[~alive] = np.inf
+            alive &= policy.cut(self.rng, lat)
+        if not alive.any():      # server never stalls: keep one survivor
+            alive[self.rng.integers(self.n_clients)] = True
+        return alive
+
+
+def participation_vector(sim: Optional[FaultSimulator], n_clients: int,
+                         policy: Optional[StragglerPolicy] = None):
+    import jax.numpy as jnp
+    if sim is None:
+        return jnp.ones((n_clients,), bool)
+    return jnp.asarray(sim.sample_round(policy))

@@ -1,0 +1,121 @@
+"""Pallas kernel allclose sweeps vs ref.py oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref, ops
+from repro.kernels.masked_matmul import masked_matmul
+from repro.kernels.bitpack import pack_bits, unpack_bits
+
+
+SHAPES = [
+    (128, 512, 512),
+    (256, 512, 1024),
+    (128, 1024, 512),
+    (384, 512, 512),    # M not multiple of block -> smaller bm
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_masked_matmul_allclose(shape, dtype):
+    M, K, N = shape
+    key = jax.random.PRNGKey(M + K + N)
+    kx, kw, ks = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (M, K), jnp.float32).astype(dtype)
+    w = jax.random.normal(kw, (K, N), jnp.float32).astype(dtype)
+    s = jax.random.normal(ks, (K, N), jnp.float32)
+    y_kernel = masked_matmul(x, w, s, 42, bm=128, bn=512, bk=512,
+                             interpret=True)
+    y_ref = ref.masked_matmul(x, w, s, 42)
+    np.testing.assert_allclose(
+        np.asarray(y_kernel, np.float32), np.asarray(y_ref, np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+        atol=1e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 12345])
+def test_masked_matmul_seed_changes_mask(seed):
+    M, K, N = 128, 512, 512
+    key = jax.random.PRNGKey(0)
+    x = jnp.ones((M, K), jnp.float32)
+    w = jnp.ones((K, N), jnp.float32)
+    s = jnp.zeros((K, N), jnp.float32)  # theta = 0.5 everywhere
+    y1 = masked_matmul(x, w, s, seed, interpret=True)
+    y2 = masked_matmul(x, w, s, seed + 1, interpret=True)
+    assert not np.allclose(np.asarray(y1), np.asarray(y2))
+    # theta=0.5: each output ~ sum of K/2 ones
+    assert abs(float(jnp.mean(y1)) - K / 2) < K * 0.05
+
+
+def test_masked_matmul_extreme_scores():
+    M, K, N = 128, 512, 512
+    x = jnp.ones((M, K), jnp.float32)
+    w = jnp.ones((K, N), jnp.float32)
+    s_on = jnp.full((K, N), 40.0)
+    s_off = jnp.full((K, N), -40.0)
+    y_on = masked_matmul(x, w, s_on, 7, interpret=True)
+    y_off = masked_matmul(x, w, s_off, 7, interpret=True)
+    assert np.allclose(np.asarray(y_on), K)
+    assert np.allclose(np.asarray(y_off), 0.0)
+
+
+@given(st.integers(0, 2 ** 20), st.integers(1, 64))
+@settings(max_examples=15, deadline=None)
+def test_bitpack_roundtrip_property(seed, words):
+    key = jax.random.PRNGKey(seed % 9973)
+    n = 32 * words
+    m = jax.random.bernoulli(key, 0.5, (n,)).astype(jnp.uint8)
+    pk = pack_bits(m, interpret=True)
+    assert bool(jnp.all(pk == ref.pack_bits(m)))
+    un = unpack_bits(pk, n, interpret=True)
+    assert bool(jnp.all(un == m))
+
+
+def test_bitpack_compression_ratio():
+    m = jnp.ones((32 * 1024,), jnp.uint8)
+    pk = pack_bits(m, interpret=True)
+    assert pk.size * 32 == m.size
+    assert pk.dtype == jnp.uint32
+
+
+def test_ops_masked_dense_ste_gradients():
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (32, 64), jnp.float32)
+    w = jax.random.normal(key, (64, 16), jnp.float32)
+    s = jnp.zeros((64, 16), jnp.float32)
+
+    def loss(s, x):
+        return jnp.sum(ops.masked_dense(x, w, s, 5) ** 2)
+
+    gs = jax.grad(loss, argnums=0)(s, x)
+    gx = jax.grad(loss, argnums=1)(s, x)
+    assert gs.shape == s.shape and gx.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(gs)))
+    # STE: ds includes sigmoid'(s)=0.25 factor at s=0
+    assert float(jnp.max(jnp.abs(gs))) > 0
+
+
+def test_ops_masked_dense_matches_ref_forward():
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (8, 4, 64), jnp.float32)  # batched
+    w = jax.random.normal(key, (64, 32), jnp.float32)
+    s = jax.random.normal(key, (64, 32), jnp.float32)
+    y = ops.masked_dense(x, w, s, 9)
+    y_ref = ref.masked_matmul(x.reshape(-1, 64), w, s, 9).reshape(
+        8, 4, 32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_hash_uniform_distribution():
+    idx = jnp.arange(1 << 16, dtype=jnp.uint32)
+    u = ref.hash_uniform(idx, 3)
+    assert 0.49 < float(jnp.mean(u)) < 0.51
+    assert float(jnp.min(u)) >= 0.0 and float(jnp.max(u)) < 1.0
+    # uniformity: chi-square-ish bucket check
+    hist, _ = np.histogram(np.asarray(u), bins=16, range=(0, 1))
+    assert hist.min() > (1 << 16) / 16 * 0.9

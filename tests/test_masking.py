@@ -1,0 +1,167 @@
+"""Unit + property tests for the mask-training core."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masking, regularizer, aggregation
+
+
+def test_signed_constant_init_values():
+    key = jax.random.PRNGKey(0)
+    w = masking.signed_constant_init(key, (64, 64), fan_in=64)
+    c = float(jnp.sqrt(2.0 / 64))
+    vals = np.unique(np.asarray(jnp.abs(w)))
+    assert np.allclose(vals, c, rtol=1e-5)
+
+
+def test_score_init_uniform_theta():
+    key = jax.random.PRNGKey(1)
+    s = masking.score_init(key, (10000,), p0=0.5, jitter=0.5)
+    theta = jax.nn.sigmoid(s)
+    assert 0.45 < float(jnp.mean(theta)) < 0.55
+    assert float(jnp.min(theta)) < 0.05 and float(jnp.max(theta)) > 0.95
+
+
+def test_ste_bernoulli_forward_and_grad():
+    theta = jnp.asarray([0.0, 0.3, 0.9, 1.0])
+    u = jnp.asarray([0.5, 0.5, 0.5, 0.5])
+    m = masking.ste_bernoulli(theta, u)
+    assert list(np.asarray(m)) == [0.0, 0.0, 1.0, 1.0]
+    g = jax.grad(lambda t: jnp.sum(masking.ste_bernoulli(t, u) * 2.0))(
+        theta)
+    assert np.allclose(np.asarray(g), 2.0)  # straight-through
+
+
+def test_mask_spec_classification():
+    spec = masking.MaskSpec()
+    assert spec.is_masked("layers/attn/w_q", jnp.zeros((4, 4)))
+    assert not spec.is_masked("layers/attn_norm/scale", jnp.zeros((4, 4)))
+    assert not spec.is_masked("moe/router_w", jnp.zeros((4, 4)))
+    assert not spec.is_masked("embed/table", jnp.zeros((4, 4)))
+    assert not spec.is_masked("layers/w_q/bias_q", jnp.zeros((4, 4)))
+    assert not spec.is_masked("w_small", jnp.zeros((4,)))  # 1D
+
+
+def test_sample_effective_modes():
+    key = jax.random.PRNGKey(2)
+    params = {"w_a": jnp.zeros((8, 8)), "norm_scale": jnp.ones((8,))}
+    mp = masking.init_masked(key, params, masking.MaskSpec())
+    eff_s = masking.sample_effective(mp, key, "sample")
+    eff_t = masking.sample_effective(mp, key, "threshold")
+    eff_e = masking.sample_effective(mp, key, "expected")
+    w = mp.weights["w_a"]
+    # sampled/thresholded entries are either 0 or +-c
+    for eff in (eff_s, eff_t):
+        vals = np.unique(np.round(np.abs(np.asarray(
+            eff["w_a"], dtype=np.float32)), 5))
+        assert len(vals) <= 2
+    # expected-mode magnitudes lie strictly inside [0, |c|]
+    assert float(jnp.max(jnp.abs(eff_e["w_a"]))) <= float(
+        jnp.max(jnp.abs(w))) + 1e-6
+    # float leaf passes through
+    assert np.allclose(np.asarray(eff_s["norm_scale"]), 1.0)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.05, 0.95))
+@settings(max_examples=20, deadline=None)
+def test_final_mask_rate_matches_theta(seed, p):
+    key = jax.random.PRNGKey(seed % 1000)
+    n = 20000
+    s = jnp.full((n, 2), masking.logit(jnp.float32(p)))
+    mp = masking.MaskedParams({"w_x": jnp.ones((n, 2))}, {"w_x": s},
+                              {"w_x": None})
+    m = masking.final_mask(mp, key)["w_x"]
+    rate = float(jnp.mean(m.astype(jnp.float32)))
+    assert abs(rate - p) < 0.02
+
+
+def test_scores_from_theta_roundtrip():
+    theta = {"a": jnp.asarray([0.1, 0.5, 0.9]), "b": None}
+    s = masking.scores_from_theta(theta)
+    back = jax.nn.sigmoid(s["a"])
+    assert np.allclose(np.asarray(back), [0.1, 0.5, 0.9], atol=1e-5)
+    assert s["b"] is None
+
+
+# ---------------------------------------------------------------------------
+# regularizer
+# ---------------------------------------------------------------------------
+
+
+def test_entropy_proxy_matches_mean_sigmoid():
+    s = {"w": jnp.asarray([[0.0, 2.0], [-2.0, 0.0]]), "skip": None}
+    got = float(regularizer.entropy_proxy(s))
+    want = float(jnp.mean(jax.nn.sigmoid(s["w"])))
+    assert abs(got - want) < 1e-6
+
+
+def test_empirical_entropy_bounds():
+    all_ones = {"w": jnp.ones((100,), jnp.uint8)}
+    half = {"w": jnp.asarray([0, 1] * 50, jnp.uint8)}
+    assert float(regularizer.empirical_entropy(all_ones)) < 1e-5
+    assert abs(float(regularizer.empirical_entropy(half)) - 1.0) < 1e-6
+
+
+@given(st.floats(0.01, 0.99))
+@settings(max_examples=20, deadline=None)
+def test_binary_entropy_concave_max_at_half(p):
+    hp = float(regularizer.binary_entropy(jnp.float32(p)))
+    hhalf = float(regularizer.binary_entropy(jnp.float32(0.5)))
+    assert hp <= hhalf + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# aggregation
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(max_examples=20, deadline=None)
+def test_pack_unpack_roundtrip(seed):
+    key = jax.random.PRNGKey(seed % 997)
+    m = jax.random.bernoulli(key, 0.37, (32 * 17,)).astype(jnp.uint8)
+    words = aggregation.pack_bits(m)
+    back = aggregation.unpack_bits(words, m.size)
+    assert bool(jnp.all(back == m))
+
+
+def test_aggregate_masks_weighted_mean():
+    m1 = {"w": jnp.asarray([1, 1, 0, 0], jnp.uint8)}
+    m2 = {"w": jnp.asarray([1, 0, 1, 0], jnp.uint8)}
+    theta = aggregation.aggregate_masks([m1, m2], weights=[3.0, 1.0])
+    assert np.allclose(np.asarray(theta["w"]), [1.0, 0.75, 0.25, 0.0])
+
+
+def test_aggregate_bayesian_shrinks_to_half():
+    m = {"w": jnp.ones((4,), jnp.uint8)}
+    theta = aggregation.aggregate_bayesian([m], alpha0=1, beta0=1)
+    assert np.allclose(np.asarray(theta["w"]), 2.0 / 3.0)
+
+
+def test_uplink_bits_accounting():
+    mask = {"w": jnp.ones((100,), jnp.uint8)}
+    assert aggregation.uplink_bits(mask, packed=True) == 128  # pad to 32
+    assert aggregation.uplink_bits(mask, packed=False) == 1600
+
+
+@given(st.integers(0, 10 ** 6), st.sampled_from([4, 8]))
+@settings(max_examples=15, deadline=None)
+def test_theta_quantization_unbiased(seed, bits):
+    """Stochastic DL quantization must be unbiased and bounded."""
+    key = jax.random.PRNGKey(seed % 99991)
+    theta = {"w": jax.random.uniform(key, (4000,))}
+    q = aggregation.quantize_theta(theta, key, bits=bits)
+    dq = aggregation.dequantize_theta(q, bits=bits)["w"]
+    step = 1.0 / ((1 << bits) - 1)
+    assert float(jnp.max(jnp.abs(dq - theta["w"]))) <= step + 1e-6
+    # unbiasedness: average reconstruction error ~ 0
+    errs = []
+    for i in range(8):
+        qi = aggregation.quantize_theta(
+            theta, jax.random.fold_in(key, i), bits=bits)
+        errs.append(aggregation.dequantize_theta(qi, bits=bits)["w"]
+                    - theta["w"])
+    mean_err = float(jnp.mean(jnp.stack(errs)))
+    assert abs(mean_err) < step / 4
