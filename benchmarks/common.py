@@ -9,7 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import masking, federated
+from repro import api
+from repro.core import masking
 from repro.models import cnn
 from repro.data import synthetic, partition
 
@@ -56,17 +57,18 @@ def make_setup(dataset: str, k: int, c: int | None, seed: int = 0,
                 test=test, k=k)
 
 
-def run_fedpm_variant(setup, lam: float, rounds: int, local_steps=3,
-                      batch=32, lr=0.1, seed=0, participation=None):
-    """Returns per-round dict lists: acc, bpp, sparsity, loss."""
+def run_algorithm(setup, name: str, rounds: int, *, local_steps=3,
+                  batch=32, seed=0, participation=None, eval_samples=2,
+                  **algo_kw):
+    """Sweep any registered algorithm by name through the unified
+    round engine.  Returns per-round dict lists (acc, bpp, sparsity,
+    loss) and the final state; `bpp` is the transport layer's
+    payload-derived `uplink_bpp`."""
     key = jax.random.PRNGKey(seed)
-    server = federated.init_server(key, setup["params"], SPEC)
-    fc = federated.FedConfig(lam=lam, local_steps=local_steps, lr=lr,
-                             optimizer="adam", float_lr=1e-3)
-    rf = federated.make_round_fn(setup["apply_fn"], setup["loss_fn"], fc,
-                                 setup["k"])
-    ev = federated.make_eval_fn(setup["apply_fn"], setup["metric_fn"],
-                                n_samples=2)
+    algo = api.get_algorithm(name, setup["apply_fn"], setup["loss_fn"],
+                             spec=SPEC, local_steps=local_steps,
+                             **algo_kw)
+    st = algo.init(key, setup["params"])
     sizes = jnp.asarray([len(ci) for ci in setup["cidx"]], jnp.float32)
     hist = {"acc": [], "bpp": [], "sparsity": [], "loss": []}
     for r in range(rounds):
@@ -76,16 +78,28 @@ def run_fedpm_variant(setup, lam: float, rounds: int, local_steps=3,
             batch)
         part = (jnp.ones((setup["k"],), bool) if participation is None
                 else participation(r))
-        server, m = rf(server, data, part, sizes, kr)
+        st, m = algo.round(st, data, part, sizes, kr)
         hist["bpp"].append(float(m["uplink_bpp"]))
-        hist["sparsity"].append(float(m["sparsity"]))
+        hist["sparsity"].append(float(m.get("sparsity", 0.0)))
         hist["loss"].append(float(m["loss"]))
-        hist["acc"].append(float(ev(server, setup["test"], kr)))
-    return hist, server
+        hist["acc"].append(float(api.evaluate(
+            algo, st, setup["test"], setup["apply_fn"],
+            setup["metric_fn"], kr, n_samples=eval_samples)))
+    return hist, st
+
+
+def run_fedpm_variant(setup, lam: float, rounds: int, local_steps=3,
+                      batch=32, lr=0.1, seed=0, participation=None):
+    """The paper's method at one lambda (lam=0 == FedPM reference)."""
+    return run_algorithm(setup, "fedpm_reg", rounds,
+                         local_steps=local_steps, batch=batch, seed=seed,
+                         participation=participation, lam=lam, lr=lr,
+                         optimizer="adam", float_lr=1e-3)
 
 
 def run_baseline(setup, algo, rounds: int, local_steps=3, batch=32,
                  seed=0):
+    """Legacy entry: sweep an already-constructed FedAlgorithm."""
     key = jax.random.PRNGKey(seed)
     st = algo.init(key, setup["params"])
     sizes = jnp.asarray([len(ci) for ci in setup["cidx"]], jnp.float32)

@@ -17,9 +17,15 @@ def main(rounds: int = 12, k: int = 10, datasets=None):
     summary = []
     for ds in datasets:
         setup = common.make_setup(ds, k=k, c=None)
-        for lam, name in [(0.0, "fedpm"), (1.0, "fedpm+reg"),
-                          (4.0, "fedpm+reg4")]:
-            hist, _ = common.run_fedpm_variant(setup, lam, rounds)
+        # both variants resolve through the registry: "fedpm" is the
+        # lam=0 reference, "fedpm_reg" the paper's method
+        for algo, name, kw in [("fedpm", "fedpm", {}),
+                               ("fedpm_reg", "fedpm+reg", dict(lam=1.0)),
+                               ("fedpm_reg", "fedpm+reg4",
+                                dict(lam=4.0))]:
+            hist, _ = common.run_algorithm(setup, algo, rounds, lr=0.1,
+                                           optimizer="adam",
+                                           float_lr=1e-3, **kw)
             for r in range(rounds):
                 print(f"{ds},{name},{r},{hist['acc'][r]:.4f},"
                       f"{hist['bpp'][r]:.4f},{hist['sparsity'][r]:.4f}")

@@ -8,7 +8,6 @@ from __future__ import annotations
 import sys
 
 from benchmarks import common
-from repro.core import baselines
 
 
 def main(rounds: int = 12, k: int = 10, c: int = 2):
@@ -21,14 +20,11 @@ def main(rounds: int = 12, k: int = 10, c: int = 2):
             name = f"lam={lam}"
             hist, _ = common.run_fedpm_variant(setup, lam, rounds)
             runs[name] = hist
-        for algo in [
-            baselines.topk_mask(setup["apply_fn"], setup["loss_fn"],
-                                common.SPEC, k_frac=0.3),
-            baselines.mv_signsgd(setup["apply_fn"], setup["loss_fn"]),
-        ]:
-            hist, _ = common.run_baseline(setup, algo, rounds)
-            hist["sparsity"] = [0.0] * rounds
-            runs[algo.name] = hist
+        # baselines resolve through the same registry / round engine
+        for name, kw in [("topk", dict(k_frac=0.3)),
+                         ("mv_signsgd", {})]:
+            hist, _ = common.run_algorithm(setup, name, rounds, **kw)
+            runs[name] = hist
         for name, hist in runs.items():
             for r in range(rounds):
                 print(f"{ds},{name},{r},{hist['acc'][r]:.4f},"

@@ -1,12 +1,18 @@
 """Quickstart: federated mask-training (the paper's method) on a tiny
 CNN + synthetic task, end to end in ~a CPU minute.
 
+Algorithms are resolved by name from the `repro.api` registry; swap
+"fedpm_reg" for any of `repro.api.available()` (fedpm, fedmask, topk,
+mv_signsgd, fedavg) and the same loop runs — the round engine computes
+`uplink_bpp` from each algorithm's typed payload.
+
     PYTHONPATH=src:. python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core import masking, federated
 from repro.models import cnn
 from repro.data import synthetic, partition
@@ -23,17 +29,15 @@ def main():
                                    np.asarray(task.y), K)
 
     params = cnn.init_params(key, cfg)
-    spec = masking.MaskSpec()
-    server = federated.init_server(key, params, spec)
-
     apply_fn = lambda p, b: cnn.forward(p, cfg, b["images"])
     loss_fn = lambda out, b: cnn.ce_loss(out, b)
-    fc = federated.FedConfig(lam=1.0, local_steps=2, lr=0.1,
-                             optimizer="adam")
-    round_fn = federated.make_round_fn(apply_fn, loss_fn, fc, K)
-    eval_fn = federated.make_eval_fn(apply_fn,
-                                     lambda o, b: cnn.accuracy(o, b),
-                                     n_samples=2)
+    metric_fn = lambda o, b: cnn.accuracy(o, b)
+
+    algo = api.get_algorithm("fedpm_reg", apply_fn, loss_fn,
+                             spec=masking.MaskSpec(), lam=1.0,
+                             local_steps=2, lr=0.1, optimizer="adam")
+    print(f"{algo.name}: {algo.payload_spec.description}")
+    server = algo.init(key, params)
 
     sizes = jnp.asarray([len(c) for c in cidx], jnp.float32)
     part = jnp.ones((K,), bool)
@@ -42,8 +46,9 @@ def main():
     for r in range(8):
         kr = jax.random.fold_in(key, r)
         data = synthetic.federated_batches(kr, task, cidx, K, 2, 32)
-        server, m = round_fn(server, data, part, sizes, kr)
-        acc = eval_fn(server, test, kr)
+        server, m = algo.round(server, data, part, sizes, kr)
+        acc = api.evaluate(algo, server, test, apply_fn, metric_fn, kr,
+                           n_samples=2)
         print(f"round {r}: loss={float(m['loss']):.3f} "
               f"uplink={float(m['uplink_bpp']):.3f} Bpp "
               f"sparsity={float(m['sparsity']):.2f} "

@@ -1,0 +1,18 @@
+"""`repro.api` — the unified federated-learning surface.
+
+One protocol (`FedAlgorithm`: init / client_update / aggregate /
+eval_params + payload_spec), one registry (`register` /
+`get_algorithm`), and typed uplink payloads (`BitpackedMasks`,
+`SignVotes`, `FloatDeltas`) whose serialized size is the single source
+of truth for `uplink_bpp`.  Host-sim sweeps, the benchmarks, the
+examples, and the pod-scale launcher all resolve algorithms here.
+"""
+from repro.api.payloads import (  # noqa: F401
+    BitpackedMasks, FloatDeltas, SignVotes, UplinkPayload,
+    batched_float_mean, batched_packed_mean, mean_from_words, pack_leaf)
+from repro.api.protocol import (  # noqa: F401
+    FedAlgorithm, PayloadSpec, SupportsFedAlgorithm, evaluate, run_round)
+from repro.api.registry import (  # noqa: F401
+    AlgorithmEntry, available, get_algorithm, get_entry,
+    get_launch_plan, launchable, register, register_launch)
+from repro.api import algorithms  # noqa: F401  (registers the six)

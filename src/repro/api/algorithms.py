@@ -1,0 +1,343 @@
+"""The six federated algorithms, expressed in the `FedAlgorithm`
+protocol with typed uplink payloads.
+
+  name         payload          uplink Bpp          reference
+  -----------  ---------------  ------------------  ---------------------
+  fedpm_reg    BitpackedMasks   H(p̂) <= 1 (reg'd)   the paper (lam > 0)
+  fedpm        BitpackedMasks   H(p̂) <= 1           Isik et al. [FedPM]
+  fedmask      BitpackedMasks   H(p̂) <= 1           Li et al.   [7]
+  topk         BitpackedMasks   H(p̂) <= 1           top-k scores [4]
+  mv_signsgd   SignVotes        1.0                 Bernstein et al. [12]
+  fedavg       FloatDeltas      32.0                McMahan et al. [1]
+
+Each is a factory `f(apply_fn, loss_fn, *, spec=None, **hp)` registered
+under its name; resolve with `repro.api.get_algorithm`.  The `fedpm*`
+rows reuse `repro.core.federated.make_client_update` (the paper-faithful
+local step), so the host-sim engine and this API cannot diverge.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import payloads as plds
+from repro.api.protocol import FedAlgorithm, PayloadSpec
+from repro.api.registry import register
+from repro.core import federated, masking, regularizer
+from repro.optim import optimizers as optlib
+
+Pytree = Any
+
+_NONE = lambda x: x is None
+
+
+def _default_spec(spec):
+    return masking.MaskSpec() if spec is None else spec
+
+
+# ---------------------------------------------------------------------------
+# FedPM family: the paper's method (lam > 0) and the FedPM reference
+# ---------------------------------------------------------------------------
+
+
+MASK_SPEC = PayloadSpec(
+    plds.BitpackedMasks, nominal_bpp=None,
+    description="bitpacked binary masks; entropy-coded <= 1 Bpp")
+
+
+def _fedpm_family(name, apply_fn, loss_fn, *, spec=None, cfg=None,
+                  lam=1.0, local_steps=3, lr=0.1, float_lr=0.01,
+                  optimizer="sgd", bayesian=False, train_floats=True):
+    spec = _default_spec(spec)
+    if cfg is None:
+        cfg = federated.FedConfig(
+            lam=lam, local_steps=local_steps, lr=lr, float_lr=float_lr,
+            optimizer=optimizer, bayesian=bayesian,
+            train_floats=train_floats)
+    local = federated.make_client_update(apply_fn, loss_fn, cfg)
+
+    def init(key, params_like):
+        return federated.init_server(key, params_like, spec)
+
+    def client_update(state, data, key):
+        mask, floats, metrics = local(state.weights, state.floats,
+                                      state.theta, data, key)
+        metrics.pop("uplink_bpp", None)  # the transport layer owns this
+        return plds.BitpackedMasks.from_masks(mask, floats), metrics
+
+    def aggregate(state, payloads, wn, participation):
+        q = plds.batched_packed_mean(payloads, wn)
+        if cfg.bayesian:
+            k = jnp.sum(participation.astype(jnp.float32))
+            theta = jax.tree_util.tree_map(
+                lambda t: None if t is None else
+                (1.0 + t * k) / (2.0 + k), q, is_leaf=_NONE)
+        else:
+            theta = q
+        floats = plds.batched_float_mean(payloads.floats, wn)
+        return federated.ServerState(
+            theta=theta, floats=floats, weights=state.weights,
+            seed=state.seed, round=state.round + 1)
+
+    def eval_params(state, key):
+        scores = masking.scores_from_theta(state.theta)
+        mp = masking.MaskedParams(state.weights, scores, state.floats)
+        return masking.sample_effective(mp, key, mode="sample")
+
+    return FedAlgorithm(name, init=init, client_update=client_update,
+                        aggregate=aggregate, eval_params=eval_params,
+                        payload_spec=MASK_SPEC)
+
+
+@register("fedpm_reg", payload_spec=MASK_SPEC,
+          description="regularized FedPM (the paper; lam > 0)")
+def fedpm_reg(apply_fn, loss_fn, *, spec=None, lam=1.0, **kw):
+    return _fedpm_family("fedpm_reg", apply_fn, loss_fn, spec=spec,
+                         lam=lam, **kw)
+
+
+@register("fedpm", payload_spec=MASK_SPEC,
+          description="FedPM reference (no regularizer)")
+def fedpm(apply_fn, loss_fn, *, spec=None, **kw):
+    kw.pop("lam", None)
+    return _fedpm_family("fedpm", apply_fn, loss_fn, spec=spec, lam=0.0,
+                         **kw)
+
+
+# ---------------------------------------------------------------------------
+# FedMask — deterministic STE-threshold masking [7]
+# ---------------------------------------------------------------------------
+
+
+class MaskState(NamedTuple):
+    scores: Pytree
+    floats: Pytree
+    weights: Pytree
+    round: jax.Array
+
+
+def _mask_init(spec):
+    def init(key, params_like):
+        mp = masking.init_masked(key, params_like, spec)
+        return MaskState(mp.scores, mp.floats, mp.weights,
+                         jnp.zeros((), jnp.int32))
+    return init
+
+
+def _mask_aggregate(state, payloads, wn, participation):
+    theta = plds.batched_packed_mean(payloads, wn)
+    scores = masking.scores_from_theta(theta)
+    return MaskState(scores, state.floats, state.weights,
+                     state.round + 1)
+
+
+@register("fedmask", payload_spec=MASK_SPEC,
+          description="deterministic STE-threshold masks")
+def fedmask(apply_fn, loss_fn, *, spec=None, tau=0.5, lr=0.1,
+            local_steps=3):
+    """Forward uses m = 1[sigmoid(s) > tau] with STE; the uplink is the
+    thresholded mask (the biased-update baseline, paper footnote 3)."""
+    spec = _default_spec(spec)
+    opt = optlib.momentum(lr)
+
+    def client_update(state, data, key):
+        ostate = opt.init(state.scores)
+
+        def loss_of(sc, batch):
+            eff = masking.sample_effective(
+                masking.MaskedParams(state.weights, sc, state.floats),
+                key, mode="threshold", tau=tau)
+            return loss_fn(apply_fn(eff, batch), batch)
+
+        def step(carry, batch):
+            sc, os = carry
+            loss, g = jax.value_and_grad(loss_of)(sc, batch)
+            upd, os = opt.update(g, os, sc)
+            return (optlib.apply_updates(sc, upd), os), loss
+
+        (sc, _), losses = jax.lax.scan(step, (state.scores, ostate),
+                                       data)
+        mask = jax.tree_util.tree_map(
+            lambda s: None if s is None else
+            (jax.nn.sigmoid(s) > tau).astype(jnp.uint8),
+            sc, is_leaf=_NONE)
+        metrics = {"loss": losses[-1],
+                   "sparsity": regularizer.sparsity(mask)}
+        return plds.BitpackedMasks.from_masks(mask), metrics
+
+    def eval_params(state, key):
+        mp = masking.MaskedParams(state.weights, state.scores,
+                                  state.floats)
+        return masking.sample_effective(mp, key, mode="threshold",
+                                        tau=tau)
+
+    return FedAlgorithm("fedmask", init=_mask_init(spec),
+                        client_update=client_update,
+                        aggregate=_mask_aggregate,
+                        eval_params=eval_params, payload_spec=MASK_SPEC)
+
+
+# ---------------------------------------------------------------------------
+# Top-k over scores — deterministic sparse mask [4]
+# ---------------------------------------------------------------------------
+
+
+@register("topk", payload_spec=MASK_SPEC,
+          description="top-k% scores -> 1, rest pruned")
+def topk(apply_fn, loss_fn, *, spec=None, k_frac=0.3, lr=0.1,
+         local_steps=3):
+    """Train scores like FedPM (stochastic STE), but the uplink mask
+    sets the global top k% of scores to 1 and prunes the rest."""
+    spec = _default_spec(spec)
+    opt = optlib.momentum(lr)
+
+    def _topk_mask(scores):
+        flat = [s.reshape(-1) for s in jax.tree_util.tree_leaves(scores)
+                if s is not None]
+        kth = jnp.quantile(jnp.concatenate(flat), 1.0 - k_frac)
+        return jax.tree_util.tree_map(
+            lambda s: None if s is None else
+            (s >= kth).astype(jnp.uint8),
+            scores, is_leaf=_NONE)
+
+    def client_update(state, data, key):
+        ostate = opt.init(state.scores)
+
+        def loss_of(sc, batch, k):
+            eff = masking.sample_effective(
+                masking.MaskedParams(state.weights, sc, state.floats),
+                k, mode="sample")
+            return loss_fn(apply_fn(eff, batch), batch)
+
+        def step(carry, xs):
+            sc, os = carry
+            batch, k = xs
+            loss, g = jax.value_and_grad(loss_of)(sc, batch, k)
+            upd, os = opt.update(g, os, sc)
+            return (optlib.apply_updates(sc, upd), os), loss
+
+        h = jax.tree_util.tree_leaves(data)[0].shape[0]
+        keys = jax.random.split(key, h)
+        (sc, _), losses = jax.lax.scan(step, (state.scores, ostate),
+                                       (data, keys))
+        mask = _topk_mask(sc)
+        metrics = {"loss": losses[-1],
+                   "sparsity": regularizer.sparsity(mask)}
+        return plds.BitpackedMasks.from_masks(mask), metrics
+
+    def eval_params(state, key):
+        mp = masking.MaskedParams(state.weights, state.scores,
+                                  state.floats)
+        return masking.sample_effective(mp, key, mode="threshold")
+
+    return FedAlgorithm("topk", init=_mask_init(spec),
+                        client_update=client_update,
+                        aggregate=_mask_aggregate,
+                        eval_params=eval_params, payload_spec=MASK_SPEC)
+
+
+# ---------------------------------------------------------------------------
+# MV-SignSGD — majority-vote sign compression (1 Bpp, float model) [12]
+# ---------------------------------------------------------------------------
+
+
+SIGN_SPEC = PayloadSpec(plds.SignVotes, nominal_bpp=1.0,
+                        description="bitpacked gradient signs, 1 Bpp")
+
+
+class FloatState(NamedTuple):
+    params: Pytree
+    round: jax.Array
+
+
+def _float_init(key, params_like):
+    return FloatState(params_like, jnp.zeros((), jnp.int32))
+
+
+@register("mv_signsgd", payload_spec=SIGN_SPEC,
+          description="majority-vote sign compression")
+def mv_signsgd(apply_fn, loss_fn, *, spec=None, lr=1e-3, local_steps=3):
+    def client_update(state, data, key):
+        # accumulate grad over local batches, send elementwise sign
+        def step(g_acc, batch):
+            loss, g = jax.value_and_grad(
+                lambda pp: loss_fn(apply_fn(pp, batch), batch))(
+                    state.params)
+            return jax.tree_util.tree_map(jnp.add, g_acc, g), loss
+
+        g0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, jnp.float32), state.params)
+        g, losses = jax.lax.scan(step, g0, data)
+        # 1-bit wire has no zero symbol: break exact-zero gradients
+        # (dead units) with an unbiased coin so the majority vote has
+        # zero expected drift instead of a systematic -1.
+        leaves, treedef = jax.tree_util.tree_flatten(g)
+        keys = jax.random.split(jax.random.fold_in(key, 1),
+                                max(len(leaves), 1))
+        signs = jax.tree_util.tree_unflatten(treedef, [
+            jnp.where(gl == 0.0,
+                      jax.random.rademacher(kl, gl.shape, jnp.float32),
+                      jnp.sign(gl))
+            for gl, kl in zip(leaves, keys)])
+        metrics = {"loss": losses[-1], "sparsity": jnp.float32(0.0)}
+        return plds.SignVotes.from_signs(signs), metrics
+
+    def aggregate(state, payloads, wn, participation):
+        # majority vote: >half the weighted sign bits positive -> +1
+        q = plds.batched_packed_mean(payloads, wn)
+        params = jax.tree_util.tree_map(
+            lambda p, qi: (p - lr * jnp.sign(2.0 * qi - 1.0)
+                           ).astype(p.dtype),
+            state.params, q)
+        return FloatState(params, state.round + 1)
+
+    return FedAlgorithm("mv_signsgd", init=_float_init,
+                        client_update=client_update, aggregate=aggregate,
+                        eval_params=lambda s, k: s.params,
+                        payload_spec=SIGN_SPEC)
+
+
+# ---------------------------------------------------------------------------
+# FedAvg — the float reference (32 Bpp uplink) [1]
+# ---------------------------------------------------------------------------
+
+
+FLOAT_SPEC = PayloadSpec(plds.FloatDeltas, nominal_bpp=32.0,
+                         description="raw float32 deltas, 32 Bpp")
+
+
+@register("fedavg", payload_spec=FLOAT_SPEC,
+          description="float weight averaging (32-Bpp reference)")
+def fedavg(apply_fn, loss_fn, *, spec=None, lr=0.05, local_steps=3):
+    opt = optlib.momentum(lr)
+
+    def client_update(state, data, key):
+        ostate = opt.init(state.params)
+
+        def step(carry, batch):
+            p, os = carry
+            loss, g = jax.value_and_grad(
+                lambda pp: loss_fn(apply_fn(pp, batch), batch))(p)
+            upd, os = opt.update(g, os, p)
+            return (optlib.apply_updates(p, upd), os), loss
+
+        (p, _), losses = jax.lax.scan(step, (state.params, ostate), data)
+        delta = jax.tree_util.tree_map(
+            lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+            p, state.params)
+        metrics = {"loss": losses[-1], "sparsity": jnp.float32(0.0)}
+        return plds.FloatDeltas.from_tree(delta), metrics
+
+    def aggregate(state, payloads, wn, participation):
+        mean_delta = plds.batched_float_mean(payloads.values, wn)
+        params = jax.tree_util.tree_map(
+            lambda p, d: (p.astype(jnp.float32) + d).astype(p.dtype),
+            state.params, mean_delta)
+        return FloatState(params, state.round + 1)
+
+    return FedAlgorithm("fedavg", init=_float_init,
+                        client_update=client_update, aggregate=aggregate,
+                        eval_params=lambda s, k: s.params,
+                        payload_spec=FLOAT_SPEC)

@@ -1,0 +1,272 @@
+"""Typed uplink payloads — the ONE place communication cost is accounted.
+
+Every federated algorithm's client sends exactly one `UplinkPayload` per
+round.  The payload type fixes both the wire format and the reported
+``uplink_bpp`` (bits per parameter), so per-algorithm metric code cannot
+drift from what is actually serialized:
+
+  * ``BitpackedMasks`` — binary masks packed 32->1 into uint32 words
+    (the paper's artifact).  Reported Bpp is the empirical entropy of
+    the transmitted bits (eq. 13): what an ideal entropy coder achieves
+    on this exact payload, always <= 1.
+  * ``SignVotes``      — bitpacked sign bits (MV-SignSGD): exactly
+    1 bit per parameter.
+  * ``FloatDeltas``    — raw float tensors (FedAvg & friends): the
+    dtype width, 32 Bpp for float32.
+
+Payloads are registered pytrees, so they flow through ``jax.jit`` /
+``jax.vmap`` unchanged; static shape metadata rides in the treedef.  The
+round engine (`repro.api.protocol.run_round`) vmaps `client_update` over
+clients and derives the round's ``uplink_bpp`` from the batched payload
+— algorithms never report their own communication cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation, masking, regularizer
+
+Pytree = Any
+
+_NONE = lambda x: x is None
+
+
+def _leaf_shapes(tree: Pytree) -> tuple:
+    """Static (hashable) shapes of the non-None leaves, flatten order."""
+    return tuple(tuple(l.shape) for l in jax.tree_util.tree_leaves(
+        tree, is_leaf=_NONE) if l is not None)
+
+
+def _float_bits(tree: Pytree) -> tuple:
+    return tuple(l.dtype.itemsize * 8 for l in jax.tree_util.tree_leaves(
+        tree, is_leaf=_NONE) if l is not None)
+
+
+def pack_leaf(m: jax.Array) -> jax.Array:
+    """Bitpack one {0,1} leaf into a flat uint32 word vector."""
+    flat, _ = aggregation.pad_to_words(m.reshape(-1))
+    return aggregation.pack_bits(flat)
+
+
+def mean_from_words(words: jax.Array, n: int,
+                    weights: Optional[jax.Array] = None) -> jax.Array:
+    """Weighted mean of K bitpacked clients: (K, W) uint32 -> (n,) f32.
+
+    This is THE aggregation kernel for binary uplinks (eq. 8): both the
+    host-sim engine and the pod-scale round step (after its all_gather
+    of the packed words) reduce through here, so the two execution paths
+    cannot drift.  ``weights`` defaults to the uniform mean.
+    """
+    bits = jax.vmap(lambda w: aggregation.unpack_bits(w, n))(words)
+    bits = bits.astype(jnp.float32)
+    if weights is None:
+        return jnp.mean(bits, axis=0)
+    return jnp.tensordot(weights, bits, axes=(0, 0))
+
+
+def _popcount_sum(words: jax.Array) -> jax.Array:
+    return jnp.sum(jax.lax.population_count(words).astype(jnp.float32))
+
+
+class UplinkPayload:
+    """Interface every payload implements (one client's uplink).
+
+    ``num_params`` / ``wire_bits`` are static Python ints; ``bpp`` is a
+    traced scalar (it may depend on the transmitted values).  Methods
+    assume an UNBATCHED (single-client) payload; the round engine vmaps
+    them over the client axis.
+    """
+
+    def num_params(self) -> int:
+        raise NotImplementedError
+
+    def wire_bits(self) -> int:
+        """Exact serialized size in bits (word-aligned where packed)."""
+        raise NotImplementedError
+
+    def bpp(self) -> jax.Array:
+        """Reported uplink bits/parameter (entropy-coded where binary)."""
+        raise NotImplementedError
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BitpackedMasks(UplinkPayload):
+    """Binary masks, 32 bits -> one uint32 word per leaf.
+
+    words:  pytree mirroring the mask tree; uint32[W] leaves for masked
+            params, None where the model keeps float leaves.
+    floats: optional float sidecar (norms/biases FedAvg'd alongside the
+            masks; not counted in the paper's mask Bpp metric).
+    shapes: static original leaf shapes (flatten order) for unpacking.
+    """
+    words: Pytree
+    floats: Pytree
+    shapes: tuple
+
+    def tree_flatten(self):
+        return (self.words, self.floats), self.shapes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux)
+
+    @classmethod
+    def from_masks(cls, masks: Pytree, floats: Pytree = None
+                   ) -> "BitpackedMasks":
+        words = jax.tree_util.tree_map(
+            lambda m: None if m is None else pack_leaf(m),
+            masks, is_leaf=_NONE)
+        return cls(words, floats, _leaf_shapes(masks))
+
+    def to_masks(self) -> Pytree:
+        it = iter(self.shapes)
+        return jax.tree_util.tree_map(
+            lambda w: None if w is None else aggregation.unpack_bits(
+                w, _prod(sh := next(it))).reshape(sh),
+            self.words, is_leaf=_NONE)
+
+    def num_params(self) -> int:
+        return sum(_prod(sh) for sh in self.shapes)
+
+    def wire_bits(self) -> int:
+        return sum(32 * ((_prod(sh) + 31) // 32) for sh in self.shapes)
+
+    def bpp(self) -> jax.Array:
+        """Empirical entropy of the transmitted bits (eq. 13).
+
+        Padding bits are zeros and never reach ``ones``; ``n`` counts
+        real parameters only, so this matches the unpacked-mask entropy
+        exactly.
+        """
+        ones = jnp.float32(0.0)
+        for w in jax.tree_util.tree_leaves(self.words, is_leaf=_NONE):
+            if w is not None:
+                ones = ones + _popcount_sum(w)
+        n = self.num_params()
+        if n == 0:
+            return jnp.float32(0.0)
+        return regularizer.binary_entropy(ones / jnp.float32(n))
+
+    def as_path_dict(self) -> dict:
+        """{path: (uint32 words, original shape)} — the artifact layout
+        `repro.ckpt.save_artifact` persists."""
+        out, it = {}, iter(self.shapes)
+        for path, w in masking.leaves_with_paths(self.words):
+            if w is None:
+                continue
+            out[path] = (w, next(it))
+        return out
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SignVotes(UplinkPayload):
+    """Bitpacked gradient signs (MV-SignSGD): exactly 1 bit/param.
+
+    The wire has no zero symbol: a sign of exactly 0 serializes as -1.
+    Senders with meaningful zero gradients must tie-break before
+    packing (the registered `mv_signsgd` flips an unbiased coin) or
+    the missing symbol becomes a systematic negative vote.
+    """
+    words: Pytree
+    shapes: tuple
+
+    def tree_flatten(self):
+        return (self.words,), self.shapes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+    @classmethod
+    def from_signs(cls, signs: Pytree) -> "SignVotes":
+        words = jax.tree_util.tree_map(
+            lambda s: None if s is None else pack_leaf(
+                (s > 0).astype(jnp.uint8)),
+            signs, is_leaf=_NONE)
+        return cls(words, _leaf_shapes(signs))
+
+    def to_signs(self) -> Pytree:
+        it = iter(self.shapes)
+        return jax.tree_util.tree_map(
+            lambda w: None if w is None else
+            (2.0 * aggregation.unpack_bits(
+                w, _prod(sh := next(it))).astype(jnp.float32)
+             - 1.0).reshape(sh),
+            self.words, is_leaf=_NONE)
+
+    def num_params(self) -> int:
+        return sum(_prod(sh) for sh in self.shapes)
+
+    def wire_bits(self) -> int:
+        return sum(32 * ((_prod(sh) + 31) // 32) for sh in self.shapes)
+
+    def bpp(self) -> jax.Array:
+        return jnp.float32(0.0) if self.num_params() == 0 \
+            else jnp.float32(1.0)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FloatDeltas(UplinkPayload):
+    """Raw float tensors (deltas or full params): the dtype width on the
+    wire — 32 Bpp for float32, the reference the paper compresses."""
+    values: Pytree
+    shapes: tuple
+    bits: tuple   # static per-leaf dtype widths, flatten order
+
+    def tree_flatten(self):
+        return (self.values,), (self.shapes, self.bits)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0], aux[1])
+
+    @classmethod
+    def from_tree(cls, values: Pytree) -> "FloatDeltas":
+        return cls(values, _leaf_shapes(values), _float_bits(values))
+
+    def num_params(self) -> int:
+        return sum(_prod(sh) for sh in self.shapes)
+
+    def wire_bits(self) -> int:
+        return sum(_prod(sh) * b for sh, b in zip(self.shapes, self.bits))
+
+    def bpp(self) -> jax.Array:
+        n = self.num_params()
+        if n == 0:
+            return jnp.float32(0.0)
+        return jnp.float32(self.wire_bits() / n)
+
+
+def _prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def batched_packed_mean(payload, weights: jax.Array) -> Pytree:
+    """Weighted mean of K clients' bits, straight from the packed words
+    (eq. 8).  Works for any packed payload exposing `words`/`shapes`
+    (`BitpackedMasks` -> theta, `SignVotes` -> vote fraction).
+    `payload` is engine-batched: every words leaf carries a leading K
+    axis."""
+    it = iter(payload.shapes)
+    return jax.tree_util.tree_map(
+        lambda w: None if w is None else mean_from_words(
+            w, _prod(sh := next(it)), weights).reshape(sh),
+        payload.words, is_leaf=_NONE)
+
+
+def batched_float_mean(tree: Pytree, weights: jax.Array) -> Pytree:
+    """Weighted mean over the leading K axis, dtype-preserving."""
+    return jax.tree_util.tree_map(
+        lambda f: None if f is None else jnp.tensordot(
+            weights, f.astype(jnp.float32), axes=(0, 0)).astype(f.dtype),
+        tree, is_leaf=_NONE)

@@ -1,0 +1,115 @@
+"""The `FedAlgorithm` protocol and the shared round engine.
+
+Every federated algorithm in the repo — the paper's regularized FedPM,
+the FedPM reference, and all Sec.-IV baselines — is expressed as four
+functions plus a payload spec:
+
+    init(key, params_like)              -> state
+    client_update(state, data, key)     -> (UplinkPayload, metrics)
+    aggregate(state, payloads, wn, participation) -> state
+    eval_params(state, key)             -> effective model params
+
+`client_update` is written for ONE client; `run_round` vmaps it over
+the cohort, weights the client metrics by |D_i| x participation
+(eq. 8 with dropped nodes renormalized out), and — crucially — computes
+``uplink_bpp`` once, from the typed payloads, in the transport layer.
+Algorithms cannot report a communication cost their payload doesn't
+serialize.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class PayloadSpec:
+    """Static description of what an algorithm's clients transmit."""
+    cls: type                      # UplinkPayload subclass
+    nominal_bpp: Optional[float]   # None => data-dependent (entropy-coded)
+    description: str = ""
+
+
+@runtime_checkable
+class SupportsFedAlgorithm(Protocol):
+    """Structural protocol — anything with these attributes plugs into
+    `run_round` / the registry (duck-typed; `FedAlgorithm` below is the
+    standard concrete carrier)."""
+    name: str
+    payload_spec: PayloadSpec
+
+    def init(self, key, params_like): ...
+    def client_update(self, state, data, key): ...
+    def aggregate(self, state, payloads, wn, participation): ...
+    def eval_params(self, state, key): ...
+
+
+def run_round(algo: "FedAlgorithm", state, data, participation, sizes,
+              key):
+    """One federated round, algorithm-agnostic.
+
+    data: pytree with leading axes [K, H, ...] (client x local step);
+    participation: bool[K]; sizes: f32[K] (|D_i|).
+    Returns (new_state, metrics) with `uplink_bpp` derived from the
+    payloads' serialized form.
+    """
+    n_clients = participation.shape[0]
+    keys = jax.random.split(key, n_clients)
+    payloads, metrics = jax.vmap(
+        algo.client_update, in_axes=(None, 0, 0))(state, data, keys)
+
+    w = sizes * participation.astype(jnp.float32)
+    wn = w / jnp.maximum(jnp.sum(w), 1e-9)
+
+    new_state = algo.aggregate(state, payloads, wn, participation)
+
+    out = {k: jnp.sum(v * wn) if getattr(v, "ndim", 0) == 1 else v
+           for k, v in metrics.items()}
+    # Transport-layer accounting: one formula for every algorithm.
+    bpps = jax.vmap(lambda p: p.bpp())(payloads)
+    out["uplink_bpp"] = jnp.sum(bpps * wn)
+    return new_state, out
+
+
+class FedAlgorithm:
+    """Concrete carrier for the protocol, plus a jitted `round`.
+
+    `round(state, data, participation, sizes, key)` keeps the legacy
+    host-sim signature so existing sweeps/tests drive any algorithm
+    uniformly.
+    """
+
+    def __init__(self, name: str, *, init: Callable,
+                 client_update: Callable, aggregate: Callable,
+                 eval_params: Callable, payload_spec: PayloadSpec):
+        self.name = name
+        self.init = init
+        self.client_update = client_update
+        self.aggregate = aggregate
+        self.eval_params = eval_params
+        self.payload_spec = payload_spec
+        self._round = jax.jit(
+            lambda state, data, part, sizes, key: run_round(
+                self, state, data, part, sizes, key))
+
+    def round(self, state, data, participation, sizes, key):
+        return self._round(state, data, participation, sizes, key)
+
+    def __repr__(self):
+        return (f"FedAlgorithm({self.name!r}, "
+                f"payload={self.payload_spec.cls.__name__})")
+
+
+def evaluate(algo: FedAlgorithm, state, batch, apply_fn: Callable,
+             metric_fn: Callable, key, n_samples: int = 1):
+    """Mean metric over `n_samples` sampled effective networks."""
+    total = 0.0
+    for i in range(n_samples):
+        eff = algo.eval_params(state, jax.random.fold_in(key, i))
+        total = total + metric_fn(apply_fn(eff, batch), batch)
+    return total / n_samples

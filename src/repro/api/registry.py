@@ -1,0 +1,89 @@
+"""String-keyed algorithm registry.
+
+    from repro import api
+    algo = api.get_algorithm("fedpm_reg", apply_fn, loss_fn,
+                             spec=masking.MaskSpec(), lam=1.0)
+    state = algo.init(key, params_like)
+    state, metrics = algo.round(state, data, participation, sizes, key)
+
+Factories have the uniform signature
+
+    factory(apply_fn, loss_fn, *, spec=None, **hyperparams) -> FedAlgorithm
+
+so sweeps iterate `api.available()` without per-algorithm dispatch.  The
+pod-scale launcher resolves the same names to lowered launch plans
+(`register_launch` / `get_launch_plan`, populated by
+`repro.launch.plans`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+from repro.api.protocol import FedAlgorithm, PayloadSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgorithmEntry:
+    name: str
+    factory: Callable                  # host-sim FedAlgorithm factory
+    payload_spec: PayloadSpec
+    description: str = ""
+
+
+_REGISTRY: Dict[str, AlgorithmEntry] = {}
+_LAUNCH: Dict[str, Callable] = {}
+
+
+def register(name: str, *, payload_spec: PayloadSpec,
+             description: str = ""):
+    """Decorator: register a host-sim algorithm factory under `name`."""
+    def deco(factory: Callable) -> Callable:
+        if name in _REGISTRY:
+            raise ValueError(f"algorithm {name!r} already registered")
+        _REGISTRY[name] = AlgorithmEntry(name, factory, payload_spec,
+                                         description)
+        return factory
+    return deco
+
+
+def get_entry(name: str) -> AlgorithmEntry:
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown algorithm {name!r}; available: "
+            f"{', '.join(available())}")
+    return _REGISTRY[name]
+
+
+def get_algorithm(name: str, apply_fn: Callable, loss_fn: Callable,
+                  **kwargs) -> FedAlgorithm:
+    """Build the named algorithm for a model (`apply_fn`, `loss_fn`).
+
+    kwargs are algorithm hyperparameters (`spec`, `lam`, `lr`, ...);
+    every factory accepts `spec=None` even if it ignores masking.
+    """
+    return get_entry(name).factory(apply_fn, loss_fn, **kwargs)
+
+
+def available() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def register_launch(name: str, plan_factory: Callable) -> None:
+    """Attach a pod-scale launch plan factory to a registered name."""
+    get_entry(name)  # must name a known algorithm
+    _LAUNCH[name] = plan_factory
+
+
+def get_launch_plan(name: str) -> Callable:
+    get_entry(name)
+    if name not in _LAUNCH:
+        raise KeyError(
+            f"algorithm {name!r} has no pod-scale launch plan "
+            f"(launchable: {', '.join(launchable()) or 'none'}; import "
+            f"repro.launch.plans to populate)")
+    return _LAUNCH[name]
+
+
+def launchable() -> tuple:
+    return tuple(sorted(_LAUNCH))

@@ -22,14 +22,23 @@ import jax.numpy as jnp
 Pytree = Any
 
 # ---------------------------------------------------------------------------
-# Bit packing (pure-jnp reference; Pallas variant in repro.kernels.bitpack)
+# Bit packing — the public serialization trio (pure-jnp reference; the
+# Pallas variant lives in repro.kernels.bitpack):
+#
+#     flat, pad = pad_to_words(mask.reshape(-1))   # zero-pad to 32k bits
+#     words     = pack_bits(flat)                  # uint32 words, 32->1
+#     mask_back = unpack_bits(words, mask.size)    # lossless inverse
+#
+# `repro.api.payloads` builds every `BitpackedMasks` uplink through
+# these, and `federated.final_artifact` serializes the deployable
+# artifact with them.
 # ---------------------------------------------------------------------------
 
 
 def pack_bits(mask_flat: jax.Array) -> jax.Array:
     """Pack a flat {0,1} uint8/float vector into uint32 words (little-end).
 
-    Length must be a multiple of 32 (callers pad).
+    Length must be a multiple of 32 (pad with `pad_to_words` first).
     """
     assert mask_flat.ndim == 1 and mask_flat.size % 32 == 0
     bits = mask_flat.astype(jnp.uint32).reshape(-1, 32)
@@ -38,18 +47,29 @@ def pack_bits(mask_flat: jax.Array) -> jax.Array:
 
 
 def unpack_bits(words: jax.Array, n: int) -> jax.Array:
-    """Inverse of pack_bits -> uint8 vector of length n."""
+    """Inverse of pack_bits -> uint8 vector of length n (padding bits
+    beyond n are dropped)."""
     shifts = jnp.arange(32, dtype=jnp.uint32)
     bits = (words[:, None] >> shifts) & jnp.uint32(1)
     return bits.reshape(-1)[:n].astype(jnp.uint8)
 
 
-def _pad32(x: jax.Array):
-    pad = (-x.size) % 32
+def pad_to_words(x: jax.Array, word_bits: int = 32):
+    """Flatten and zero-pad `x` to a multiple of `word_bits` entries.
+
+    Returns (flat_padded, pad_count).  Zero padding is what makes
+    `unpack_bits(pack_bits(...), n)` an exact round trip and keeps
+    entropy accounting honest (pad bits are never counted as params).
+    """
+    pad = (-x.size) % word_bits
+    x = x.reshape(-1)
     if pad:
-        x = jnp.concatenate([x.reshape(-1),
-                             jnp.zeros((pad,), dtype=x.dtype)])
-    return x.reshape(-1), pad
+        x = jnp.concatenate([x, jnp.zeros((pad,), dtype=x.dtype)])
+    return x, pad
+
+
+# Backwards-compatible alias (pre-1.0 private name).
+_pad32 = pad_to_words
 
 
 # ---------------------------------------------------------------------------
@@ -162,7 +182,7 @@ def mask_mean_packed(mask: Pytree, axis_names, use_kernel: bool = False
         if m is None:
             return None
         shape = m.shape
-        flat, _ = _pad32(m.reshape(-1))
+        flat, _ = pad_to_words(m.reshape(-1))
         words = _pack(flat)
         gathered = words
         for a in names:

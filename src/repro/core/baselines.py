@@ -1,294 +1,55 @@
 """Baseline federated algorithms the paper compares against (Sec. IV).
 
-All share one interface so benchmarks sweep them uniformly:
+This module is now a compatibility shim: the implementations moved to
+`repro.api.algorithms`, where every algorithm — including the paper's
+`fedpm_reg` — implements the `FedAlgorithm` protocol (init /
+client_update / aggregate / eval_params + a typed `UplinkPayload`).
+Prefer resolving by name:
 
-    algo.init(key, params_like)                      -> state
-    algo.round(state, data[K,H,...], part, sizes, k) -> (state, metrics)
-    algo.eval_params(state, key)                     -> effective params
+    from repro import api
+    algo = api.get_algorithm("topk", apply_fn, loss_fn, spec=spec,
+                             k_frac=0.3)
+    state = algo.init(key, params_like)
+    state, metrics = algo.round(state, data, part, sizes, key)
 
-metrics always include `uplink_bpp` (bits per parameter actually needed
-on the uplink for this algorithm, using the paper's entropy accounting
-where the payload is binary, or the float width otherwise).
+`metrics["uplink_bpp"]` is computed by the transport layer from the
+payload's serialized bits — 32 for `FloatDeltas` (FedAvg), exactly 1
+for `SignVotes` (MV-SignSGD), and the empirical bit entropy (<= 1) for
+`BitpackedMasks` (FedPM / FedMask / Top-k).
 
-  * FedPM            == repro.core.federated with cfg.lam = 0
-  * Regularized (ours)== repro.core.federated with cfg.lam > 0
-  * FedMask          — deterministic STE-threshold masks        [7]
-  * Top-k            — score top-k% -> 1, rest pruned           [4]
-  * MV-SignSGD       — majority-vote sign compression           [12]
-  * FedAvg           — float weights, the 32-Bpp reference      [1]
+  * FedPM             == get_algorithm("fedpm", ...)
+  * Regularized (ours)== get_algorithm("fedpm_reg", ...)
+  * FedMask           — deterministic STE-threshold masks        [7]
+  * Top-k             — score top-k% -> 1, rest pruned           [4]
+  * MV-SignSGD        — majority-vote sign compression           [12]
+  * FedAvg            — float weights, the 32-Bpp reference      [1]
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple
+from repro.api.protocol import FedAlgorithm as Algorithm  # noqa: F401
+from repro import api as _api
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import masking, regularizer
-from repro.optim import optimizers as optlib
-
-Pytree = Any
-
-
-@dataclasses.dataclass(frozen=True)
-class Algorithm:
-    name: str
-    init: Callable
-    round: Callable
-    eval_params: Callable
-
-
-def _weighted(wn, tree):
-    return jax.tree_util.tree_map(
-        lambda x: None if x is None else jnp.tensordot(
-            wn, x.astype(jnp.float32), axes=(0, 0)).astype(x.dtype),
-        tree, is_leaf=lambda x: x is None)
-
-
-def _part_weights(participation, sizes):
-    w = sizes * participation.astype(jnp.float32)
-    return w / jnp.maximum(jnp.sum(w), 1e-9)
-
-
-# ---------------------------------------------------------------------------
-# FedAvg — the float reference (32 Bpp uplink)
-# ---------------------------------------------------------------------------
+from repro.core import masking
 
 
 def fedavg(apply_fn, loss_fn, lr=0.05, local_steps=3) -> Algorithm:
-    opt = optlib.momentum(lr)
-
-    class State(NamedTuple):
-        params: Pytree
-        round: jax.Array
-
-    def init(key, params_like):
-        # standard float training from the given init template
-        return State(params_like, jnp.zeros((), jnp.int32))
-
-    def client(params, data, key):
-        ostate = opt.init(params)
-
-        def step(carry, batch):
-            p, os = carry
-            loss, g = jax.value_and_grad(
-                lambda pp: loss_fn(apply_fn(pp, batch), batch))(p)
-            upd, os = opt.update(g, os, p)
-            return (optlib.apply_updates(p, upd), os), loss
-
-        (p, _), losses = jax.lax.scan(step, (params, ostate), data)
-        return p, losses[-1]
-
-    vclient = jax.vmap(client, in_axes=(None, 0, 0))
-
-    @jax.jit
-    def round_fn(state, data, participation, sizes, key):
-        keys = jax.random.split(key, participation.shape[0])
-        locals_, losses = vclient(state.params, data, keys)
-        wn = _part_weights(participation, sizes)
-        params = _weighted(wn, locals_)
-        metrics = {"loss": jnp.sum(losses * wn), "uplink_bpp": 32.0,
-                   "sparsity": 0.0}
-        return State(params, state.round + 1), metrics
-
-    return Algorithm("fedavg", init, round_fn,
-                     lambda s, k: s.params)
-
-
-# ---------------------------------------------------------------------------
-# MV-SignSGD — majority-vote sign compression (1 Bpp but float model)
-# ---------------------------------------------------------------------------
+    return _api.get_algorithm("fedavg", apply_fn, loss_fn, lr=lr,
+                              local_steps=local_steps)
 
 
 def mv_signsgd(apply_fn, loss_fn, lr=1e-3, local_steps=3) -> Algorithm:
-    class State(NamedTuple):
-        params: Pytree
-        round: jax.Array
-
-    def init(key, params_like):
-        return State(params_like, jnp.zeros((), jnp.int32))
-
-    def client(params, data, key):
-        # accumulate grad over local batches, send elementwise sign
-        def step(g_acc, batch):
-            loss, g = jax.value_and_grad(
-                lambda pp: loss_fn(apply_fn(pp, batch), batch))(params)
-            return jax.tree_util.tree_map(jnp.add, g_acc, g), loss
-
-        g0 = jax.tree_util.tree_map(
-            lambda p: jnp.zeros_like(p, jnp.float32), params)
-        g, losses = jax.lax.scan(step, g0, data)
-        signs = jax.tree_util.tree_map(jnp.sign, g)
-        return signs, losses[-1]
-
-    vclient = jax.vmap(client, in_axes=(None, 0, 0))
-
-    @jax.jit
-    def round_fn(state, data, participation, sizes, key):
-        keys = jax.random.split(key, participation.shape[0])
-        signs, losses = vclient(state.params, data, keys)
-        wn = _part_weights(participation, sizes)
-        # majority vote: sign of the weighted sum of signs
-        vote = jax.tree_util.tree_map(
-            lambda s: jnp.sign(jnp.tensordot(wn, s, axes=(0, 0))), signs)
-        params = jax.tree_util.tree_map(
-            lambda p, v: (p - lr * v).astype(p.dtype), state.params, vote)
-        metrics = {"loss": jnp.sum(losses * wn), "uplink_bpp": 1.0,
-                   "sparsity": 0.0}
-        return State(params, state.round + 1), metrics
-
-    return Algorithm("mv_signsgd", init, round_fn,
-                     lambda s, k: s.params)
-
-
-# ---------------------------------------------------------------------------
-# Top-k over scores — deterministic sparse mask [4]
-# ---------------------------------------------------------------------------
+    return _api.get_algorithm("mv_signsgd", apply_fn, loss_fn, lr=lr,
+                              local_steps=local_steps)
 
 
 def topk_mask(apply_fn, loss_fn, spec: masking.MaskSpec, k_frac=0.3,
               lr=0.1, local_steps=3) -> Algorithm:
-    """Train scores like FedPM (stochastic STE), but the uplink mask sets
-    the top k% of scores to 1 and prunes the rest (paper Sec. IV)."""
-    opt = optlib.momentum(lr)
-
-    class State(NamedTuple):
-        scores: Pytree
-        floats: Pytree
-        weights: Pytree
-        round: jax.Array
-
-    def init(key, params_like):
-        mp = masking.init_masked(key, params_like, spec)
-        return State(mp.scores, mp.floats, mp.weights,
-                     jnp.zeros((), jnp.int32))
-
-    def _topk(scores):
-        # global top-k over all masked leaves
-        flat = [s.reshape(-1) for s in jax.tree_util.tree_leaves(scores)
-                if s is not None]
-        allv = jnp.concatenate(flat)
-        kth = jnp.quantile(allv, 1.0 - k_frac)
-        return jax.tree_util.tree_map(
-            lambda s: None if s is None else (s >= kth).astype(jnp.uint8),
-            scores, is_leaf=lambda x: x is None)
-
-    def client(weights, floats, scores, data, key):
-        ostate = opt.init(scores)
-
-        def loss_of(sc, batch, k):
-            eff = masking.sample_effective(
-                masking.MaskedParams(weights, sc, floats), k, mode="sample")
-            return loss_fn(apply_fn(eff, batch), batch)
-
-        def step(carry, xs):
-            sc, os = carry
-            batch, k = xs
-            loss, g = jax.value_and_grad(loss_of)(sc, batch, k)
-            upd, os = opt.update(g, os, sc)
-            return (optlib.apply_updates(sc, upd), os), loss
-
-        h = jax.tree_util.tree_leaves(data)[0].shape[0]
-        keys = jax.random.split(key, h)
-        (sc, _), losses = jax.lax.scan(step, (scores, ostate),
-                                       (data, keys))
-        return _topk(sc), losses[-1]
-
-    vclient = jax.vmap(client, in_axes=(None, None, None, 0, 0))
-
-    @jax.jit
-    def round_fn(state, data, participation, sizes, key):
-        keys = jax.random.split(key, participation.shape[0])
-        masks, losses = vclient(state.weights, state.floats, state.scores,
-                                data, keys)
-        wn = _part_weights(participation, sizes)
-        theta = jax.tree_util.tree_map(
-            lambda m: None if m is None else jnp.tensordot(
-                wn, m.astype(jnp.float32), axes=(0, 0)),
-            masks, is_leaf=lambda x: x is None)
-        scores = masking.scores_from_theta(theta)
-        bpp = jax.vmap(regularizer.empirical_entropy)(masks)
-        metrics = {"loss": jnp.sum(losses * wn),
-                   "uplink_bpp": jnp.sum(bpp * wn),
-                   "sparsity": 1.0 - k_frac}
-        return State(scores, state.floats, state.weights,
-                     state.round + 1), metrics
-
-    def eval_params(state, key):
-        mp = masking.MaskedParams(state.weights, state.scores, state.floats)
-        return masking.sample_effective(mp, key, mode="threshold")
-
-    return Algorithm("topk", init, round_fn, eval_params)
-
-
-# ---------------------------------------------------------------------------
-# FedMask — deterministic STE-threshold masking [7]
-# ---------------------------------------------------------------------------
+    return _api.get_algorithm("topk", apply_fn, loss_fn, spec=spec,
+                              k_frac=k_frac, lr=lr,
+                              local_steps=local_steps)
 
 
 def fedmask(apply_fn, loss_fn, spec: masking.MaskSpec, tau=0.5,
             lr=0.1, local_steps=3) -> Algorithm:
-    """Deterministic variant: forward uses m = 1[sigmoid(s) > tau] with
-    STE; uplink is the thresholded mask (the biased-update baseline the
-    paper contrasts with, footnote 3)."""
-    opt = optlib.momentum(lr)
-
-    class State(NamedTuple):
-        scores: Pytree
-        floats: Pytree
-        weights: Pytree
-        round: jax.Array
-
-    def init(key, params_like):
-        mp = masking.init_masked(key, params_like, spec)
-        return State(mp.scores, mp.floats, mp.weights,
-                     jnp.zeros((), jnp.int32))
-
-    def client(weights, floats, scores, data, key):
-        ostate = opt.init(scores)
-
-        def loss_of(sc, batch):
-            eff = masking.sample_effective(
-                masking.MaskedParams(weights, sc, floats), key,
-                mode="threshold", tau=tau)
-            return loss_fn(apply_fn(eff, batch), batch)
-
-        def step(carry, batch):
-            sc, os = carry
-            loss, g = jax.value_and_grad(loss_of)(sc, batch)
-            upd, os = opt.update(g, os, sc)
-            return (optlib.apply_updates(sc, upd), os), loss
-
-        (sc, _), losses = jax.lax.scan(step, (scores, ostate), data)
-        mask = jax.tree_util.tree_map(
-            lambda s: None if s is None else
-            (jax.nn.sigmoid(s) > tau).astype(jnp.uint8),
-            sc, is_leaf=lambda x: x is None)
-        return mask, losses[-1]
-
-    vclient = jax.vmap(client, in_axes=(None, None, None, 0, 0))
-
-    @jax.jit
-    def round_fn(state, data, participation, sizes, key):
-        keys = jax.random.split(key, participation.shape[0])
-        masks, losses = vclient(state.weights, state.floats, state.scores,
-                                data, keys)
-        wn = _part_weights(participation, sizes)
-        theta = jax.tree_util.tree_map(
-            lambda m: None if m is None else jnp.tensordot(
-                wn, m.astype(jnp.float32), axes=(0, 0)),
-            masks, is_leaf=lambda x: x is None)
-        scores = masking.scores_from_theta(theta)
-        bpp = jax.vmap(regularizer.empirical_entropy)(masks)
-        metrics = {"loss": jnp.sum(losses * wn),
-                   "uplink_bpp": jnp.sum(bpp * wn),
-                   "sparsity": jax.vmap(regularizer.sparsity)(masks) @ wn}
-        return State(scores, state.floats, state.weights,
-                     state.round + 1), metrics
-
-    def eval_params(state, key):
-        mp = masking.MaskedParams(state.weights, state.scores, state.floats)
-        return masking.sample_effective(mp, key, mode="threshold", tau=tau)
-
-    return Algorithm("fedmask", init, round_fn, eval_params)
+    return _api.get_algorithm("fedmask", apply_fn, loss_fn, spec=spec,
+                              tau=tau, lr=lr, local_steps=local_steps)

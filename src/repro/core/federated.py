@@ -16,13 +16,12 @@ model at 1000-node scale (see DESIGN.md §5).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import masking, regularizer, aggregation
+from repro.core import masking, regularizer
 from repro.optim import optimizers as optlib
 
 Pytree = Any
@@ -129,56 +128,26 @@ def make_client_update(apply_fn: Callable, loss_fn: Callable,
 
 
 def make_round_fn(apply_fn: Callable, loss_fn: Callable, cfg: FedConfig,
-                  n_clients: int):
+                  n_clients: int = None):
     """Build the jitted full-round function over K vmapped clients.
 
     round_fn(server: ServerState, data: pytree[K, H, ...],
              participation: bool[K], sizes: f32[K], key)
         -> (ServerState, metrics)
+
+    Thin wrapper over the unified `repro.api` engine: the per-client
+    local step is `make_client_update` above, the uplink is a
+    `BitpackedMasks` payload, and aggregation + `uplink_bpp` accounting
+    run in `repro.api.protocol.run_round` — the same code path every
+    registered algorithm uses.  `n_clients` is kept for signature
+    compatibility; the cohort size now comes from `participation`.
     """
-    client = make_client_update(apply_fn, loss_fn, cfg)
-    vclient = jax.vmap(client, in_axes=(None, None, None, 0, 0))
+    from repro.api import algorithms as _algos  # deferred: api -> core
 
-    def round_fn(server: ServerState, data, participation, sizes, key):
-        keys = jax.random.split(key, n_clients)
-        masks, floats, metrics = vclient(
-            server.weights, server.floats, server.theta, data, keys)
-
-        # effective weight per client: |D_i| * participated (eq. 8 with
-        # dropped nodes renormalized out)
-        w = sizes * participation.astype(jnp.float32)
-        wsum = jnp.maximum(jnp.sum(w), 1e-9)
-        wn = w / wsum
-
-        def agg_mask(m):
-            if m is None:
-                return None
-            if cfg.bayesian:
-                ones = jnp.sum(m.astype(jnp.float32)
-                               * wn.reshape((-1,) + (1,) * (m.ndim - 1))
-                               * jnp.sum(participation), axis=0)
-                k = jnp.sum(participation.astype(jnp.float32))
-                return (1.0 + ones) / (2.0 + k)
-            return jnp.tensordot(wn, m.astype(jnp.float32), axes=(0, 0))
-
-        def agg_float(f):
-            if f is None:
-                return None
-            return jnp.tensordot(wn, f.astype(jnp.float32),
-                                 axes=(0, 0)).astype(f.dtype)
-
-        theta = jax.tree_util.tree_map(agg_mask, masks,
-                                       is_leaf=lambda x: x is None)
-        new_floats = jax.tree_util.tree_map(agg_float, floats,
-                                            is_leaf=lambda x: x is None)
-        mmean = {k: jnp.sum(v * wn) if v.ndim == 1 else v
-                 for k, v in metrics.items()}
-        new_server = ServerState(theta=theta, floats=new_floats,
-                                 weights=server.weights, seed=server.seed,
-                                 round=server.round + 1)
-        return new_server, mmean
-
-    return jax.jit(round_fn)
+    algo = _algos._fedpm_family(
+        "fedpm_reg" if cfg.lam > 0 else "fedpm",
+        apply_fn, loss_fn, cfg=cfg)
+    return algo.round
 
 
 def make_eval_fn(apply_fn: Callable, metric_fn: Callable,
@@ -205,15 +174,15 @@ def final_artifact(server: ServerState, key: jax.Array):
     """The deployable artifact: (seed, one bitpacked mask per leaf).
 
     Total size ~ n/8 bytes + 4 — the paper's "SEED + binary mask" claim.
+    The masks are serialized as a `repro.api.payloads.BitpackedMasks`
+    payload (the same type clients put on the uplink), through the
+    public `aggregation.pad_to_words`/`pack_bits` pair.
     """
+    from repro.api import payloads as _plds  # deferred: api -> core
+
     scores = masking.scores_from_theta(server.theta)
     mask = masking.final_mask(
         masking.MaskedParams(server.weights, scores, server.floats), key)
-
-    packed = {}
-    for path, m in masking.leaves_with_paths(mask):
-        if m is None:
-            continue
-        flat, _ = aggregation._pad32(m.reshape(-1))
-        packed[path] = (aggregation.pack_bits(flat), m.shape)
-    return {"seed": server.seed, "masks": packed, "floats": server.floats}
+    payload = _plds.BitpackedMasks.from_masks(mask, server.floats)
+    return {"seed": server.seed, "masks": payload.as_path_dict(),
+            "floats": server.floats}

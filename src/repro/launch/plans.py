@@ -1,0 +1,77 @@
+"""Pod-scale launch plans: registry names -> lowered production steps.
+
+The host-sim registry (`repro.api`) resolves an algorithm name to a
+`FedAlgorithm`; at pod scale the same name resolves — through
+`api.get_launch_plan` — to a `LaunchPlan` bundling the lowered state,
+train step, round step, and batch layout for `repro.launch.train`.
+Importing this module populates the launch side of the registry, so the
+launcher has no per-algorithm if/else: adding an algorithm here makes
+`--algo <name>` work.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.core import masking
+from repro.launch import steps as steplib
+
+
+@dataclasses.dataclass
+class LaunchPlan:
+    """Everything the launcher needs, resolved from one registry name."""
+    name: str
+    state: Any
+    step_fn: Callable                 # (state, batch) -> (state, metrics)
+    round_fn: Optional[Callable]      # (state) -> (state, metrics) | None
+    make_batch: Callable              # (key, tokens, batch, seq) -> batch
+
+
+def _cohort_batch(cohorts: int):
+    def make_batch(key, toks, batch, seq):
+        idx = jax.random.randint(key, (cohorts, batch), 0,
+                                 toks.shape[0] - seq - 1)
+        return {"tokens": jax.vmap(jax.vmap(
+            lambda i: jax.lax.dynamic_slice(toks, (i,), (seq,))))(idx)}
+    return make_batch
+
+
+def _flat_batch(key, toks, batch, seq):
+    idx = jax.random.randint(key, (batch,), 0, toks.shape[0] - seq - 1)
+    return {"tokens": jax.vmap(
+        lambda i: jax.lax.dynamic_slice(toks, (i,), (seq,)))(idx)}
+
+
+def _mask_plan(name, *, force_lam=None):
+    """FedPM-style mask training: cohort-axis state, bitpacked round."""
+    def plan(model_api, scfg: steplib.StepConfig, *, key, cohorts,
+             spec=None, optimizer="momentum") -> LaunchPlan:
+        if force_lam is not None:
+            scfg = dataclasses.replace(scfg, lam=force_lam)
+        spec = masking.MaskSpec() if spec is None else spec
+        state = steplib.init_fed_state(key, model_api, spec, C=cohorts,
+                                       optimizer=optimizer)
+        return LaunchPlan(
+            name=name, state=state,
+            step_fn=jax.jit(steplib.make_train_step(model_api, scfg)),
+            round_fn=jax.jit(steplib.make_round_step(model_api, scfg)),
+            make_batch=_cohort_batch(cohorts))
+    return plan
+
+
+def _fedavg_plan(model_api, scfg: steplib.StepConfig, *, key, cohorts,
+                 spec=None, optimizer="momentum") -> LaunchPlan:
+    state = steplib.init_fedavg_state(key, model_api)
+    return LaunchPlan(
+        name="fedavg", state=state,
+        step_fn=jax.jit(steplib.make_fedavg_step(model_api, scfg)),
+        round_fn=None, make_batch=_flat_batch)
+
+
+api.register_launch("fedpm_reg", _mask_plan("fedpm_reg"))
+api.register_launch("fedpm", _mask_plan("fedpm", force_lam=0.0))
+api.register_launch("fedavg", _fedavg_plan)

@@ -26,6 +26,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.api import payloads as plds
 from repro.core import masking, regularizer, aggregation
 from repro.core.masking import MaskedParams
 from repro.launch import sharding as shd
@@ -257,27 +258,29 @@ def make_round_step(api, cfg: StepConfig, mesh=None, state_sh=None):
 
     def _agg_local(mask_leaf, pod_axis):
         """mask_leaf: (C_local, ...) local uint8 shard. Returns the local
-        theta shard (mean over all cohorts everywhere)."""
+        theta shard (mean over all cohorts everywhere).
+
+        The packed path serializes each cohort's mask with the public
+        `aggregation.pad_to_words`/`pack_bits` pair and reduces through
+        `repro.api.payloads.mean_from_words` — the same transport code
+        the host-sim round engine uses, so the two paths cannot drift.
+        """
         Cl = mask_leaf.shape[0]
         body = mask_leaf.shape[1:]
         flat = mask_leaf.reshape(Cl, -1)
         n = flat.shape[1]
-        pad = (-n) % 32
-        if pad:
-            flat = jnp.concatenate(
-                [flat, jnp.zeros((Cl, pad), flat.dtype)], axis=1)
         if cfg.packed_masks:
-            words = jax.vmap(aggregation.pack_bits)(flat)  # (Cl, W) u32
+            words = jax.vmap(
+                lambda r: aggregation.pack_bits(
+                    aggregation.pad_to_words(r)[0]))(flat)  # (Cl, W) u32
             if pod_axis:
                 words_all = jax.lax.all_gather(words, pod_axis)
                 words_all = words_all.reshape(-1, words.shape[-1])
             else:
                 words_all = words
-            bits = jax.vmap(
-                lambda w: aggregation.unpack_bits(w, n))(words_all)
-            theta = jnp.mean(bits.astype(jnp.float32), axis=0)
+            theta = plds.mean_from_words(words_all, n)
         else:
-            b = jnp.mean(flat[:, :n].astype(jnp.bfloat16), axis=0)
+            b = jnp.mean(flat.astype(jnp.bfloat16), axis=0)
             if pod_axis:
                 b = jax.lax.pmean(b, pod_axis)
             theta = b.astype(jnp.float32)
@@ -323,17 +326,8 @@ def make_round_step(api, cfg: StepConfig, mesh=None, state_sh=None):
             lambda m: None if m is None else jnp.zeros_like(m),
             opt_m, is_leaf=lambda x: x is None)
         # local bpp estimate (same value on every device up to shard
-        # composition; cheap diagnostic)
-        ones = jnp.float32(0.0)
-        tot = 0
-        for m in jax.tree_util.tree_leaves(masks):
-            if m is None:
-                continue
-            ones = ones + jnp.sum(m.astype(jnp.float32))
-            tot += m.size
-        p1 = ones / jnp.maximum(jnp.float32(tot), 1.0)
-        p1 = jnp.clip(p1, 1e-9, 1 - 1e-9)
-        bpp = -(p1 * jnp.log2(p1) + (1 - p1) * jnp.log2(1 - p1))
+        # composition; cheap diagnostic) — the paper's eq. 13 meter
+        bpp = regularizer.empirical_entropy(masks)
         return new_scores, new_floats, new_opt, bpp
 
     def _zero_v(st, out):

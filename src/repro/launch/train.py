@@ -9,7 +9,9 @@ container use --smoke (reduced config, 1 device). Handles:
   * round-boundary mask exchange (the paper's protocol)
   * elastic re-entry: --cohorts may differ across restarts; theta is
     mesh-agnostic so the run continues
-  * fedavg baseline via --algo fedavg (the 32-Bpp reference)
+  * any registered algorithm with a launch plan via --algo (e.g.
+    fedavg, the 32-Bpp reference); names resolve through repro.api —
+    there is no per-algorithm dispatch here
 """
 from __future__ import annotations
 
@@ -19,11 +21,12 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import api as fedapi
 from repro.configs import get_config
-from repro.core import masking
 from repro.models import build_model
 from repro.data import synthetic
 from repro.launch import steps as steplib
+from repro.launch import plans as planlib  # noqa: F401  (registers plans)
 from repro.launch import mesh as meshlib
 from repro.runtime import fault
 from repro import ckpt as ckptlib
@@ -34,7 +37,7 @@ def main(argv=None):
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--algo", default="fedpm_reg",
-                    choices=["fedpm_reg", "fedpm", "fedavg"])
+                    choices=list(fedapi.launchable()))
     ap.add_argument("--lam", type=float, default=1.0)
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--round-every", type=int, default=10)
@@ -51,20 +54,13 @@ def main(argv=None):
     cfg = get_config(args.arch, smoke=args.smoke)
     api = build_model(cfg)
     key = jax.random.PRNGKey(0)
-    lam = args.lam if args.algo == "fedpm_reg" else 0.0
-    scfg = steplib.StepConfig(lam=lam, lr=args.lr,
+    scfg = steplib.StepConfig(lam=args.lam, lr=args.lr,
                               optimizer=args.score_opt)
 
-    if args.algo == "fedavg":
-        state = steplib.init_fedavg_state(key, api)
-        step_fn = jax.jit(steplib.make_fedavg_step(api, scfg))
-        round_fn = None
-    else:
-        state = steplib.init_fed_state(key, api, masking.MaskSpec(),
-                                       C=args.cohorts,
-                                       optimizer=args.score_opt)
-        step_fn = jax.jit(steplib.make_train_step(api, scfg))
-        round_fn = jax.jit(steplib.make_round_step(api, scfg))
+    plan = fedapi.get_launch_plan(args.algo)(
+        api, scfg, key=key, cohorts=args.cohorts,
+        optimizer=args.score_opt)
+    state, step_fn, round_fn = plan.state, plan.step_fn, plan.round_fn
 
     start = 0
     saver = None
@@ -87,18 +83,7 @@ def main(argv=None):
     t0 = time.time()
     for step in range(start, args.steps):
         kd = jax.random.fold_in(key, step)
-        if args.algo == "fedavg":
-            idx = jax.random.randint(kd, (args.batch,), 0,
-                                     toks.shape[0] - args.seq - 1)
-            batch = {"tokens": jax.vmap(
-                lambda i: jax.lax.dynamic_slice(
-                    toks, (i,), (args.seq,)))(idx)}
-        else:
-            idx = jax.random.randint(kd, (args.cohorts, args.batch), 0,
-                                     toks.shape[0] - args.seq - 1)
-            batch = {"tokens": jax.vmap(jax.vmap(
-                lambda i: jax.lax.dynamic_slice(
-                    toks, (i,), (args.seq,))))(idx)}
+        batch = plan.make_batch(kd, toks, args.batch, args.seq)
         state, m = step_fn(state, batch)
         if round_fn is not None and (step + 1) % args.round_every == 0:
             alive = sim.sample_round() if sim is not None else None

@@ -1,0 +1,181 @@
+"""Tests for the unified `repro.api` surface: registry resolution, the
+FedAlgorithm round trip for EVERY registered algorithm, and the typed
+payload layer's serialized-size accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import masking, regularizer
+from repro.models import cnn
+from repro.data import synthetic, partition
+
+KEY = jax.random.PRNGKey(0)
+CFG = cnn.ConvConfig("t", (8, 8), (16,), n_classes=4, img_size=8)
+SPEC = masking.MaskSpec()
+K, H, B = 3, 2, 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    task = synthetic.make_image_task(KEY, n=192, img=8, n_classes=4,
+                                     noise=0.3)
+    params = cnn.init_params(KEY, CFG)
+    apply_fn = lambda p, b: cnn.forward(p, CFG, b["images"])
+    loss_fn = lambda out, b: cnn.ce_loss(out, b)
+    rng = np.random.default_rng(0)
+    cidx = partition.partition_iid(rng, np.asarray(task.y), K)
+    data = synthetic.federated_batches(KEY, task, cidx, K, H, B)
+    sizes = jnp.asarray([len(c) for c in cidx], jnp.float32)
+    return dict(task=task, params=params, apply_fn=apply_fn,
+                loss_fn=loss_fn, data=data, sizes=sizes)
+
+
+def _get(setup, name):
+    return api.get_algorithm(name, setup["apply_fn"], setup["loss_fn"],
+                             spec=SPEC, local_steps=H)
+
+
+def test_registry_lists_all_algorithms():
+    assert set(api.available()) >= {"fedpm_reg", "fedpm", "fedmask",
+                                    "topk", "mv_signsgd", "fedavg"}
+
+
+def test_registry_unknown_name_is_helpful():
+    with pytest.raises(KeyError, match="fedpm_reg"):
+        api.get_algorithm("nope", lambda *a: None, lambda *a: None)
+
+
+def test_payload_specs_match_registry():
+    for name in api.available():
+        entry = api.get_entry(name)
+        assert issubclass(entry.payload_spec.cls, api.UplinkPayload)
+
+
+@pytest.mark.parametrize("name", ["fedpm_reg", "fedpm", "fedmask",
+                                  "topk", "mv_signsgd", "fedavg"])
+def test_full_protocol_roundtrip(setup, name):
+    """init -> client_update -> aggregate -> eval_params on a tiny
+    model, driven by the shared round engine."""
+    algo = _get(setup, name)
+    assert isinstance(algo, api.SupportsFedAlgorithm)
+    st = algo.init(KEY, setup["params"])
+    part = jnp.ones((K,), bool)
+    st, m = algo.round(st, setup["data"], part, setup["sizes"], KEY)
+    assert np.isfinite(float(m["loss"]))
+    assert "uplink_bpp" in m and "sparsity" in m
+    eff = algo.eval_params(st, KEY)
+    out = setup["apply_fn"](eff, {"images": setup["task"].x[:8],
+                                  "labels": setup["task"].y[:8]})
+    assert bool(jnp.all(jnp.isfinite(out)))
+    # payload type matches the spec the registry advertises
+    payload, _ = algo.client_update(
+        st, jax.tree_util.tree_map(lambda x: x[0], setup["data"]), KEY)
+    assert type(payload) is algo.payload_spec.cls
+
+
+@pytest.mark.parametrize("name", ["fedpm_reg", "fedpm", "fedmask",
+                                  "topk", "mv_signsgd", "fedavg"])
+def test_uplink_bpp_derives_from_payload_bits(setup, name):
+    """The engine's reported uplink_bpp must equal the |D_i|-weighted
+    mean of the clients' payload.bpp(), which in turn is tied to the
+    payload's actual serialized bits."""
+    algo = _get(setup, name)
+    st = algo.init(KEY, setup["params"])
+    part = jnp.ones((K,), bool)
+    st2, m = algo.round(st, setup["data"], part, setup["sizes"], KEY)
+
+    keys = jax.random.split(KEY, K)
+    payloads, _ = jax.vmap(algo.client_update, in_axes=(None, 0, 0))(
+        st, setup["data"], keys)
+    wn = setup["sizes"] / jnp.sum(setup["sizes"])
+    bpps = jax.vmap(lambda p: p.bpp())(payloads)
+    np.testing.assert_allclose(float(m["uplink_bpp"]),
+                               float(jnp.sum(bpps * wn)), rtol=1e-5)
+
+    # per-client: bpp is consistent with the serialized representation
+    one = jax.tree_util.tree_map(lambda x: x[0], payloads)
+    n = one.num_params()
+    assert n > 0
+    wire = one.wire_bits()
+    if isinstance(one, api.FloatDeltas):
+        assert wire == 32 * n
+        assert float(one.bpp()) == 32.0
+    elif isinstance(one, api.SignVotes):
+        assert n <= wire < n + 32 * len(one.shapes)  # word padding only
+        assert float(one.bpp()) == 1.0
+    else:
+        assert isinstance(one, api.BitpackedMasks)
+        assert n <= wire < n + 32 * len(one.shapes)
+        # entropy-coded rate of the packed bits, <= 1 and == eq. 13 on
+        # the unpacked masks
+        got = float(one.bpp())
+        assert 0.0 <= got <= 1.0
+        expect = float(regularizer.empirical_entropy(one.to_masks()))
+        np.testing.assert_allclose(got, expect, rtol=1e-5)
+        # serialized words really carry the mask bits
+        back = one.to_masks()
+        leaves = [l for l in jax.tree_util.tree_leaves(
+            back, is_leaf=lambda x: x is None) if l is not None]
+        assert all(l.dtype == jnp.uint8 for l in leaves)
+
+
+def test_bitpacked_masks_roundtrip_exact():
+    mask = {"a": (jax.random.uniform(KEY, (5, 37)) < 0.3
+                  ).astype(jnp.uint8),
+            "b": None,
+            "c": jnp.ones((64,), jnp.uint8)}
+    p = api.BitpackedMasks.from_masks(mask)
+    back = p.to_masks()
+    np.testing.assert_array_equal(np.asarray(back["a"]),
+                                  np.asarray(mask["a"]))
+    np.testing.assert_array_equal(np.asarray(back["c"]),
+                                  np.asarray(mask["c"]))
+    assert back["b"] is None
+    assert p.num_params() == 5 * 37 + 64
+    # wire size: word-aligned bits per leaf
+    assert p.wire_bits() == 32 * ((5 * 37 + 31) // 32) + 64
+
+
+def test_sign_votes_roundtrip_sign_values():
+    signs = {"w": jnp.asarray([1.0, -1.0, -1.0, 1.0] * 16)}
+    p = api.SignVotes.from_signs(signs)
+    back = p.to_signs()
+    np.testing.assert_array_equal(np.asarray(back["w"]),
+                                  np.asarray(signs["w"]))
+    assert float(p.bpp()) == 1.0
+
+
+def test_mean_from_words_matches_unpacked_mean():
+    key = jax.random.PRNGKey(3)
+    bits = (jax.random.uniform(key, (4, 96)) < 0.4).astype(jnp.uint8)
+    from repro.core import aggregation
+    words = jax.vmap(aggregation.pack_bits)(bits)
+    got = api.mean_from_words(words, 96)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.mean(np.asarray(bits, np.float32), 0))
+    w = jnp.asarray([0.5, 0.25, 0.25, 0.0])
+    got_w = api.mean_from_words(words, 96, w)
+    expect = np.tensordot(np.asarray(w),
+                          np.asarray(bits, np.float32), axes=(0, 0))
+    np.testing.assert_allclose(np.asarray(got_w), expect, rtol=1e-6)
+
+
+def test_partial_participation_zeroes_dropped_clients(setup):
+    algo = _get(setup, "fedpm_reg")
+    st = algo.init(KEY, setup["params"])
+    part = jnp.asarray([True, False, True])
+    st, m = algo.round(st, setup["data"], part, setup["sizes"], KEY)
+    for leaf in jax.tree_util.tree_leaves(st.theta):
+        if leaf is None:
+            continue
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+        assert float(jnp.min(leaf)) >= 0 and float(jnp.max(leaf)) <= 1
+
+
+def test_launch_plans_registered():
+    from repro.launch import plans  # noqa: F401 (registers)
+    assert set(api.launchable()) >= {"fedpm_reg", "fedpm", "fedavg"}
+    with pytest.raises(KeyError, match="launch plan"):
+        api.get_launch_plan("fedmask")

@@ -1,0 +1,28 @@
+"""Randomized property sweeps for the bitpack kernels.
+
+Requires `hypothesis` (the `test` extra); the whole module skips
+cleanly when it is absent — tier-1 coverage of the same round trip
+lives in test_kernels.py as fixed-seed cases.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.bitpack import pack_bits, unpack_bits
+
+
+@given(st.integers(0, 2 ** 20), st.integers(1, 64))
+@settings(max_examples=15, deadline=None)
+def test_bitpack_roundtrip_property(seed, words):
+    key = jax.random.PRNGKey(seed % 9973)
+    n = 32 * words
+    m = jax.random.bernoulli(key, 0.5, (n,)).astype(jnp.uint8)
+    pk = pack_bits(m, interpret=True)
+    assert bool(jnp.all(pk == ref.pack_bits(m)))
+    un = unpack_bits(pk, n, interpret=True)
+    assert bool(jnp.all(un == m))

@@ -1,0 +1,66 @@
+"""Randomized property sweeps for the mask-training core.
+
+Requires `hypothesis` (the `test` extra); the module skips cleanly when
+it is absent — fixed-seed versions of the same properties live in
+test_masking.py.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masking, regularizer, aggregation
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.05, 0.95))
+@settings(max_examples=20, deadline=None)
+def test_final_mask_rate_matches_theta(seed, p):
+    key = jax.random.PRNGKey(seed % 1000)
+    n = 20000
+    s = jnp.full((n, 2), masking.logit(jnp.float32(p)))
+    mp = masking.MaskedParams({"w_x": jnp.ones((n, 2))}, {"w_x": s},
+                              {"w_x": None})
+    m = masking.final_mask(mp, key)["w_x"]
+    rate = float(jnp.mean(m.astype(jnp.float32)))
+    assert abs(rate - p) < 0.02
+
+
+@given(st.floats(0.01, 0.99))
+@settings(max_examples=20, deadline=None)
+def test_binary_entropy_concave_max_at_half(p):
+    hp = float(regularizer.binary_entropy(jnp.float32(p)))
+    hhalf = float(regularizer.binary_entropy(jnp.float32(0.5)))
+    assert hp <= hhalf + 1e-6
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(max_examples=20, deadline=None)
+def test_pack_unpack_roundtrip(seed):
+    key = jax.random.PRNGKey(seed % 997)
+    m = jax.random.bernoulli(key, 0.37, (32 * 17,)).astype(jnp.uint8)
+    words = aggregation.pack_bits(m)
+    back = aggregation.unpack_bits(words, m.size)
+    assert bool(jnp.all(back == m))
+
+
+@given(st.integers(0, 10 ** 6), st.sampled_from([4, 8]))
+@settings(max_examples=15, deadline=None)
+def test_theta_quantization_unbiased(seed, bits):
+    """Stochastic DL quantization must be unbiased and bounded."""
+    key = jax.random.PRNGKey(seed % 99991)
+    theta = {"w": jax.random.uniform(key, (4000,))}
+    q = aggregation.quantize_theta(theta, key, bits=bits)
+    dq = aggregation.dequantize_theta(q, bits=bits)["w"]
+    step = 1.0 / ((1 << bits) - 1)
+    assert float(jnp.max(jnp.abs(dq - theta["w"]))) <= step + 1e-6
+    errs = []
+    for i in range(8):
+        qi = aggregation.quantize_theta(
+            theta, jax.random.fold_in(key, i), bits=bits)
+        errs.append(aggregation.dequantize_theta(qi, bits=bits)["w"]
+                    - theta["w"])
+    mean_err = float(jnp.mean(jnp.stack(errs)))
+    assert abs(mean_err) < step / 4

@@ -1,0 +1,24 @@
+"""Randomized property sweeps for the optimizer library.
+
+Requires `hypothesis`; skips cleanly when it is absent — a fixed-grid
+version lives in test_optim.py.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import optimizers as optlib
+
+
+@given(st.integers(1, 500))
+@settings(max_examples=10, deadline=None)
+def test_warmup_cosine_schedule_monotone_warmup(total):
+    sched = optlib.warmup_cosine(1.0, warmup=10, total_steps=total + 10)
+    vals = [float(sched(jnp.asarray(s))) for s in range(10)]
+    assert all(vals[i] <= vals[i + 1] + 1e-6 for i in range(9))
+    assert abs(vals[-1] - 1.0) < 0.12
+    end = float(sched(jnp.asarray(total + 9)))
+    assert end <= 1.0
