@@ -59,18 +59,24 @@ def make_setup(dataset: str, k: int, c: int | None, seed: int = 0,
 
 def run_algorithm(setup, name: str, rounds: int, *, local_steps=3,
                   batch=32, seed=0, participation=None, eval_samples=2,
-                  **algo_kw):
+                  codec=None, **algo_kw):
     """Sweep any registered algorithm by name through the unified
-    round engine.  Returns per-round dict lists (acc, bpp, sparsity,
-    loss) and the final state; `bpp` is the transport layer's
-    payload-derived `uplink_bpp`."""
+    round engine.  Returns per-round dict lists and the final state:
+    `bpp` is the eq. 13 entropy bound, `bpp_measured` the wire rate the
+    round's codec actually achieves, and `cumulative_uplink_mb` /
+    `cumulative_downlink_mb` the CommLedger trajectory — the paper's
+    accuracy-vs-communication x-axis.  The final ledger snapshot rides
+    along as `hist["ledger"]`."""
     key = jax.random.PRNGKey(seed)
     algo = api.get_algorithm(name, setup["apply_fn"], setup["loss_fn"],
                              spec=SPEC, local_steps=local_steps,
-                             **algo_kw)
+                             codec=codec, **algo_kw)
     st = algo.init(key, setup["params"])
     sizes = jnp.asarray([len(ci) for ci in setup["cidx"]], jnp.float32)
-    hist = {"acc": [], "bpp": [], "sparsity": [], "loss": []}
+    ledger = api.CommLedger()
+    hist = {"acc": [], "bpp": [], "bpp_measured": [], "sparsity": [],
+            "loss": [], "cumulative_uplink_mb": [],
+            "cumulative_downlink_mb": []}
     for r in range(rounds):
         kr = jax.random.fold_in(key, r)
         data = synthetic.federated_batches(
@@ -79,12 +85,17 @@ def run_algorithm(setup, name: str, rounds: int, *, local_steps=3,
         part = (jnp.ones((setup["k"],), bool) if participation is None
                 else participation(r))
         st, m = algo.round(st, data, part, sizes, kr)
+        ledger.update(m)
         hist["bpp"].append(float(m["uplink_bpp"]))
+        hist["bpp_measured"].append(float(m["uplink_bpp_measured"]))
         hist["sparsity"].append(float(m.get("sparsity", 0.0)))
         hist["loss"].append(float(m["loss"]))
+        hist["cumulative_uplink_mb"].append(ledger.uplink_mb)
+        hist["cumulative_downlink_mb"].append(ledger.downlink_mb)
         hist["acc"].append(float(api.evaluate(
             algo, st, setup["test"], setup["apply_fn"],
             setup["metric_fn"], kr, n_samples=eval_samples)))
+    hist["ledger"] = ledger.as_dict()
     return hist, st
 
 

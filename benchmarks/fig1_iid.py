@@ -1,7 +1,10 @@
 """Paper Fig. 1: IID — validation accuracy & average Bpp vs rounds,
 FedPM vs FedPM+regularization (lambda=1), three datasets.
 
-Prints CSV: dataset,algo,round,acc,bpp,sparsity
+Accuracy is also tracked against the CommLedger's cumulative two-way
+traffic (accuracy-vs-MB, the paper's communication x-axis).
+
+Prints CSV: dataset,algo,round,acc,bpp,bpp_measured,sparsity,cum_mb
 """
 from __future__ import annotations
 
@@ -13,7 +16,7 @@ from benchmarks import common
 def main(rounds: int = 12, k: int = 10, datasets=None):
     datasets = datasets or ["mnist-like", "cifar10-like",
                             "cifar100-like"]
-    print("dataset,algo,round,acc,bpp,sparsity")
+    print("dataset,algo,round,acc,bpp,bpp_measured,sparsity,cum_mb")
     summary = []
     for ds in datasets:
         setup = common.make_setup(ds, k=k, c=None)
@@ -27,20 +30,28 @@ def main(rounds: int = 12, k: int = 10, datasets=None):
                                            optimizer="adam",
                                            float_lr=1e-3, **kw)
             for r in range(rounds):
+                cum = (hist["cumulative_uplink_mb"][r]
+                       + hist["cumulative_downlink_mb"][r])
                 print(f"{ds},{name},{r},{hist['acc'][r]:.4f},"
-                      f"{hist['bpp'][r]:.4f},{hist['sparsity'][r]:.4f}")
-            summary.append((ds, name, hist["acc"][-1], hist["bpp"][-1]))
-    print("# summary: dataset algo final_acc final_bpp", file=sys.stderr)
+                      f"{hist['bpp'][r]:.4f},"
+                      f"{hist['bpp_measured'][r]:.4f},"
+                      f"{hist['sparsity'][r]:.4f},{cum:.4f}")
+            summary.append((ds, name, hist["acc"][-1], hist["bpp"][-1],
+                            hist["ledger"]))
+    print("# summary: dataset algo final_acc final_bpp cum_mb",
+          file=sys.stderr)
     gains = {}
-    for ds, name, acc, bpp in summary:
-        print(f"# {ds:14s} {name:10s} acc={acc:.3f} bpp={bpp:.3f}",
+    for ds, name, acc, bpp, ledger in summary:
+        print(f"# {ds:14s} {name:10s} acc={acc:.3f} bpp={bpp:.3f} "
+              f"up={ledger['cumulative_uplink_mb']:.3f}MB "
+              f"down={ledger['cumulative_downlink_mb']:.3f}MB",
               file=sys.stderr)
-        gains.setdefault(ds, {})[name] = (acc, bpp)
+        gains.setdefault(ds, {})[name] = dict(acc=acc, bpp=bpp, **ledger)
     for ds, g in gains.items():
         for variant in ("fedpm+reg", "fedpm+reg4"):
             if variant in g and "fedpm" in g:
-                dbpp = g["fedpm"][1] - g[variant][1]
-                dacc = g["fedpm"][0] - g[variant][0]
+                dbpp = g["fedpm"]["bpp"] - g[variant]["bpp"]
+                dacc = g["fedpm"]["acc"] - g[variant]["acc"]
                 print(f"# {ds} {variant}: Bpp saved={dbpp:+.3f}, "
                       f"acc delta={-dacc:+.3f} (paper trend: reg saves "
                       "Bpp at ~0 acc cost; grows with rounds/lambda)",

@@ -1,7 +1,7 @@
 """Paper Fig. 2: non-IID (c classes/device) accuracy/Bpp trade-off over
 lambda, vs Top-k and MV-SignSGD baselines.
 
-Prints CSV: dataset,algo,round,acc,bpp
+Prints CSV: dataset,algo,round,acc,bpp,bpp_measured,cum_up_mb,cum_down_mb
 """
 from __future__ import annotations
 
@@ -11,7 +11,8 @@ from benchmarks import common
 
 
 def main(rounds: int = 12, k: int = 10, c: int = 2):
-    print("dataset,algo,round,acc,bpp")
+    print("dataset,algo,round,acc,bpp,bpp_measured,cum_up_mb,"
+          "cum_down_mb")
     out = {}
     for ds in ["mnist-like", "cifar10-like"]:
         setup = common.make_setup(ds, k=k, c=c)
@@ -28,11 +29,17 @@ def main(rounds: int = 12, k: int = 10, c: int = 2):
         for name, hist in runs.items():
             for r in range(rounds):
                 print(f"{ds},{name},{r},{hist['acc'][r]:.4f},"
-                      f"{hist['bpp'][r]:.4f}")
+                      f"{hist['bpp'][r]:.4f},"
+                      f"{hist['bpp_measured'][r]:.4f},"
+                      f"{hist['cumulative_uplink_mb'][r]:.4f},"
+                      f"{hist['cumulative_downlink_mb'][r]:.4f}")
         out[ds] = runs
         for name, hist in runs.items():
+            led = hist["ledger"]
             print(f"# {ds:13s} {name:12s} final acc={hist['acc'][-1]:.3f}"
-                  f" bpp={hist['bpp'][-1]:.3f}", file=sys.stderr)
+                  f" bpp={hist['bpp'][-1]:.3f}"
+                  f" comm={led['cumulative_total_mb']:.3f}MB",
+                  file=sys.stderr)
     return out
 
 

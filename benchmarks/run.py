@@ -5,10 +5,14 @@
   kernels- masked-matmul / bitpack micro-benchmarks
   roofline (separate: python -m benchmarks.roofline dryrun_results.json)
 
-Prints ``name,us_per_call,derived`` CSV blocks per benchmark.
+Prints ``name,us_per_call,derived`` CSV blocks per benchmark and writes
+``bench_results.json`` — wall-clock plus every run's CommLedger
+(cumulative_uplink_mb / cumulative_downlink_mb), so the perf trajectory
+captures communication, not just speed.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
@@ -17,19 +21,33 @@ def main() -> None:
     rounds = int(sys.argv[1]) if len(sys.argv) > 1 else 36
     from benchmarks import fig1_iid, fig2_noniid, kernels_bench
 
+    results = {"rounds": rounds}
+
     print("== kernels ==")
     kernels_bench.main()
 
     print("== fig1 (IID) ==")
     t0 = time.time()
-    fig1_iid.main(rounds=rounds, k=6, datasets=["mnist-like",
-                                                "cifar10-like"])
-    print(f"# fig1 wall: {time.time()-t0:.0f}s", file=sys.stderr)
+    gains = fig1_iid.main(rounds=rounds, k=6, datasets=["mnist-like",
+                                                        "cifar10-like"])
+    results["fig1_wall_s"] = time.time() - t0
+    results["fig1"] = gains
+    print(f"# fig1 wall: {results['fig1_wall_s']:.0f}s", file=sys.stderr)
 
     print("== fig2 (non-IID) ==")
     t0 = time.time()
-    fig2_noniid.main(rounds=max(rounds // 2, 8), k=6, c=2)
-    print(f"# fig2 wall: {time.time()-t0:.0f}s", file=sys.stderr)
+    runs = fig2_noniid.main(rounds=max(rounds // 2, 8), k=6, c=2)
+    results["fig2_wall_s"] = time.time() - t0
+    results["fig2"] = {
+        ds: {name: dict(acc=hist["acc"][-1], bpp=hist["bpp"][-1],
+                        **hist["ledger"])
+             for name, hist in by_algo.items()}
+        for ds, by_algo in runs.items()}
+    print(f"# fig2 wall: {results['fig2_wall_s']:.0f}s", file=sys.stderr)
+
+    with open("bench_results.json", "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print("# wrote bench_results.json", file=sys.stderr)
 
 
 if __name__ == '__main__':

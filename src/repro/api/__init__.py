@@ -2,16 +2,27 @@
 
 One protocol (`FedAlgorithm`: init / client_update / aggregate /
 eval_params + payload_spec), one registry (`register` /
-`get_algorithm`), and typed uplink payloads (`BitpackedMasks`,
-`SignVotes`, `FloatDeltas`) whose serialized size is the single source
-of truth for `uplink_bpp`.  Host-sim sweeps, the benchmarks, the
-examples, and the pod-scale launcher all resolve algorithms here.
+`get_algorithm`), typed payloads in BOTH directions (`BitpackedMasks`,
+`SignVotes`, `FloatDeltas` up; `ProbBroadcast`, `FloatBroadcast` down),
+and pluggable wire codecs (`repro.api.codecs`: `bitpack`, `golomb`,
+`arithmetic`, `signpack`, `float32`) whose REAL serialized size is the
+single source of truth for the measured communication metrics.  The
+`CommLedger` accumulates two-way wire bytes across a whole run.
+Host-sim sweeps, the benchmarks, the examples, and the pod-scale
+launcher all resolve algorithms here.
 """
+from repro.api.codecs import (  # noqa: F401
+    ArithmeticBernoulli, Bitpack32, Codec, CommLedger, Float32Raw,
+    GolombRice, SignPack, WireMessage, get_codec, resolve as
+    resolve_codec)
+from repro.api.codecs import available as available_codecs  # noqa: F401
 from repro.api.payloads import (  # noqa: F401
-    BitpackedMasks, FloatDeltas, SignVotes, UplinkPayload,
-    batched_float_mean, batched_packed_mean, mean_from_words, pack_leaf)
+    BitpackedMasks, DownlinkPayload, FloatBroadcast, FloatDeltas,
+    ProbBroadcast, SignVotes, UplinkPayload, batched_float_mean,
+    batched_packed_mean, mean_from_words, pack_leaf)
 from repro.api.protocol import (  # noqa: F401
-    FedAlgorithm, PayloadSpec, SupportsFedAlgorithm, evaluate, run_round)
+    FedAlgorithm, PayloadSpec, SupportsFedAlgorithm, client_view,
+    evaluate, run_round)
 from repro.api.registry import (  # noqa: F401
     AlgorithmEntry, available, get_algorithm, get_entry,
     get_launch_plan, launchable, register, register_launch)

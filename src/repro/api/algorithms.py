@@ -1,19 +1,22 @@
 """The six federated algorithms, expressed in the `FedAlgorithm`
-protocol with typed uplink payloads.
+protocol with typed payloads in both directions.
 
-  name         payload          uplink Bpp          reference
-  -----------  ---------------  ------------------  ---------------------
-  fedpm_reg    BitpackedMasks   H(p̂) <= 1 (reg'd)   the paper (lam > 0)
-  fedpm        BitpackedMasks   H(p̂) <= 1           Isik et al. [FedPM]
-  fedmask      BitpackedMasks   H(p̂) <= 1           Li et al.   [7]
-  topk         BitpackedMasks   H(p̂) <= 1           top-k scores [4]
-  mv_signsgd   SignVotes        1.0                 Bernstein et al. [12]
-  fedavg       FloatDeltas      32.0                McMahan et al. [1]
+  name         payload          codec       downlink            reference
+  -----------  ---------------  ----------  ------------------  ------------
+  fedpm_reg    BitpackedMasks   arithmetic  ProbBroadcast k=8   the paper
+  fedpm        BitpackedMasks   arithmetic  ProbBroadcast k=8   FedPM
+  fedmask      BitpackedMasks   arithmetic  FloatBroadcast      Li et al.
+  topk         BitpackedMasks   arithmetic  FloatBroadcast      top-k [4]
+  mv_signsgd   SignVotes        signpack    FloatBroadcast      [12]
+  fedavg       FloatDeltas      float32     FloatBroadcast      [1]
 
 Each is a factory `f(apply_fn, loss_fn, *, spec=None, **hp)` registered
-under its name; resolve with `repro.api.get_algorithm`.  The `fedpm*`
-rows reuse `repro.core.federated.make_client_update` (the paper-faithful
-local step), so the host-sim engine and this API cannot diverge.
+under its name; resolve with `repro.api.get_algorithm`.  Every factory
+takes ``codec=`` to swap the wire codec; the fedpm family takes
+``downlink_bits=`` for the k-bit theta broadcast (clients genuinely
+train from the dequantized copy).  The `fedpm*` rows reuse
+`repro.core.federated.make_client_update` (the paper-faithful local
+step), so the host-sim engine and this API cannot diverge.
 """
 from __future__ import annotations
 
@@ -44,12 +47,31 @@ def _default_spec(spec):
 
 MASK_SPEC = PayloadSpec(
     plds.BitpackedMasks, nominal_bpp=None,
-    description="bitpacked binary masks; entropy-coded <= 1 Bpp")
+    description="bitpacked binary masks; entropy-coded <= 1 Bpp",
+    default_codec="arithmetic")
+
+
+def _prob_downlink(bits: int):
+    """Server -> clients: theta over the real k-bit quantized wire
+    (`ProbBroadcast`); clients train from the dequantized copy."""
+    def downlink(state, key):
+        pay = plds.ProbBroadcast.from_theta(state.theta, key, bits=bits,
+                                            floats=state.floats)
+        return pay, state._replace(theta=pay.to_theta())
+    return downlink
+
+
+def _float_downlink(select):
+    """Server -> clients: raw float broadcast (lossless, 32 Bpp)."""
+    def downlink(state, key):
+        return plds.FloatBroadcast.from_tree(select(state)), state
+    return downlink
 
 
 def _fedpm_family(name, apply_fn, loss_fn, *, spec=None, cfg=None,
                   lam=1.0, local_steps=3, lr=0.1, float_lr=0.01,
-                  optimizer="sgd", bayesian=False, train_floats=True):
+                  optimizer="sgd", bayesian=False, train_floats=True,
+                  codec=None, downlink_bits=8):
     spec = _default_spec(spec)
     if cfg is None:
         cfg = federated.FedConfig(
@@ -88,7 +110,8 @@ def _fedpm_family(name, apply_fn, loss_fn, *, spec=None, cfg=None,
 
     return FedAlgorithm(name, init=init, client_update=client_update,
                         aggregate=aggregate, eval_params=eval_params,
-                        payload_spec=MASK_SPEC)
+                        payload_spec=MASK_SPEC, codec=codec,
+                        downlink=_prob_downlink(downlink_bits))
 
 
 @register("fedpm_reg", payload_spec=MASK_SPEC,
@@ -133,10 +156,14 @@ def _mask_aggregate(state, payloads, wn, participation):
                      state.round + 1)
 
 
+_SCORE_DOWNLINK = _float_downlink(
+    lambda s: {"scores": s.scores, "floats": s.floats})
+
+
 @register("fedmask", payload_spec=MASK_SPEC,
           description="deterministic STE-threshold masks")
 def fedmask(apply_fn, loss_fn, *, spec=None, tau=0.5, lr=0.1,
-            local_steps=3):
+            local_steps=3, codec=None):
     """Forward uses m = 1[sigmoid(s) > tau] with STE; the uplink is the
     thresholded mask (the biased-update baseline, paper footnote 3)."""
     spec = _default_spec(spec)
@@ -176,7 +203,8 @@ def fedmask(apply_fn, loss_fn, *, spec=None, tau=0.5, lr=0.1,
     return FedAlgorithm("fedmask", init=_mask_init(spec),
                         client_update=client_update,
                         aggregate=_mask_aggregate,
-                        eval_params=eval_params, payload_spec=MASK_SPEC)
+                        eval_params=eval_params, payload_spec=MASK_SPEC,
+                        codec=codec, downlink=_SCORE_DOWNLINK)
 
 
 # ---------------------------------------------------------------------------
@@ -187,7 +215,7 @@ def fedmask(apply_fn, loss_fn, *, spec=None, tau=0.5, lr=0.1,
 @register("topk", payload_spec=MASK_SPEC,
           description="top-k% scores -> 1, rest pruned")
 def topk(apply_fn, loss_fn, *, spec=None, k_frac=0.3, lr=0.1,
-         local_steps=3):
+         local_steps=3, codec=None):
     """Train scores like FedPM (stochastic STE), but the uplink mask
     sets the global top k% of scores to 1 and prunes the rest."""
     spec = _default_spec(spec)
@@ -235,7 +263,8 @@ def topk(apply_fn, loss_fn, *, spec=None, k_frac=0.3, lr=0.1,
     return FedAlgorithm("topk", init=_mask_init(spec),
                         client_update=client_update,
                         aggregate=_mask_aggregate,
-                        eval_params=eval_params, payload_spec=MASK_SPEC)
+                        eval_params=eval_params, payload_spec=MASK_SPEC,
+                        codec=codec, downlink=_SCORE_DOWNLINK)
 
 
 # ---------------------------------------------------------------------------
@@ -244,7 +273,8 @@ def topk(apply_fn, loss_fn, *, spec=None, k_frac=0.3, lr=0.1,
 
 
 SIGN_SPEC = PayloadSpec(plds.SignVotes, nominal_bpp=1.0,
-                        description="bitpacked gradient signs, 1 Bpp")
+                        description="bitpacked gradient signs, 1 Bpp",
+                        default_codec="signpack")
 
 
 class FloatState(NamedTuple):
@@ -258,7 +288,8 @@ def _float_init(key, params_like):
 
 @register("mv_signsgd", payload_spec=SIGN_SPEC,
           description="majority-vote sign compression")
-def mv_signsgd(apply_fn, loss_fn, *, spec=None, lr=1e-3, local_steps=3):
+def mv_signsgd(apply_fn, loss_fn, *, spec=None, lr=1e-3, local_steps=3,
+               codec=None):
     def client_update(state, data, key):
         # accumulate grad over local batches, send elementwise sign
         def step(g_acc, batch):
@@ -296,7 +327,8 @@ def mv_signsgd(apply_fn, loss_fn, *, spec=None, lr=1e-3, local_steps=3):
     return FedAlgorithm("mv_signsgd", init=_float_init,
                         client_update=client_update, aggregate=aggregate,
                         eval_params=lambda s, k: s.params,
-                        payload_spec=SIGN_SPEC)
+                        payload_spec=SIGN_SPEC, codec=codec,
+                        downlink=_float_downlink(lambda s: s.params))
 
 
 # ---------------------------------------------------------------------------
@@ -305,12 +337,14 @@ def mv_signsgd(apply_fn, loss_fn, *, spec=None, lr=1e-3, local_steps=3):
 
 
 FLOAT_SPEC = PayloadSpec(plds.FloatDeltas, nominal_bpp=32.0,
-                         description="raw float32 deltas, 32 Bpp")
+                         description="raw float32 deltas, 32 Bpp",
+                         default_codec="float32")
 
 
 @register("fedavg", payload_spec=FLOAT_SPEC,
           description="float weight averaging (32-Bpp reference)")
-def fedavg(apply_fn, loss_fn, *, spec=None, lr=0.05, local_steps=3):
+def fedavg(apply_fn, loss_fn, *, spec=None, lr=0.05, local_steps=3,
+           codec=None):
     opt = optlib.momentum(lr)
 
     def client_update(state, data, key):
@@ -340,4 +374,5 @@ def fedavg(apply_fn, loss_fn, *, spec=None, lr=0.05, local_steps=3):
     return FedAlgorithm("fedavg", init=_float_init,
                         client_update=client_update, aggregate=aggregate,
                         eval_params=lambda s, k: s.params,
-                        payload_spec=FLOAT_SPEC)
+                        payload_spec=FLOAT_SPEC, codec=codec,
+                        downlink=_float_downlink(lambda s: s.params))

@@ -1,0 +1,772 @@
+"""Pluggable wire codecs — REAL serialization, measured on the wire.
+
+The payload layer (`repro.api.payloads`) fixes *what* a client
+transmits; this module fixes *how it is coded into words* and what that
+costs, exactly.  A `Codec` turns one `UplinkPayload` into a
+`WireMessage` carrying genuinely serialized uint32 words plus the exact
+bit count, and back:
+
+    msg     = codec.encode(payload)          # host-side, real bytes
+    payload = codec.decode(msg)              # lossless inverse
+    bits    = codec.measure_bits(payload)    # traced twin of encode's
+                                             # size, usable under jit/vmap
+
+`encode`/`decode` run on the host (numpy): variable-length codes cannot
+produce shape-polymorphic arrays under `jax.jit`.  `measure_bits` is the
+jit-safe mirror — the same size formula evaluated with jnp ops (popcount
+over the packed words, no Python loops) — so the round engine reports
+``uplink_bits_measured`` without leaving the compiled step.  For the
+fixed-rate codecs (`Bitpack32`, `SignPack`, `Float32Raw`, `GolombRice`)
+the mirror is bit-exact; for `ArithmeticBernoulli` the encoder pads its
+stream to the measured target, so ``msg.wire_bits`` still equals the
+traced value (float-ulp differences can move it by at most one word).
+
+Binary codecs pool every mask leaf into ONE bitstream with ONE header:
+the eq. 13 entropy bound is computed over the pooled bits, so pooling is
+what lets a real coder approach it without per-leaf header overhead.
+
+    codec                wire format                       rate
+    -------------------  --------------------------------  -------------
+    bitpack   Bitpack32  concatenated bits, 32->1 words    1 Bpp aligned
+    golomb    GolombRice run-length Rice codes of 1-gaps   << 1 sparse
+    arithmetic Arithmetic Bernoulli arithmetic coding       ~H(p) + eps
+    signpack  SignPack   sign bits, 32->1 words            1 Bpp aligned
+    float32   Float32Raw raw IEEE words                    dtype width
+
+`CommLedger` accumulates measured two-way traffic across rounds — the
+SpaFL-style total communication budget the benchmarks plot against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation
+
+Pytree = Any
+
+WORD_BITS = 32
+
+_NONE = lambda x: x is None
+
+
+def _prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def word_align(bits):
+    """Round a bit count up to a whole number of uint32 words (works on
+    Python ints and traced int32 scalars alike)."""
+    return (bits + (WORD_BITS - 1)) // WORD_BITS * WORD_BITS
+
+
+_word_align = word_align
+
+
+def _flatten_opt(tree):
+    """Flatten keeping None leaves in place (None-aware pytrees)."""
+    return jax.tree_util.tree_flatten(tree, is_leaf=_NONE)
+
+
+# ---------------------------------------------------------------------------
+# Host-side bit IO (numpy).  Bit order matches aggregation.pack_bits:
+# bit i of word w is stream position 32*w + i (little-endian in-word).
+# ---------------------------------------------------------------------------
+
+
+class _BitWriter:
+    def __init__(self):
+        self.words: List[int] = []
+        self.pos = 0
+
+    def write_bit(self, b: int) -> None:
+        w, o = divmod(self.pos, WORD_BITS)
+        if w == len(self.words):
+            self.words.append(0)
+        if b:
+            self.words[w] |= 1 << o
+        self.pos += 1
+
+    def write(self, value: int, nbits: int) -> None:
+        for i in range(nbits):
+            self.write_bit((value >> i) & 1)
+
+    def to_array(self, pad_to_bits: Optional[int] = None) -> np.ndarray:
+        total = self.pos if pad_to_bits is None else pad_to_bits
+        if total < self.pos:
+            raise ValueError(
+                f"stream is {self.pos} bits, cannot pad to {total}")
+        nw = (total + WORD_BITS - 1) // WORD_BITS
+        arr = np.zeros((nw,), np.uint32)
+        arr[: len(self.words)] = np.asarray(self.words, np.uint64).astype(
+            np.uint32)
+        return arr
+
+
+class _BitReader:
+    def __init__(self, words: np.ndarray):
+        self.words = np.asarray(words, np.uint32)
+        self.pos = 0
+        self.limit = self.words.size * WORD_BITS
+
+    def read_bit(self) -> int:
+        if self.pos >= self.limit:       # zero padding past the stream
+            return 0
+        w, o = divmod(self.pos, WORD_BITS)
+        self.pos += 1
+        return (int(self.words[w]) >> o) & 1
+
+    def read(self, nbits: int) -> int:
+        v = 0
+        for i in range(nbits):
+            v |= self.read_bit() << i
+        return v
+
+
+def _np_unpack(words: np.ndarray, n: int) -> np.ndarray:
+    shifts = np.arange(WORD_BITS, dtype=np.uint32)
+    bits = (words[:, None] >> shifts) & np.uint32(1)
+    return bits.reshape(-1)[:n].astype(np.uint8)
+
+
+def _np_pack(bits: np.ndarray) -> np.ndarray:
+    pad = (-bits.size) % WORD_BITS
+    if pad:
+        bits = np.concatenate([bits, np.zeros((pad,), bits.dtype)])
+    bits = bits.astype(np.uint32).reshape(-1, WORD_BITS)
+    shifts = np.arange(WORD_BITS, dtype=np.uint32)
+    return (bits << shifts).sum(axis=1, dtype=np.uint64).astype(np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# WireMessage
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class WireMessage:
+    """One client's serialized transmission.
+
+    words:   the coded streams (np.uint32 arrays) — the paper's metered
+             payload (masks / signs / floats).
+    sidecar: raw float side-channel (norm/bias leaves FedAvg'd alongside
+             bitpacked masks), serialized as uint32 views.  Counted in
+             the ledger, excluded from the mask Bpp metric — matching
+             the paper's reporting.
+    meta:    static decode metadata (treedefs, shapes, dtypes, headers).
+    """
+    codec: str
+    payload_cls: type
+    words: List[np.ndarray]
+    sidecar: List[np.ndarray]
+    meta: Dict[str, Any]
+    word_bits: int = WORD_BITS
+
+    @property
+    def wire_bits(self) -> int:
+        return sum(int(w.size) for w in self.words) * self.word_bits
+
+    @property
+    def sidecar_bits(self) -> int:
+        return sum(int(w.size) for w in self.sidecar) * self.word_bits
+
+    @property
+    def total_bits(self) -> int:
+        return self.wire_bits + self.sidecar_bits
+
+
+# ---------------------------------------------------------------------------
+# Sidecar float (de)serialization — shared by every codec
+# ---------------------------------------------------------------------------
+
+
+def _encode_float_tree(tree):
+    leaves, treedef = _flatten_opt(tree)
+    arrays, shapes, dtypes = [], [], []
+    for l in leaves:
+        if l is None:
+            shapes.append(None)
+            dtypes.append(None)
+            continue
+        a = np.asarray(l)
+        shapes.append(a.shape)
+        dtypes.append(a.dtype.str)
+        raw = a.tobytes()
+        raw += b"\x00" * ((-len(raw)) % 4)
+        arrays.append(np.frombuffer(raw, np.uint32).copy())
+    return arrays, {"treedef": treedef, "shapes": tuple(shapes),
+                    "dtypes": tuple(dtypes)}
+
+
+def _decode_float_tree(arrays, meta):
+    it = iter(arrays)
+    leaves = []
+    for sh, dt in zip(meta["shapes"], meta["dtypes"]):
+        if sh is None:
+            leaves.append(None)
+            continue
+        raw = next(it).tobytes()
+        nbytes = _prod(sh) * np.dtype(dt).itemsize
+        leaves.append(jnp.asarray(
+            np.frombuffer(raw[:nbytes], dt).reshape(sh)))
+    return jax.tree_util.tree_unflatten(meta["treedef"], leaves)
+
+
+def float_tree_bits(tree) -> int:
+    """Static serialized size of a float pytree (word-aligned/leaf)."""
+    tot = 0
+    for l in jax.tree_util.tree_leaves(tree, is_leaf=_NONE):
+        if l is None:
+            continue
+        tot += _word_align(l.size * l.dtype.itemsize * 8)
+    return tot
+
+
+# ---------------------------------------------------------------------------
+# Codec protocol
+# ---------------------------------------------------------------------------
+
+
+class Codec:
+    """encode/decode are host-side and lossless; measure_bits is the
+    traced (jit/vmap-safe) size of encode's output for the same
+    payload."""
+
+    name: str = "abstract"
+
+    def accepts(self, payload_cls: type) -> bool:
+        raise NotImplementedError
+
+    def encode(self, payload) -> WireMessage:
+        raise NotImplementedError
+
+    def decode(self, msg: WireMessage):
+        raise NotImplementedError
+
+    def measure_bits(self, payload) -> jax.Array:
+        """Coded wire bits (int32 scalar), excluding the float sidecar."""
+        raise NotImplementedError
+
+    def sidecar_bits(self, payload) -> int:
+        """Static bits of the float side-channel riding along."""
+        floats = getattr(payload, "floats", None)
+        return float_tree_bits(floats) if floats is not None else 0
+
+    def __repr__(self):
+        return f"{type(self).__name__}({self.name!r})"
+
+
+# ---------------------------------------------------------------------------
+# Packed binary codecs (BitpackedMasks / SignVotes)
+# ---------------------------------------------------------------------------
+
+
+def _pooled_bits_np(payload):
+    """Host: concatenate every non-None leaf's bits (padding dropped)."""
+    leaves, treedef = _flatten_opt(payload.words)
+    chunks, it = [], iter(payload.shapes)
+    for w in leaves:
+        if w is None:
+            continue
+        chunks.append(_np_unpack(np.asarray(w), _prod(next(it))))
+    bits = (np.concatenate(chunks) if chunks
+            else np.zeros((0,), np.uint8))
+    return bits, treedef, [w is None for w in leaves]
+
+
+def _packed_meta(payload, treedef, none_mask):
+    floats = getattr(payload, "floats", None)
+    side_arrays, fmeta = _encode_float_tree(floats)
+    return side_arrays, {
+        "words_treedef": treedef,
+        "none_mask": tuple(none_mask),
+        "shapes": payload.shapes,
+        "has_floats": hasattr(payload, "floats"),
+        "floats_meta": fmeta,
+    }
+
+
+def _rebuild_packed(payload_cls, bits: np.ndarray, msg: WireMessage):
+    """Split pooled bits back into per-leaf packed words and rebuild the
+    payload object (the exact form `UplinkPayload` puts on the uplink)."""
+    meta = msg.meta
+    shapes_it = iter(meta["shapes"])
+    leaves, off = [], 0
+    for is_none in meta["none_mask"]:
+        if is_none:
+            leaves.append(None)
+            continue
+        n = _prod(next(shapes_it))
+        leaves.append(jnp.asarray(_np_pack(bits[off:off + n])))
+        off += n
+    words = jax.tree_util.tree_unflatten(meta["words_treedef"], leaves)
+    if meta["has_floats"]:
+        floats = _decode_float_tree(msg.sidecar, meta["floats_meta"])
+        return payload_cls(words, floats, meta["shapes"])
+    return payload_cls(words, meta["shapes"])
+
+
+def _payload_n(payload) -> int:
+    return sum(_prod(sh) for sh in payload.shapes)
+
+
+def _popcount_total(payload) -> jax.Array:
+    """Pooled ones count straight from the packed words (the
+    Pallas-friendly path: `lax.population_count` on uint32 words — the
+    same primitive `repro.kernels.bitpack` lowers; zero unpacking).
+    Padding bits are zeros by construction and never inflate the count.
+    """
+    ones = jnp.int32(0)
+    for w in jax.tree_util.tree_leaves(payload.words, is_leaf=_NONE):
+        if w is None:
+            continue
+        ones = ones + jnp.sum(
+            jax.lax.population_count(w).astype(jnp.int32))
+    return ones
+
+
+def _pooled_bits_traced(payload) -> jax.Array:
+    """Traced concatenation of every leaf's bits, padding dropped."""
+    chunks, it = [], iter(payload.shapes)
+    for w in jax.tree_util.tree_leaves(payload.words, is_leaf=_NONE):
+        if w is None:
+            continue
+        chunks.append(aggregation.unpack_bits(w, _prod(next(it))))
+    if not chunks:
+        return jnp.zeros((0,), jnp.uint8)
+    return jnp.concatenate(chunks)
+
+
+class _PackedCodec(Codec):
+    def accepts(self, payload_cls: type) -> bool:
+        from repro.api import payloads as plds
+        return issubclass(payload_cls,
+                          (plds.BitpackedMasks, plds.SignVotes))
+
+    def measure_pooled_bits(self, bits: jax.Array) -> jax.Array:
+        """Traced wire size for ONE client's pooled {0,1} vector — the
+        primitive the pod-scale round step vmaps over cohorts."""
+        raise NotImplementedError
+
+    def measure_bits(self, payload) -> jax.Array:
+        return self.measure_pooled_bits(_pooled_bits_traced(payload))
+
+
+class Bitpack32(_PackedCodec):
+    """The paper's artifact format: pooled bits, 32 -> 1 uint32 words.
+
+    Exactly `align32(n)` bits — the word-aligned 1 Bpp reference every
+    entropy coder is measured against.
+    """
+
+    name = "bitpack"
+
+    def encode(self, payload) -> WireMessage:
+        bits, treedef, none_mask = _pooled_bits_np(payload)
+        side, meta = _packed_meta(payload, treedef, none_mask)
+        return WireMessage(self.name, type(payload), [_np_pack(bits)],
+                           side, meta)
+
+    def decode(self, msg: WireMessage):
+        n = sum(_prod(sh) for sh in msg.meta["shapes"])
+        bits = _np_unpack(msg.words[0], n)
+        return _rebuild_packed(msg.payload_cls, bits, msg)
+
+    def measure_pooled_bits(self, bits: jax.Array) -> jax.Array:
+        return jnp.int32(_word_align(bits.shape[0]))
+
+    def measure_bits(self, payload) -> jax.Array:
+        return jnp.int32(_word_align(_payload_n(payload)))
+
+
+class SignPack(Bitpack32):
+    """Bitpack32 with sign semantics (+1 -> 1, -1 -> 0): MV-SignSGD's
+    1-bit wire.  Identical word layout; named separately so the sign
+    payloads advertise their own default."""
+
+    name = "signpack"
+
+
+def _rice_k(n, ones):
+    """Rice parameter from the integer mean gap — pure integer compare
+    chain so numpy and traced jnp agree bit-for-bit."""
+    gbar = (n - ones) // jnp.maximum(ones, 1) if hasattr(ones, "dtype") \
+        else (n - ones) // max(ones, 1)
+    if hasattr(gbar, "dtype"):
+        thresh = jnp.asarray(2 ** np.arange(1, 16), jnp.int32)
+        return jnp.sum((gbar >= thresh).astype(jnp.int32))
+    return int(sum(1 for t in 2 ** np.arange(1, 16) if gbar >= t))
+
+
+class GolombRice(_PackedCodec):
+    """Run-length coding of the gaps between ones, Rice(2^k) per gap.
+
+    Stream: 32-bit header [k:5 | ones:27], then per one-bit the gap g to
+    the previous one as unary(g >> k) + k literal low bits.  Trailing
+    zeros are implicit (the decoder knows n and the ones count).  The
+    codec of choice for very sparse regularized masks where even the
+    arithmetic coder's tables are overkill.
+    """
+
+    name = "golomb"
+
+    _MAX_ONES = (1 << 27) - 1
+
+    def encode(self, payload) -> WireMessage:
+        bits, treedef, none_mask = _pooled_bits_np(payload)
+        side, meta = _packed_meta(payload, treedef, none_mask)
+        n, ones = bits.size, int(bits.sum())
+        if ones > self._MAX_ONES:
+            raise ValueError(f"GolombRice supports < 2^27 ones per "
+                             f"payload, got {ones}")
+        k = _rice_k(n, ones)
+        wr = _BitWriter()
+        wr.write(k | (ones << 5), 32)
+        pos = np.flatnonzero(bits)
+        gaps = np.diff(pos, prepend=-1) - 1
+        for g in gaps:
+            g = int(g)
+            for _ in range(g >> k):
+                wr.write_bit(1)
+            wr.write_bit(0)
+            wr.write(g & ((1 << k) - 1), k)
+        return WireMessage(self.name, type(payload),
+                           [wr.to_array(_word_align(wr.pos))], side, meta)
+
+    def decode(self, msg: WireMessage):
+        n = sum(_prod(sh) for sh in msg.meta["shapes"])
+        rd = _BitReader(msg.words[0])
+        header = rd.read(32)
+        k, ones = header & 31, header >> 5
+        bits = np.zeros((n,), np.uint8)
+        pos = -1
+        for _ in range(ones):
+            q = 0
+            while rd.read_bit():
+                q += 1
+            g = (q << k) | rd.read(k)
+            pos += g + 1
+            bits[pos] = 1
+        return _rebuild_packed(msg.payload_cls, bits, msg)
+
+    def measure_pooled_bits(self, bits: jax.Array) -> jax.Array:
+        bits = bits.astype(jnp.int32)
+        n = bits.shape[0]
+        if n == 0:
+            return jnp.int32(WORD_BITS)
+        ones = jnp.sum(bits)
+        k = _rice_k(jnp.int32(n), ones)
+        pos = jnp.arange(n, dtype=jnp.int32)
+        marked = jnp.where(bits == 1, pos, -1)
+        last = jax.lax.associative_scan(jnp.maximum, marked)
+        prev = jnp.concatenate(
+            [jnp.full((1,), -1, jnp.int32), last[:-1]])
+        gaps = jnp.where(bits == 1, pos - prev - 1, 0)
+        per = jnp.where(bits == 1, (gaps >> k) + 1 + k, 0)
+        return _word_align(jnp.int32(32) + jnp.sum(per))
+
+
+class ArithmeticBernoulli(_PackedCodec):
+    """Bernoulli-prior binary arithmetic coding of the pooled bits —
+    the coder that actually realizes the paper's sub-1-Bpp uplink.
+
+    Stream: 32-bit header [p1 scaled to 16 bits | reserved], then a
+    CACM87-style carry-free arithmetic code of the n bits under the
+    static prior p1.  The size formula (and thus `measure_bits`) is
+    `align32(32 + ceil(n*H(p1q)) + slack)` with a small fixed slack for
+    coder termination and finite-precision rounding; the encoder pads
+    its stream to that target, so measured == wire exactly, and the
+    whole thing sits within a few words of the eq. 13 entropy bound.
+    `measure_bits` needs only a popcount over the packed words.
+    """
+
+    name = "arithmetic"
+
+    _PSCALE = 1 << 16
+    _HALF = 1 << 31
+    _QTR = 1 << 30
+
+    @classmethod
+    def _p1_scaled(cls, ones, n):
+        """Quantized prior, identical formula for np and jnp inputs
+        (IEEE f32 divide/multiply/round are exact matches)."""
+        if hasattr(ones, "dtype") and not isinstance(ones, np.ndarray):
+            p = ones.astype(jnp.float32) / jnp.float32(n)
+            s = jnp.round(p * jnp.float32(cls._PSCALE))
+            return jnp.clip(s.astype(jnp.int32), 1, cls._PSCALE - 1)
+        p = np.float32(ones) / np.float32(n)
+        s = np.round(p * np.float32(cls._PSCALE))
+        return int(np.clip(np.int64(s), 1, cls._PSCALE - 1))
+
+    @classmethod
+    def _target_bits(cls, ones, n, p1c):
+        """Shared size formula: ideal Bernoulli code length + header +
+        termination/rounding slack, word-aligned."""
+        if hasattr(p1c, "dtype") and not isinstance(p1c, np.ndarray):
+            lg = jnp.log2
+            f32 = lambda x: jnp.asarray(x, jnp.float32)
+            ceil, i32 = jnp.ceil, lambda x: x.astype(jnp.int32)
+        else:
+            lg = np.log2
+            f32 = np.float32
+            ceil, i32 = np.ceil, lambda x: int(x)
+        p1 = f32(p1c) / f32(cls._PSCALE)
+        ideal = -(f32(ones) * lg(p1) + f32(n - ones) * lg(1 - p1))
+        slack = 48 + (n >> 13)
+        return _word_align(i32(ceil(ideal)) + 32 + slack)
+
+    def encode(self, payload) -> WireMessage:
+        bits, treedef, none_mask = _pooled_bits_np(payload)
+        side, meta = _packed_meta(payload, treedef, none_mask)
+        n, ones = bits.size, int(bits.sum())
+        wr = _BitWriter()
+        if n == 0:
+            return WireMessage(self.name, type(payload),
+                               [wr.to_array(0)], side, meta)
+        p1c = self._p1_scaled(ones, n)
+        target = int(self._target_bits(ones, n, p1c))
+        wr.write(p1c, 32)
+        self._ac_encode(bits, p1c, wr)
+        if wr.pos > target:  # the slack term guarantees this never fires
+            raise RuntimeError(
+                f"arithmetic stream {wr.pos}b exceeded target {target}b")
+        return WireMessage(self.name, type(payload),
+                           [wr.to_array(target)], side, meta)
+
+    def decode(self, msg: WireMessage):
+        n = sum(_prod(sh) for sh in msg.meta["shapes"])
+        if n == 0:
+            return _rebuild_packed(msg.payload_cls,
+                                   np.zeros((0,), np.uint8), msg)
+        rd = _BitReader(msg.words[0])
+        p1c = rd.read(32) & (self._PSCALE - 1)
+        bits = self._ac_decode(rd, n, p1c)
+        return _rebuild_packed(msg.payload_cls, bits, msg)
+
+    def measure_pooled_bits(self, bits: jax.Array) -> jax.Array:
+        n = bits.shape[0]
+        if n == 0:
+            return jnp.int32(0)
+        return self._measure_from_counts(
+            jnp.sum(bits.astype(jnp.int32)), n)
+
+    def measure_bits(self, payload) -> jax.Array:
+        n = _payload_n(payload)
+        if n == 0:
+            return jnp.int32(0)
+        return self._measure_from_counts(_popcount_total(payload), n)
+
+    def _measure_from_counts(self, ones, n) -> jax.Array:
+        p1c = self._p1_scaled(ones, n)
+        return self._target_bits(ones, jnp.int32(n), p1c)
+
+    # -- CACM87 carry-free coder ------------------------------------------
+
+    @classmethod
+    def _ac_encode(cls, bits: np.ndarray, p1c: int,
+                   wr: _BitWriter) -> None:
+        HALF, QTR = cls._HALF, cls._QTR
+        p0c = cls._PSCALE - p1c
+        lo, hi, pending = 0, (1 << 32) - 1, 0
+
+        def out(b):
+            nonlocal pending
+            wr.write_bit(b)
+            while pending:
+                wr.write_bit(1 - b)
+                pending -= 1
+
+        for b in bits.tolist():
+            span = hi - lo + 1
+            split = lo + ((span * p0c) >> 16) - 1
+            if b:
+                lo = split + 1
+            else:
+                hi = split
+            while True:
+                if hi < HALF:
+                    out(0)
+                elif lo >= HALF:
+                    out(1)
+                    lo -= HALF
+                    hi -= HALF
+                elif lo >= QTR and hi < 3 * QTR:
+                    pending += 1
+                    lo -= QTR
+                    hi -= QTR
+                else:
+                    break
+                lo <<= 1
+                hi = (hi << 1) | 1
+        pending += 1
+        out(0 if lo < QTR else 1)
+
+    @classmethod
+    def _ac_decode(cls, rd: _BitReader, n: int, p1c: int) -> np.ndarray:
+        HALF, QTR = cls._HALF, cls._QTR
+        p0c = cls._PSCALE - p1c
+        lo, hi = 0, (1 << 32) - 1
+        code = 0
+        for _ in range(32):
+            code = (code << 1) | rd.read_bit()
+        bits = np.zeros((n,), np.uint8)
+        for i in range(n):
+            span = hi - lo + 1
+            split = lo + ((span * p0c) >> 16) - 1
+            if code <= split:
+                hi = split
+            else:
+                bits[i] = 1
+                lo = split + 1
+            while True:
+                if hi < HALF:
+                    pass
+                elif lo >= HALF:
+                    lo -= HALF
+                    hi -= HALF
+                    code -= HALF
+                elif lo >= QTR and hi < 3 * QTR:
+                    lo -= QTR
+                    hi -= QTR
+                    code -= QTR
+                else:
+                    break
+                lo <<= 1
+                hi = (hi << 1) | 1
+                code = (code << 1) | rd.read_bit()
+        return bits
+
+
+# ---------------------------------------------------------------------------
+# Float codec (FloatDeltas)
+# ---------------------------------------------------------------------------
+
+
+class Float32Raw(Codec):
+    """Raw IEEE words — the uncompressed reference the paper divides by.
+    Works for any float dtype; the wire is the dtype's own width."""
+
+    name = "float32"
+
+    def accepts(self, payload_cls: type) -> bool:
+        from repro.api import payloads as plds
+        return issubclass(payload_cls, plds.FloatDeltas)
+
+    def encode(self, payload) -> WireMessage:
+        arrays, fmeta = _encode_float_tree(payload.values)
+        meta = {"floats_meta": fmeta, "shapes": payload.shapes,
+                "bits": payload.bits}
+        return WireMessage(self.name, type(payload), arrays, [], meta)
+
+    def decode(self, msg: WireMessage):
+        values = _decode_float_tree(msg.words, msg.meta["floats_meta"])
+        return msg.payload_cls(values, msg.meta["shapes"],
+                               msg.meta["bits"])
+
+    def measure_bits(self, payload) -> jax.Array:
+        tot = 0
+        for sh, b in zip(payload.shapes, payload.bits):
+            tot += _word_align(_prod(sh) * b)
+        # f32, not int32: 32 Bpp on a >=67M-param model overflows int32
+        return jnp.float32(tot)
+
+    def sidecar_bits(self, payload) -> int:
+        return 0
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+CODECS: Dict[str, Codec] = {
+    c.name: c for c in (Bitpack32(), GolombRice(), ArithmeticBernoulli(),
+                        SignPack(), Float32Raw())
+}
+
+
+def available() -> tuple:
+    return tuple(sorted(CODECS))
+
+
+def get_codec(name: str) -> Codec:
+    if name not in CODECS:
+        raise KeyError(f"unknown codec {name!r}; available: "
+                       f"{', '.join(available())}")
+    return CODECS[name]
+
+
+def default_for(payload_cls: type) -> str:
+    from repro.api import payloads as plds
+    if issubclass(payload_cls, plds.SignVotes):
+        return "signpack"
+    if issubclass(payload_cls, plds.BitpackedMasks):
+        return "arithmetic"
+    return "float32"
+
+
+def resolve(codec, payload_spec) -> Codec:
+    """None -> the spec's default; str -> registry; Codec -> itself.
+    Validates the codec can serialize the spec's payload class."""
+    if codec is None:
+        codec = getattr(payload_spec, "default_codec", None) \
+            or default_for(payload_spec.cls)
+    if isinstance(codec, str):
+        codec = get_codec(codec)
+    if not codec.accepts(payload_spec.cls):
+        raise ValueError(
+            f"codec {codec.name!r} cannot serialize "
+            f"{payload_spec.cls.__name__} payloads")
+    return codec
+
+
+# ---------------------------------------------------------------------------
+# CommLedger — cumulative two-way traffic over a whole run
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CommLedger:
+    """Accumulates measured wire bits across rounds, both directions.
+
+    Fed with the round-engine metrics (`uplink_bits_measured`,
+    `downlink_bits`); the benchmarks plot accuracy against
+    `total_mb` — communication as the paper's x-axis, not rounds.
+    MB here is 1e6 bytes.
+    """
+
+    uplink_bits: float = 0.0
+    downlink_bits: float = 0.0
+    rounds: int = 0
+
+    def update(self, metrics: Dict[str, Any]) -> "CommLedger":
+        self.uplink_bits += float(metrics.get("uplink_bits_measured",
+                                              0.0))
+        self.downlink_bits += float(metrics.get("downlink_bits", 0.0))
+        self.rounds += 1
+        return self
+
+    @property
+    def uplink_mb(self) -> float:
+        return self.uplink_bits / 8e6
+
+    @property
+    def downlink_mb(self) -> float:
+        return self.downlink_bits / 8e6
+
+    @property
+    def total_mb(self) -> float:
+        return self.uplink_mb + self.downlink_mb
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"rounds": self.rounds,
+                "cumulative_uplink_mb": self.uplink_mb,
+                "cumulative_downlink_mb": self.downlink_mb,
+                "cumulative_total_mb": self.total_mb}

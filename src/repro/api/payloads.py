@@ -18,7 +18,13 @@ Payloads are registered pytrees, so they flow through ``jax.jit`` /
 ``jax.vmap`` unchanged; static shape metadata rides in the treedef.  The
 round engine (`repro.api.protocol.run_round`) vmaps `client_update` over
 clients and derives the round's ``uplink_bpp`` from the batched payload
-— algorithms never report their own communication cost.
+— algorithms never report their own communication cost.  The actual
+wire format (and the measured Bpp next to the entropy bound) is the
+codec's job: see `repro.api.codecs`.
+
+The server's broadcast is typed too (`DownlinkPayload`): `ProbBroadcast`
+is the stochastic k-bit theta quantization on the real downlink wire,
+`FloatBroadcast` the raw float reference.
 """
 from __future__ import annotations
 
@@ -28,6 +34,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.api import codecs as codecs_lib
 from repro.core import aggregation, masking, regularizer
 
 Pytree = Any
@@ -249,6 +256,112 @@ def _prod(shape) -> int:
     for s in shape:
         out *= int(s)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Downlink payloads — what the SERVER broadcasts each round.
+#
+# The paper meters the uplink only; SpaFL-style two-way budgets need the
+# broadcast counted too.  `run_round` asks the algorithm for one
+# `DownlinkPayload` per round, reports `downlink_bpp`, and feeds the
+# total (wire x participating clients) into the CommLedger.
+# ---------------------------------------------------------------------------
+
+
+class DownlinkPayload:
+    """Interface for one round's server broadcast."""
+
+    def num_params(self) -> int:
+        raise NotImplementedError
+
+    def wire_bits(self) -> int:
+        """Exact serialized size in bits (word-aligned where packed)."""
+        raise NotImplementedError
+
+    def sidecar_bits(self) -> int:
+        """Float side-channel bits riding along (norms/biases)."""
+        return 0
+
+    def bpp(self) -> jax.Array:
+        n = self.num_params()
+        if n == 0:
+            return jnp.float32(0.0)
+        return jnp.float32(self.wire_bits() / n)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ProbBroadcast(DownlinkPayload):
+    """Stochastic k-bit quantization of the server's probability mask —
+    `aggregation.quantize_theta` put on the actual downlink wire.
+
+    q:      uint8/uint16 leaves in [0, 2^bits - 1] (None for float
+            leaves), an unbiased estimator of theta.
+    floats: the FedAvg'd float leaves broadcast alongside (sidecar).
+    bits:   static quantization width.
+    """
+    q: Pytree
+    floats: Pytree
+    bits: int
+
+    def tree_flatten(self):
+        return (self.q, self.floats), self.bits
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux)
+
+    @classmethod
+    def from_theta(cls, theta: Pytree, key, bits: int = 8,
+                   floats: Pytree = None) -> "ProbBroadcast":
+        return cls(aggregation.quantize_theta(theta, key, bits=bits),
+                   floats, bits)
+
+    def to_theta(self) -> Pytree:
+        """What the clients actually receive (dequantized)."""
+        return aggregation.dequantize_theta(self.q, bits=self.bits)
+
+    def num_params(self) -> int:
+        return sum(l.size for l in jax.tree_util.tree_leaves(
+            self.q, is_leaf=_NONE) if l is not None)
+
+    def wire_bits(self) -> int:
+        tot = 0
+        for l in jax.tree_util.tree_leaves(self.q, is_leaf=_NONE):
+            if l is None:
+                continue
+            tot += codecs_lib.word_align(l.size * self.bits)
+        return tot
+
+    def sidecar_bits(self) -> int:
+        return codecs_lib.float_tree_bits(self.floats)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FloatBroadcast(DownlinkPayload):
+    """Raw float broadcast (server params / scores): the dtype width on
+    the wire — the 32-Bpp downlink reference."""
+    values: Pytree
+    shapes: tuple
+    bits: tuple
+
+    def tree_flatten(self):
+        return (self.values,), (self.shapes, self.bits)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0], aux[1])
+
+    @classmethod
+    def from_tree(cls, values: Pytree) -> "FloatBroadcast":
+        return cls(values, _leaf_shapes(values), _float_bits(values))
+
+    def num_params(self) -> int:
+        return sum(_prod(sh) for sh in self.shapes)
+
+    def wire_bits(self) -> int:
+        return sum(_prod(sh) * b for sh, b in zip(self.shapes, self.bits))
 
 
 def batched_packed_mean(payload, weights: jax.Array) -> Pytree:

@@ -11,18 +11,31 @@ functions plus a payload spec:
 
 `client_update` is written for ONE client; `run_round` vmaps it over
 the cohort, weights the client metrics by |D_i| x participation
-(eq. 8 with dropped nodes renormalized out), and — crucially — computes
-``uplink_bpp`` once, from the typed payloads, in the transport layer.
+(eq. 8 with dropped nodes renormalized out), and — crucially — performs
+ALL communication accounting in the transport layer:
+
+  * the server broadcast goes through the algorithm's `downlink`
+    (`ProbBroadcast` quantizes theta to k bits on the real wire;
+    clients see the dequantized copy), reported as ``downlink_bpp`` /
+    ``downlink_bits``;
+  * every uplink payload is metered by the round's `Codec`
+    (`repro.api.codecs`): ``uplink_bpp`` stays the eq. 13 entropy lower
+    bound, ``uplink_bpp_measured`` / ``uplink_bits_measured`` are what
+    the codec actually puts on the wire.
+
 Algorithms cannot report a communication cost their payload doesn't
 serialize.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+
+from repro.api import codecs as codecs_lib
 
 Pytree = Any
 
@@ -33,6 +46,7 @@ class PayloadSpec:
     cls: type                      # UplinkPayload subclass
     nominal_bpp: Optional[float]   # None => data-dependent (entropy-coded)
     description: str = ""
+    default_codec: Optional[str] = None  # repro.api.codecs name
 
 
 @runtime_checkable
@@ -49,21 +63,43 @@ class SupportsFedAlgorithm(Protocol):
     def eval_params(self, state, key): ...
 
 
+def client_view(algo, state, key):
+    """What the clients receive this round: the state after the server
+    broadcast went over the (possibly quantized) downlink wire.
+    Returns (downlink_payload | None, client_state)."""
+    downlink = getattr(algo, "downlink", None)
+    if downlink is None:
+        return None, state
+    return downlink(state, jax.random.fold_in(key, 0x0d0e))
+
+
 def run_round(algo: "FedAlgorithm", state, data, participation, sizes,
-              key):
+              key, codec=None):
     """One federated round, algorithm-agnostic.
 
     data: pytree with leading axes [K, H, ...] (client x local step);
     participation: bool[K]; sizes: f32[K] (|D_i|).
-    Returns (new_state, metrics) with `uplink_bpp` derived from the
-    payloads' serialized form.
+    Returns (new_state, metrics).  All communication metrics come from
+    the transport layer: `uplink_bpp` (entropy bound) and
+    `uplink_bpp_measured` / `uplink_bits_measured` (the codec's real
+    wire size) from the typed payloads, `downlink_bpp` /
+    `downlink_bits` from the server broadcast.
     """
+    if codec is None:
+        codec = getattr(algo, "codec", None)
     n_clients = participation.shape[0]
+    pf = participation.astype(jnp.float32)
+    n_part = jnp.sum(pf)
+
+    # -- downlink: server -> clients over the real broadcast wire -------
+    dl_payload, client_state = client_view(algo, state, key)
+
     keys = jax.random.split(key, n_clients)
     payloads, metrics = jax.vmap(
-        algo.client_update, in_axes=(None, 0, 0))(state, data, keys)
+        algo.client_update, in_axes=(None, 0, 0))(client_state, data,
+                                                  keys)
 
-    w = sizes * participation.astype(jnp.float32)
+    w = sizes * pf
     wn = w / jnp.maximum(jnp.sum(w), 1e-9)
 
     new_state = algo.aggregate(state, payloads, wn, participation)
@@ -73,6 +109,22 @@ def run_round(algo: "FedAlgorithm", state, data, participation, sizes,
     # Transport-layer accounting: one formula for every algorithm.
     bpps = jax.vmap(lambda p: p.bpp())(payloads)
     out["uplink_bpp"] = jnp.sum(bpps * wn)
+    if codec is not None:
+        n_params = max(payloads.num_params(), 1)
+        bits, side = jax.vmap(lambda p: (
+            codec.measure_bits(p),
+            jnp.int32(codec.sidecar_bits(p))))(payloads)
+        bits = bits.astype(jnp.float32)
+        side = side.astype(jnp.float32)
+        out["uplink_bpp_measured"] = jnp.sum(bits * wn) / n_params
+        out["uplink_bits_measured"] = jnp.sum((bits + side) * pf)
+    if dl_payload is not None:
+        out["downlink_bpp"] = dl_payload.bpp()
+        out["downlink_bits"] = jnp.float32(
+            dl_payload.wire_bits() + dl_payload.sidecar_bits()) * n_part
+    else:
+        out["downlink_bpp"] = jnp.float32(0.0)
+        out["downlink_bits"] = jnp.float32(0.0)
     return new_state, out
 
 
@@ -81,28 +133,52 @@ class FedAlgorithm:
 
     `round(state, data, participation, sizes, key)` keeps the legacy
     host-sim signature so existing sweeps/tests drive any algorithm
-    uniformly.
+    uniformly.  The old state is DONATED to the round step (the buffers
+    are reused in place where the backend supports it — at pod scale
+    this halves peak state memory), so callers must not touch a state
+    pytree after passing it to `round`; use the returned one.
+
+    `codec` (name or `repro.api.codecs.Codec`) picks the wire codec the
+    round engine meters uplinks with; defaults to the payload spec's
+    `default_codec`.  `downlink` is the per-round server broadcast:
+    fn(state, key) -> (DownlinkPayload, client_state).
     """
 
     def __init__(self, name: str, *, init: Callable,
                  client_update: Callable, aggregate: Callable,
-                 eval_params: Callable, payload_spec: PayloadSpec):
+                 eval_params: Callable, payload_spec: PayloadSpec,
+                 codec=None, downlink: Optional[Callable] = None):
         self.name = name
-        self.init = init
+        # The state must own its buffers: `round` donates them, and an
+        # init that aliases the caller's params template (float leaves
+        # commonly do) would otherwise delete the caller's arrays.
+        self.init = lambda key, params_like: jax.tree_util.tree_map(
+            lambda x: None if x is None else jnp.array(x),
+            init(key, params_like), is_leaf=lambda x: x is None)
         self.client_update = client_update
         self.aggregate = aggregate
         self.eval_params = eval_params
         self.payload_spec = payload_spec
+        self.codec = codecs_lib.resolve(codec, payload_spec)
+        self.downlink = downlink
         self._round = jax.jit(
             lambda state, data, part, sizes, key: run_round(
-                self, state, data, part, sizes, key))
+                self, state, data, part, sizes, key),
+            donate_argnums=0)
 
     def round(self, state, data, participation, sizes, key):
-        return self._round(state, data, participation, sizes, key)
+        with warnings.catch_warnings():
+            # CPU backends don't implement donation; the per-lowering
+            # warning is expected there and only for THIS call site
+            warnings.filterwarnings(
+                "ignore",
+                message="Some donated buffers were not usable")
+            return self._round(state, data, participation, sizes, key)
 
     def __repr__(self):
         return (f"FedAlgorithm({self.name!r}, "
-                f"payload={self.payload_spec.cls.__name__})")
+                f"payload={self.payload_spec.cls.__name__}, "
+                f"codec={self.codec.name!r})")
 
 
 def evaluate(algo: FedAlgorithm, state, batch, apply_fn: Callable,

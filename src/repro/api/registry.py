@@ -10,7 +10,11 @@ Factories have the uniform signature
 
     factory(apply_fn, loss_fn, *, spec=None, **hyperparams) -> FedAlgorithm
 
-so sweeps iterate `api.available()` without per-algorithm dispatch.  The
+so sweeps iterate `api.available()` without per-algorithm dispatch.
+Every factory also accepts ``codec=`` (a `repro.api.codecs` name or
+instance) to override the payload spec's default wire codec — e.g.
+``get_algorithm("fedpm_reg", ..., codec="golomb")`` — and the mask
+family accepts ``downlink_bits=`` for the k-bit theta broadcast.  The
 pod-scale launcher resolves the same names to lowered launch plans
 (`register_launch` / `get_launch_plan`, populated by
 `repro.launch.plans`).

@@ -54,7 +54,13 @@ def init_server(key: jax.Array, params_like: Pytree,
         lambda s: None if s is None else jax.nn.sigmoid(
             s.astype(jnp.float32)),
         mp.scores, is_leaf=lambda x: x is None)
-    return ServerState(theta=theta, floats=mp.floats, weights=mp.weights,
+    # init_masked keeps the template's float leaves verbatim; copy them
+    # so the round step (which donates its input state) can never delete
+    # the caller's own params arrays
+    floats = jax.tree_util.tree_map(
+        lambda f: None if f is None else jnp.array(f), mp.floats,
+        is_leaf=lambda x: x is None)
+    return ServerState(theta=theta, floats=floats, weights=mp.weights,
                        seed=seed, round=jnp.zeros((), jnp.int32))
 
 

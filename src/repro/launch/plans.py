@@ -47,9 +47,11 @@ def _flat_batch(key, toks, batch, seq):
 
 
 def _mask_plan(name, *, force_lam=None):
-    """FedPM-style mask training: cohort-axis state, bitpacked round."""
+    """FedPM-style mask training: cohort-axis state, bitpacked round.
+    `codec` picks the wire codec the round step meters uplinks with
+    (`--codec` in `repro.launch.train`)."""
     def plan(model_api, scfg: steplib.StepConfig, *, key, cohorts,
-             spec=None, optimizer="momentum") -> LaunchPlan:
+             spec=None, optimizer="momentum", codec=None) -> LaunchPlan:
         if force_lam is not None:
             scfg = dataclasses.replace(scfg, lam=force_lam)
         spec = masking.MaskSpec() if spec is None else spec
@@ -58,13 +60,15 @@ def _mask_plan(name, *, force_lam=None):
         return LaunchPlan(
             name=name, state=state,
             step_fn=jax.jit(steplib.make_train_step(model_api, scfg)),
-            round_fn=jax.jit(steplib.make_round_step(model_api, scfg)),
+            round_fn=jax.jit(steplib.make_round_step(model_api, scfg,
+                                                     codec=codec)),
             make_batch=_cohort_batch(cohorts))
     return plan
 
 
 def _fedavg_plan(model_api, scfg: steplib.StepConfig, *, key, cohorts,
-                 spec=None, optimizer="momentum") -> LaunchPlan:
+                 spec=None, optimizer="momentum",
+                 codec=None) -> LaunchPlan:
     state = steplib.init_fedavg_state(key, model_api)
     return LaunchPlan(
         name="fedavg", state=state,

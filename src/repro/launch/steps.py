@@ -26,6 +26,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.api import codecs as codecs_lib
 from repro.api import payloads as plds
 from repro.core import masking, regularizer, aggregation
 from repro.core.masking import MaskedParams
@@ -50,6 +51,7 @@ class StepConfig:
     microbatch: int = 1              # grad-accumulation chunks
     optimizer: str = "momentum"      # "momentum" | "adam" (scores)
     adam_eps: float = 1e-8
+    downlink_bits: int = 0           # k-bit theta broadcast (0 = f32)
 
 
 # ---------------------------------------------------------------------------
@@ -241,14 +243,27 @@ def make_train_step(api, cfg: StepConfig):
 # ---------------------------------------------------------------------------
 
 
-def make_round_step(api, cfg: StepConfig, mesh=None, state_sh=None):
+def make_round_step(api, cfg: StepConfig, mesh=None, state_sh=None,
+                    codec=None):
     """Cross-pod mask exchange. When `mesh`/`state_sh` are given, the
     aggregation runs under shard_map with an EXPLICIT all_gather of the
     bit-packed uint32 words over the 'pod' axis — the wire carries
     exactly 1 bit/parameter/cohort (vs 16 for the bf16-psum baseline).
     Without a mesh (tests, 1-device), a plain jnp path is used.
+
+    `codec` (name or `repro.api.codecs.Codec`, default the paper's
+    arithmetic coder) meters the uplink: metrics carry ``bpp`` (eq. 13
+    entropy bound), ``bpp_measured`` (the codec's pooled wire rate) and
+    ``bits_measured`` / ``downlink_bits`` round totals for the
+    CommLedger.  With ``cfg.downlink_bits > 0`` the post-round theta
+    broadcast really goes through the stochastic k-bit quantizer
+    (`aggregation.quantize_theta`) before scores are reset from it.
     """
     has_pod = mesh is not None and "pod" in mesh.axis_names
+    if codec is None:
+        codec = "arithmetic"
+    if isinstance(codec, str):
+        codec = codecs_lib.get_codec(codec)
 
     def _sample_local(scores, floats, weights, step, c_idx):
         base = jax.random.PRNGKey(23)
@@ -306,6 +321,15 @@ def make_round_step(api, cfg: StepConfig, mesh=None, state_sh=None):
 
         theta = jax.tree_util.tree_map(agg, masks,
                                        is_leaf=lambda x: x is None)
+        if cfg.downlink_bits:
+            # the orphaned k-bit downlink, live: theta crosses the wire
+            # stochastically quantized; every shard uses the same key so
+            # cohorts keep receiving identical broadcasts
+            qkey = jax.random.fold_in(jax.random.PRNGKey(29), step)
+            theta = aggregation.dequantize_theta(
+                aggregation.quantize_theta(theta, qkey,
+                                           bits=cfg.downlink_bits),
+                bits=cfg.downlink_bits)
         new_scores = jax.tree_util.tree_map(
             lambda t, s: None if t is None else jnp.broadcast_to(
                 masking.logit(t)[None], s.shape).astype(cfg.score_dtype),
@@ -328,7 +352,23 @@ def make_round_step(api, cfg: StepConfig, mesh=None, state_sh=None):
         # local bpp estimate (same value on every device up to shard
         # composition; cheap diagnostic) — the paper's eq. 13 meter
         bpp = regularizer.empirical_entropy(masks)
-        return new_scores, new_floats, new_opt, bpp
+        # measured wire bits: pool every leaf's bits per cohort and ask
+        # the codec — the same `measure_pooled_bits` primitive the
+        # host-sim engine meters payloads with.  Each shard codes its
+        # own slice-stream; the psum over EVERY mesh axis makes the
+        # returned value the exact total of all shards' streams (and
+        # genuinely replicated, as the out_spec declares).
+        flat = [m.reshape(m.shape[0], -1) for m in
+                jax.tree_util.tree_leaves(masks,
+                                          is_leaf=lambda x: x is None)
+                if m is not None]
+        pooled = jnp.concatenate(flat, axis=1).astype(jnp.uint8)
+        per_cohort = jax.vmap(codec.measure_pooled_bits)(pooled)
+        bits_total = jnp.sum(per_cohort.astype(jnp.float32))
+        if mesh is not None:
+            bits_total = jax.lax.psum(bits_total,
+                                      tuple(mesh.axis_names))
+        return new_scores, new_floats, new_opt, bpp, bits_total
 
     def _zero_v(st, out):
         if "opt_v" in st:
@@ -337,14 +377,35 @@ def make_round_step(api, cfg: StepConfig, mesh=None, state_sh=None):
                 st["opt_v"], is_leaf=lambda x: x is None)
         return out
 
+    def _comm_totals(state):
+        """(cohorts, global mask params) from the static state shapes."""
+        C, n = 1, 0
+        for s in jax.tree_util.tree_leaves(
+                state["scores"], is_leaf=lambda x: x is None):
+            if s is None:
+                continue
+            C = s.shape[0]
+            n += s.size // s.shape[0]
+        return C, n
+
+    def _comm_metrics(state, bpp, bits_total):
+        C, n_glob = _comm_totals(state)
+        dl_bpp = float(cfg.downlink_bits) if cfg.downlink_bits else 32.0
+        return {"bpp": bpp,
+                "bpp_measured": bits_total / jnp.float32(n_glob * C),
+                "bits_measured": bits_total,
+                "downlink_bpp": jnp.float32(dl_bpp),
+                "downlink_bits": jnp.float32(dl_bpp * n_glob * C)}
+
     if mesh is None:
         def round_step(state):
-            sc, fl, om, bpp = _round_local(
+            sc, fl, om, bpp, bits_total = _round_local(
                 state["scores"], state["floats"], state["weights"],
                 state["opt_m"], state["step"])
             out = dict(state, scores=sc, floats=fl, opt_m=om,
                        step=state["step"] + 1)
-            return _zero_v(state, out), {"bpp": bpp}
+            return _zero_v(state, out), _comm_metrics(state, bpp,
+                                                      bits_total)
         return round_step
 
     def specs_of(tree):
@@ -358,17 +419,19 @@ def make_round_step(api, cfg: StepConfig, mesh=None, state_sh=None):
     out_specs = (specs_of(state_sh["scores"]),
                  specs_of(state_sh["floats"]),
                  specs_of(state_sh["opt_m"]),
+                 jax.sharding.PartitionSpec(),
                  jax.sharding.PartitionSpec())
     mapped = jax.shard_map(_round_local, mesh=mesh, in_specs=in_specs,
                            out_specs=out_specs, check_vma=False)
 
     def round_step(state):
-        sc, fl, om, bpp = mapped(state["scores"], state["floats"],
-                                 state["weights"], state["opt_m"],
-                                 state["step"])
+        sc, fl, om, bpp, bits_total = mapped(
+            state["scores"], state["floats"], state["weights"],
+            state["opt_m"], state["step"])
         out = dict(state, scores=sc, floats=fl, opt_m=om,
                    step=state["step"] + 1)
-        return _zero_v(state, out), {"bpp": bpp}
+        return _zero_v(state, out), _comm_metrics(state, bpp,
+                                                  bits_total)
 
     return round_step
 

@@ -16,12 +16,15 @@ container use --smoke (reduced config, 1 device). Handles:
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro import api as fedapi
+from repro.api import codecs as codecs_lib
 from repro.configs import get_config
 from repro.models import build_model
 from repro.data import synthetic
@@ -38,6 +41,13 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--algo", default="fedpm_reg",
                     choices=list(fedapi.launchable()))
+    ap.add_argument("--codec", default="arithmetic",
+                    choices=[c for c in codecs_lib.available()
+                             if c != "float32"],
+                    help="wire codec metering the mask uplink")
+    ap.add_argument("--downlink-bits", type=int, default=8,
+                    help="k-bit stochastic theta broadcast "
+                         "(0 = raw float32 downlink)")
     ap.add_argument("--lam", type=float, default=1.0)
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--round-every", type=int, default=10)
@@ -55,11 +65,12 @@ def main(argv=None):
     api = build_model(cfg)
     key = jax.random.PRNGKey(0)
     scfg = steplib.StepConfig(lam=args.lam, lr=args.lr,
-                              optimizer=args.score_opt)
+                              optimizer=args.score_opt,
+                              downlink_bits=args.downlink_bits)
 
     plan = fedapi.get_launch_plan(args.algo)(
         api, scfg, key=key, cohorts=args.cohorts,
-        optimizer=args.score_opt)
+        optimizer=args.score_opt, codec=args.codec)
     state, step_fn, round_fn = plan.state, plan.step_fn, plan.round_fn
 
     start = 0
@@ -79,6 +90,16 @@ def main(argv=None):
     toks = synthetic.make_lm_stream(key, 500_000, cfg.vocab)
     sim = (fault.FaultSimulator(args.cohorts, fail_prob=args.fail_prob)
            if args.fail_prob > 0 else None)
+    # the ledger must survive restarts or cumulative MB under-reports;
+    # it rides next to the checkpoints as a tiny json sidecar
+    ledger = fedapi.CommLedger()
+    ledger_path = (os.path.join(args.ckpt_dir, "comm_ledger.json")
+                   if args.ckpt_dir else None)
+    if start > 0 and ledger_path and os.path.exists(ledger_path):
+        with open(ledger_path) as f:
+            ledger = fedapi.CommLedger(**json.load(f))
+        print(f"resumed ledger: {ledger.total_mb:.2f}MB over "
+              f"{ledger.rounds} rounds")
 
     t0 = time.time()
     for step in range(start, args.steps):
@@ -88,18 +109,34 @@ def main(argv=None):
         if round_fn is not None and (step + 1) % args.round_every == 0:
             alive = sim.sample_round() if sim is not None else None
             state, rm = round_fn(state)
+            ledger.update({"uplink_bits_measured": rm["bits_measured"],
+                           "downlink_bits": rm["downlink_bits"]})
             msg = (f"step {step+1}: loss={float(m['loss']):.3f} "
-                   f"uplink={float(rm['bpp']):.3f}Bpp")
+                   f"uplink={float(rm['bpp']):.3f}Bpp "
+                   f"(wire {float(rm['bpp_measured']):.3f}Bpp "
+                   f"{args.codec}) cum={ledger.total_mb:.2f}MB")
             if alive is not None:
                 msg += f" alive={alive.sum()}/{args.cohorts}"
             print(msg + f" ({time.time()-t0:.0f}s)", flush=True)
             if saver:
                 saver.save(step + 1, state)
+                os.makedirs(args.ckpt_dir, exist_ok=True)
+                tmp = ledger_path + ".tmp"
+                with open(tmp, "w") as f:
+                    json.dump({"uplink_bits": ledger.uplink_bits,
+                               "downlink_bits": ledger.downlink_bits,
+                               "rounds": ledger.rounds}, f)
+                os.replace(tmp, ledger_path)
         elif (step + 1) % 10 == 0:
             print(f"step {step+1}: loss={float(m['loss']):.3f}",
                   flush=True)
     if saver:
         saver.close()
+    if ledger.rounds:
+        print(f"comm: {ledger.rounds} rounds, "
+              f"up={ledger.uplink_mb:.2f}MB "
+              f"down={ledger.downlink_mb:.2f}MB "
+              f"total={ledger.total_mb:.2f}MB")
     print("done")
 
 

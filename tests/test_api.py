@@ -84,15 +84,29 @@ def test_uplink_bpp_derives_from_payload_bits(setup, name):
     algo = _get(setup, name)
     st = algo.init(KEY, setup["params"])
     part = jnp.ones((K,), bool)
-    st2, m = algo.round(st, setup["data"], part, setup["sizes"], KEY)
 
+    # replicate the engine: clients see the state AFTER the downlink
+    # broadcast (quantized theta for the fedpm family).  Compute the
+    # payloads BEFORE calling round — round donates `st`.
+    dl, cst = api.client_view(algo, st, KEY)
     keys = jax.random.split(KEY, K)
     payloads, _ = jax.vmap(algo.client_update, in_axes=(None, 0, 0))(
-        st, setup["data"], keys)
+        cst, setup["data"], keys)
+    st2, m = algo.round(st, setup["data"], part, setup["sizes"], KEY)
+
     wn = setup["sizes"] / jnp.sum(setup["sizes"])
     bpps = jax.vmap(lambda p: p.bpp())(payloads)
     np.testing.assert_allclose(float(m["uplink_bpp"]),
                                float(jnp.sum(bpps * wn)), rtol=1e-5)
+
+    # measured metrics: the codec's traced size over the same payloads
+    bits = jax.vmap(algo.codec.measure_bits)(payloads)
+    n = payloads.num_params()
+    np.testing.assert_allclose(
+        float(m["uplink_bpp_measured"]),
+        float(jnp.sum(bits.astype(jnp.float32) * wn)) / n, rtol=1e-5)
+    assert float(m["downlink_bpp"]) > 0.0
+    assert float(m["downlink_bits"]) > 0.0
 
     # per-client: bpp is consistent with the serialized representation
     one = jax.tree_util.tree_map(lambda x: x[0], payloads)
