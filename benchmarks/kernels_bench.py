@@ -1,72 +1,327 @@
-"""Kernel micro-benchmarks: fused masked matmul vs the XLA 3-tensor
-baseline (materialize sigmoid/u/m*w), and bitpack throughput.
+"""Kernel benchmark harness: fused masked-matmul forward/backward and
+the fused sample+pack uplink kernel vs their pure-jnp oracles.
 
-On CPU these numbers are indicative only (the kernel runs in interpret
-mode); the structural win — eliminated HBM tensors — is asserted by
-counting materialized weight-sized buffers in the lowered HLO.
+Two kinds of output:
+
+  * Timings — median-of-N `time.perf_counter` wall clock (after separate
+    warmup calls) for fwd / bwd / sample+pack across a shape zoo drawn
+    from the real model configs (`repro.configs`), written to
+    ``BENCH_kernels.json`` and printed as CSV.  On CPU the kernels run
+    in interpret mode, so the numbers are indicative only.
+
+  * Structural assertions — the memory-term argument that holds on any
+    backend: counting weight-shaped (K, N) f32 values defined OUTSIDE
+    the pallas_call boundary.  The count runs on the jaxpr (where
+    `pallas_call` is a single opaque equation) rather than compiled HLO
+    text, because interpret-mode emulation inlines full-size plumbing
+    buffers into the compiled module that do not exist on TPU.  The
+    naive path materializes sigmoid(s), the hash uniforms, m*w and
+    x^T@g at weight size; the fused forward AND backward must define
+    zero such values.  Compiled-HLO substring counts are still reported
+    (informational) for continuity with the original forward check.
+
+Run:  PYTHONPATH=src python benchmarks/kernels_bench.py [--iters N]
+      [--warmup N] [--max-dim D] [--json PATH]
 """
 from __future__ import annotations
 
+import argparse
+import json
+import statistics
 import time
 
 import jax
 import jax.numpy as jnp
+from jax import core as jcore
 
+from repro.configs import get_config
 from repro.kernels import ref, ops
 
 
-def hbm_weight_tensors_baseline_vs_fused():
-    """Count weight-shaped temporaries in each lowering (the structural
-    memory-term argument for the Pallas kernel)."""
-    M, K, N = 256, 1024, 1024
+# ---------------------------------------------------------------------------
+# Timing
+# ---------------------------------------------------------------------------
+
+
+def timed(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time per call in us: `warmup` untimed calls first
+    (compile + cache effects), then `iters` timed calls, each fully
+    blocked on, reported as the median (robust to scheduler noise where
+    a mean is not)."""
+    for _ in range(max(warmup, 1)):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts) * 1e6
+
+
+# ---------------------------------------------------------------------------
+# Shape zoo: the hot matmuls of the real model configs
+# ---------------------------------------------------------------------------
+
+ZOO_ARCHS = ("internlm2-1.8b", "gemma3-4b", "qwen2-7b")
+
+
+def _shrink(d: int, max_dim: int) -> int:
+    """Halve until <= max_dim, then round down to lane (128) alignment
+    so interpret-mode (CPU) runs stay tractable; actual dims are
+    recorded in the JSON."""
+    while d > max_dim:
+        d //= 2
+    return max(d - d % 128, 128)
+
+
+def shape_zoo(max_dim: int = 1536, m: int = 256):
+    """(label, M, K, N) for the per-layer hot matmuls — the attention
+    qkv projection (d_model -> (H + 2*H_kv) * hd) and the FFN up
+    projection (d_model -> d_ff) — of each zoo arch, deduplicated."""
+    out, seen = [], set()
+    for name in ZOO_ARCHS:
+        cfg = get_config(name)
+        qkv = (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.hd
+        for tag, k, n in (("qkv", cfg.d_model, qkv),
+                          ("ffn_up", cfg.d_model, cfg.d_ff)):
+            K, N = _shrink(k, max_dim), _shrink(n, max_dim)
+            if (K, N) in seen:
+                continue
+            seen.add((K, N))
+            out.append((f"{name}:{tag}", m, K, N))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Structural check: weight-shaped f32 values outside the pallas boundary
+# ---------------------------------------------------------------------------
+
+
+_CHECK_SHAPE = (256, 1024, 1024)  # MXU-aligned so no pad/slice eqns
+
+
+def count_weight_f32_defs(fn, args, weight_shape) -> int:
+    """Number of jaxpr equations (recursively) defining an f32 value of
+    `weight_shape` outside any `pallas_call`.
+
+    Call-like equations that merely forward inner results (pjit,
+    custom_vjp, scan, ...) are recursed into instead of counted, so a
+    hit is a real weight-sized compute/materialization step; the
+    pallas_call equation itself is never descended into — its innards
+    live in VMEM, which is the entire point.
+    """
+    tgt = (tuple(weight_shape), jnp.dtype(jnp.float32))
+    n_hits = 0
+
+    def subjaxprs(params):
+        found = []
+        stack = list(params.values())
+        while stack:
+            p = stack.pop()
+            if isinstance(p, jcore.ClosedJaxpr):
+                found.append(p.jaxpr)
+            elif isinstance(p, jcore.Jaxpr):
+                found.append(p)
+            elif isinstance(p, (tuple, list)):
+                stack.extend(p)
+        return found
+
+    def walk(jaxpr):
+        nonlocal n_hits
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                continue
+            inner = subjaxprs(eqn.params)
+            if inner:
+                for j in inner:
+                    walk(j)
+                continue  # call wrapper: count only the defining eqns
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                if aval is not None and (
+                        tuple(aval.shape), aval.dtype) == tgt:
+                    n_hits += 1
+
+    walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    return n_hits
+
+
+def _check_operands(M, K, N):
     x = jnp.zeros((M, K), jnp.bfloat16)
     w = jnp.zeros((K, N), jnp.bfloat16)
     s = jnp.zeros((K, N), jnp.float32)
+    g = jnp.zeros((M, N), jnp.bfloat16)
+    return x, w, s, g
 
-    def baseline(x, w, s, seed):
-        return ref.masked_matmul(x, w, s, seed)
 
-    txt_base = jax.jit(baseline).lower(x, w, s, 0).compile().as_text()
-    n_base = txt_base.count(f"{K},{N}")
-    # fused path (interpret mode still shows the pallas call boundary)
+def weight_temporaries_fwd():
+    """(naive, fused) weight-f32 def counts for the forward."""
+    M, K, N = _CHECK_SHAPE
+    x, w, s, _ = _check_operands(M, K, N)
+    naive = count_weight_f32_defs(
+        lambda x, w, s: ref.masked_matmul(x, w, s, 0), (x, w, s), (K, N))
+    fused = count_weight_f32_defs(
+        lambda x, w, s: ops.masked_dense(x, w, s, 0), (x, w, s), (K, N))
+    return naive, fused
+
+
+def weight_temporaries_bwd():
+    """(naive, fused) weight-f32 def counts for the STE backward."""
+    M, K, N = _CHECK_SHAPE
+    x, w, s, g = _check_operands(M, K, N)
+
+    def fused(x, w, s, g):
+        _, vjp = jax.vjp(
+            lambda x_, s_: ops.masked_dense(x_, w, s_, 0), x, s)
+        return vjp(g)
+
+    def naive(x, w, s, g):
+        return ref.masked_dense_bwd(x, w, s, 0, g)
+
+    args = (x, w, s, g)
+    return (count_weight_f32_defs(naive, args, (K, N)),
+            count_weight_f32_defs(fused, args, (K, N)))
+
+
+def hbm_weight_tensors_baseline_vs_fused():
+    """Compiled-HLO substring counts for the forward (the original,
+    informational check; interpret-mode emulation inflates the fused
+    number with plumbing buffers that do not exist on TPU — the jaxpr
+    counts above are the asserted invariant)."""
+    M, K, N = _CHECK_SHAPE
+    x, w, s, _ = _check_operands(M, K, N)
+    txt_base = jax.jit(
+        lambda x, w, s: ref.masked_matmul(x, w, s, 0)
+    ).lower(x, w, s).compile().as_text()
     txt_fused = jax.jit(
         lambda x, w, s: ops.masked_dense(x, w, s, 0)
     ).lower(x, w, s).compile().as_text()
-    n_fused = txt_fused.count(f"{K},{N}")
-    return n_base, n_fused
+    return txt_base.count(f"{K},{N}"), txt_fused.count(f"{K},{N}")
 
 
-def timed(fn, *args, iters=3):
-    fn(*args)  # compile
-    t0 = time.time()
-    for _ in range(iters):
-        jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / iters * 1e6
+# ---------------------------------------------------------------------------
+# Benchmarks
+# ---------------------------------------------------------------------------
 
 
-def main():
+def bench_shape(label, M, K, N, iters, warmup, key):
+    kx, kw, ks, kg = jax.random.split(key, 4)
+    x = jax.random.normal(kx, (M, K), jnp.float32).astype(jnp.bfloat16)
+    w = jax.random.normal(kw, (K, N), jnp.float32).astype(jnp.bfloat16)
+    s = jax.random.normal(ks, (K, N), jnp.float32)
+    g = jax.random.normal(kg, (M, N), jnp.float32).astype(jnp.bfloat16)
+
+    fwd = jax.jit(lambda x, w, s: ops.masked_dense(x, w, s, 7))
+    fwd_ref = jax.jit(lambda x, w, s: ref.masked_matmul(x, w, s, 7))
+
+    # grad step = forward + backward on BOTH sides (jax.vjp re-runs the
+    # forward, so the naive baseline gets its forward too — symmetric),
+    # 3 weight-sized matmuls total (y, dx, ds)
+    def _bwd(x, w, s, g):
+        _, vjp = jax.vjp(
+            lambda x_, s_: ops.masked_dense(x_, w, s_, 7), x, s)
+        return vjp(g)
+
+    bwd = jax.jit(_bwd)
+
+    def _bwd_ref(x, w, s, g):
+        y = ref.masked_matmul(x, w, s, 7)
+        dx, ds = ref.masked_dense_bwd(x, w, s, 7, g)
+        return y, dx, ds
+
+    bwd_ref = jax.jit(_bwd_ref)
+
+    # one cohort row of K*N scores: the per-round uplink sampling
+    flat = s.reshape(1, -1)
+    seeds = jnp.asarray([7], jnp.uint32)
+    sap = jax.jit(lambda f, sd: ops.sample_and_pack(f, sd))
+    sap_ref = jax.jit(lambda f, sd: ref.sample_and_pack(f, sd))
+
+    t = dict(
+        fwd_us=timed(fwd, x, w, s, iters=iters, warmup=warmup),
+        fwd_ref_us=timed(fwd_ref, x, w, s, iters=iters, warmup=warmup),
+        bwd_us=timed(bwd, x, w, s, g, iters=iters, warmup=warmup),
+        bwd_ref_us=timed(bwd_ref, x, w, s, g, iters=iters,
+                         warmup=warmup),
+        sample_pack_us=timed(sap, flat, seeds, iters=iters,
+                             warmup=warmup),
+        sample_pack_ref_us=timed(sap_ref, flat, seeds, iters=iters,
+                                 warmup=warmup),
+    )
+    fwd_flops = 2 * M * K * N
+    t["fwd_gflops"] = fwd_flops / t["fwd_us"] / 1e3
+    t["bwd_gflops"] = 3 * fwd_flops / t["bwd_us"] / 1e3  # y + dx + ds
+    t["sample_pack_gbit_s"] = K * N / t["sample_pack_us"] / 1e3
+    return {"name": label, "M": M, "K": K, "N": N, **t}
+
+
+def main(argv=None) -> dict:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--iters", type=int, default=3,
+                   help="timed iterations per benchmark (median taken)")
+    p.add_argument("--warmup", type=int, default=1,
+                   help="untimed warmup iterations")
+    p.add_argument("--max-dim", type=int, default=1536,
+                   help="shrink zoo dims to <= this (CPU tractability)")
+    p.add_argument("--json", default="BENCH_kernels.json",
+                   help="output path for the results JSON")
+    args = p.parse_args([] if argv is None else argv)
+
+    interpret = ops._use_interpret()
+    results = {
+        "backend": ops.repro_backend(),
+        "interpret": interpret,
+        "iters": args.iters,
+        "warmup": args.warmup,
+        "check_shape": dict(zip("MKN", _CHECK_SHAPE)),
+        "shapes": [],
+    }
+
     print("name,us_per_call,derived")
-    M, K, N = 256, 1024, 1024
     key = jax.random.PRNGKey(0)
-    x = jax.random.normal(key, (M, K), jnp.float32).astype(jnp.bfloat16)
-    w = jax.random.normal(key, (K, N), jnp.float32).astype(jnp.bfloat16)
-    s = jax.random.normal(key, (K, N), jnp.float32)
+    for label, M, K, N in shape_zoo(max_dim=args.max_dim):
+        key, sub = jax.random.split(key)
+        row = bench_shape(label, M, K, N, args.iters, args.warmup, sub)
+        results["shapes"].append(row)
+        for op in ("fwd", "bwd", "sample_pack"):
+            d = (f"{row[f'{op}_gflops']:.1f}GFLOP/s"
+                 if op != "sample_pack"
+                 else f"{row['sample_pack_gbit_s']:.2f}Gbit/s")
+            print(f"{label}:{op}_{M}x{K}x{N},{row[f'{op}_us']:.0f},{d}")
+            print(f"{label}:{op}_ref_{M}x{K}x{N},"
+                  f"{row[f'{op}_ref_us']:.0f},baseline")
 
-    us = timed(jax.jit(lambda x, w, s: ref.masked_matmul(x, w, s, 7)),
-               x, w, s)
-    flops = 2 * M * K * N
-    print(f"masked_matmul_ref_{M}x{K}x{N},{us:.0f},"
-          f"{flops / us * 1e6 / 1e9:.1f}GFLOP/s")
-
-    m = jax.random.bernoulli(key, 0.3, (32 * 65536,)).astype(jnp.uint8)
-    us = timed(jax.jit(ref.pack_bits), m)
-    print(f"bitpack_ref_2Mbit,{us:.0f},"
-          f"{m.size / us * 1e6 / 1e9:.2f}Gbit/s")
+    # structural invariants: no weight-shaped f32 value may be defined
+    # outside the pallas_call on either pass
+    fwd_naive, fwd_fused = weight_temporaries_fwd()
+    bwd_naive, bwd_fused = weight_temporaries_bwd()
+    results["weight_f32_defs"] = {
+        "fwd_naive": fwd_naive, "fwd_fused": fwd_fused,
+        "bwd_naive": bwd_naive, "bwd_fused": bwd_fused,
+    }
+    print(f"weight_f32_defs_fwd_naive,{fwd_naive},count")
+    print(f"weight_f32_defs_fwd_fused,{fwd_fused},count")
+    print(f"weight_f32_defs_bwd_naive,{bwd_naive},count")
+    print(f"weight_f32_defs_bwd_fused,{bwd_fused},count")
+    assert fwd_fused == 0, \
+        f"fused forward defines {fwd_fused} weight-f32 temporaries"
+    assert bwd_fused == 0, \
+        f"fused backward defines {bwd_fused} weight-f32 temporaries"
+    assert fwd_naive > 0 and bwd_naive > 0, \
+        "naive baseline lost its temporaries — check the counter"
 
     nb, nf = hbm_weight_tensors_baseline_vs_fused()
+    results["hlo_substring_counts"] = {"fwd_naive": nb, "fwd_fused": nf}
     print(f"hbm_weight_tensors_baseline,{nb},count")
     print(f"hbm_weight_tensors_fused,{nf},count")
 
+    assert len(results["shapes"]) >= 3, results["shapes"]
+    with open(args.json, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(f"# wrote {args.json}")
+    return results
+
 
 if __name__ == "__main__":
-    main()
+    import sys
+    main(sys.argv[1:])

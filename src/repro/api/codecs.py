@@ -382,6 +382,13 @@ class Bitpack32(_PackedCodec):
     def measure_pooled_bits(self, bits: jax.Array) -> jax.Array:
         return jnp.int32(_word_align(bits.shape[0]))
 
+    def measure_pooled_words(self, words: jax.Array,
+                             n: int) -> jax.Array:
+        """Size from the bit-packed words directly (word-aligned size
+        depends only on n) — lets the pod round step meter the fused
+        sample+pack output without unpacking the mask."""
+        return jnp.int32(_word_align(n))
+
     def measure_bits(self, payload) -> jax.Array:
         return jnp.int32(_word_align(_payload_n(payload)))
 
@@ -556,6 +563,18 @@ class ArithmeticBernoulli(_PackedCodec):
             return jnp.int32(0)
         return self._measure_from_counts(
             jnp.sum(bits.astype(jnp.int32)), n)
+
+    def measure_pooled_words(self, words: jax.Array,
+                             n: int) -> jax.Array:
+        """Size from bit-packed uint32 words (padding bits zero) and
+        the true bit count n: the formula needs only (ones, n), so a
+        popcount replaces unpacking the mask (per-leaf word padding in
+        a pooled stream changes neither count)."""
+        if n == 0:
+            return jnp.int32(0)
+        ones = jnp.sum(
+            jax.lax.population_count(words).astype(jnp.int32))
+        return self._measure_from_counts(ones, n)
 
     def measure_bits(self, payload) -> jax.Array:
         n = _payload_n(payload)

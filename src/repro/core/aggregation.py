@@ -141,6 +141,25 @@ def aggregate_floats(float_trees: Sequence[Pytree],
                                   is_leaf=lambda x: x is None)
 
 
+def sample_and_pack_rows(flat_scores: jax.Array, seeds: jax.Array,
+                         use_kernel: bool = False) -> jax.Array:
+    """Fused per-cohort uplink sampling + 32->1 bitpack.
+
+    (C, n) score rows + (C,) uint32 seeds -> (C, ceil(n/32)) uint32
+    words of m ~ Bern(sigmoid(scores)), where row c draws from the
+    counter-based hash stream seeded by seeds[c] (the same stream the
+    fused masked-matmul kernels regenerate).  With ``use_kernel`` the
+    one-pass Pallas kernel runs (scores -> hash -> Bernoulli -> words;
+    no uint8 mask in HBM); otherwise the pure-jnp two-pass reference —
+    the two are bit-identical.
+    """
+    if use_kernel:
+        from repro.kernels import ops as _kops
+        return _kops.sample_and_pack(flat_scores, seeds)
+    from repro.kernels import ref as _kref
+    return _kref.sample_and_pack(flat_scores, seeds)
+
+
 # ---------------------------------------------------------------------------
 # In-mesh collectives (used under shard_map over client axes)
 # ---------------------------------------------------------------------------

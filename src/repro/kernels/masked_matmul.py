@@ -1,19 +1,40 @@
-"""Fused masked matmul Pallas kernel — the mask-training hot spot.
+"""Fused masked matmul Pallas kernels — the mask-training hot spot.
 
-Computes   y = x @ (m ⊙ w),   m = 1[u < sigmoid(s)],  u = hash(seed, idx)
+Forward:   y  = x @ (m ⊙ w),   m = 1[u < sigmoid(s)],  u = hash(seed, idx)
 
 in ONE pass: tiles of `w` and `s` stream HBM->VMEM once per (k, n) tile,
 the Bernoulli mask is formed in VMEM/VREGs from a counter-based hash
 (no RNG state, no mask tensor in HBM), the gated tile feeds the MXU.
 
+Backward (STE, see ops.py): two more kernels with the same property —
+
+  masked_matmul_dx:  dx = g @ (m ⊙ w)ᵀ     mask regenerated per tile
+                                            from the SAME hash stream,
+                                            bit-identical to the forward
+  masked_matmul_ds:  ds = (xᵀ@g) ⊙ w ⊙ σ(s)(1−σ(s))
+                                            the (K,N)-sized xᵀ@g product
+                                            and the sigmoid never leave
+                                            VMEM
+
+and a fused uplink sampler —
+
+  sample_and_pack:   scores -> hash -> Bernoulli -> packed uint32 words
+                     in one pass (replaces sample-then-pack_bits, which
+                     materialized the full uint8 mask in HBM).
+
 Naive XLA: materialize sigmoid(s) (f32), u (f32), m*w (bf16) — three
-extra weight-sized HBM tensors per step. This kernel eliminates all
-three; the weight-HBM traffic drops ~3x and the masked weights never
-exist in memory (DESIGN.md §2.1).
+extra weight-sized HBM tensors per step, and the backward repeats all
+three plus xᵀ@g. These kernels eliminate every weight-sized temporary;
+benchmarks/kernels_bench.py asserts the structural win by counting
+weight-shaped f32 definitions in the lowered HLO.
 
 The hash is xorshift-multiply (splitmix-like) over the *global* element
 index, so the sampled mask is identical regardless of tiling — ref.py
-reproduces it with pure jnp for the allclose oracle.
+reproduces it with pure jnp for the allclose oracle.  `n_logical` lets a
+caller zero-pad operands to MXU alignment while keeping the hash indexed
+by the LOGICAL column count, so padded and unpadded launches sample
+bit-identical masks (padding columns carry w == 0 and contribute
+nothing).
 
 Block shapes default to (128, 512, 512) — MXU-aligned (multiples of
 128) and VMEM-safe: bm*bk + 2*bk*bn + bm*bn tiles ≈ 128*512*4B +
@@ -32,11 +53,18 @@ from jax.experimental.pallas import tpu as pltpu
 
 def _hash_uniform(idx: jax.Array, seed) -> jax.Array:
     """Counter-based uniform in [0,1): splitmix32-style avalanche of the
-    global element index. uint32 ops only (TPU-friendly)."""
-    x = idx.astype(jnp.uint32) + jnp.uint32(0x9E3779B9) * (
-        jnp.asarray(seed, jnp.uint32) + jnp.uint32(1))
+    global element index. uint32 ops only (TPU-friendly).
+
+    The seed is avalanched separately and injected a second time in the
+    middle of the pipeline, so two seeds never yield index-shifted
+    copies of one stream (a purely additive seed would: stream offsets
+    only ~8M apart would overlap for >8M-element leaves)."""
+    s = jnp.asarray(seed, jnp.uint32) + jnp.uint32(1)
+    s = (s ^ (s >> 16)) * jnp.uint32(0x45D9F3B5)
+    s = s ^ (s >> 11)
+    x = idx.astype(jnp.uint32) + jnp.uint32(0x9E3779B9) * s
     x = (x ^ (x >> 16)) * jnp.uint32(0x85EBCA6B)
-    x = (x ^ (x >> 13)) * jnp.uint32(0xC2B2AE35)
+    x = (x ^ s ^ (x >> 13)) * jnp.uint32(0xC2B2AE35)
     x = x ^ (x >> 16)
     # 24-bit mantissa -> [0, 1)
     return (x >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
@@ -71,22 +99,26 @@ def _kernel(x_ref, w_ref, s_ref, seed_ref, o_ref, acc_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk",
-                                             "interpret"))
+                                             "n_logical", "interpret"))
 def masked_matmul(x: jax.Array, w: jax.Array, s: jax.Array,
                   seed: jax.Array, *, bm: int = 128, bn: int = 512,
-                  bk: int = 512, interpret: bool = False) -> jax.Array:
+                  bk: int = 512, n_logical: int | None = None,
+                  interpret: bool = False) -> jax.Array:
     """x: (M, K) bf16/f32; w, s: (K, N); seed: scalar uint32.
-    Returns (M, N) in x.dtype."""
+    Returns (M, N) in x.dtype.  `n_logical` overrides the column count
+    used for the hash index (for zero-padded launches)."""
     M, K = x.shape
     K2, N = w.shape
     assert K == K2 and s.shape == (K, N)
+    n_total = N if n_logical is None else n_logical
     bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
     assert M % bm_ == 0 and N % bn_ == 0 and K % bk_ == 0, \
         (M, N, K, bm_, bn_, bk_)
     nm, nn, nk = M // bm_, N // bn_, K // bk_
 
     grid = (nm, nn, nk)
-    kernel = functools.partial(_kernel, bk=bk_, bn=bn_, n_total=N, nk=nk)
+    kernel = functools.partial(_kernel, bk=bk_, bn=bn_, n_total=n_total,
+                               nk=nk)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -101,3 +133,204 @@ def masked_matmul(x: jax.Array, w: jax.Array, s: jax.Array,
         scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
         interpret=interpret,
     )(x, w, s, jnp.asarray(seed, jnp.uint32).reshape(1))
+
+
+# ---------------------------------------------------------------------------
+# Fused STE backward: dx = g @ (m*w)^T, mask regenerated per (k, n) tile
+# ---------------------------------------------------------------------------
+
+
+def _dx_kernel(g_ref, w_ref, s_ref, seed_ref, o_ref, acc_ref, *,
+               bk: int, bn: int, n_total: int, nn: int):
+    n_i = pl.program_id(2)
+
+    @pl.when(n_i == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # global element indices of this (bk, bn) tile of w/s — the same
+    # row-major flat index the forward kernel hashes, so the regenerated
+    # mask is bit-identical to the forward sample
+    k_i = pl.program_id(1)
+    row0 = k_i * bk
+    col0 = n_i * bn
+    rows = row0 + jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 0)
+    cols = col0 + jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 1)
+    idx = rows * jnp.uint32(n_total) + cols
+
+    u = _hash_uniform(idx, seed_ref[0])
+    theta = jax.nn.sigmoid(s_ref[...].astype(jnp.float32))
+    m = (u < theta)
+    wm = jnp.where(m, w_ref[...].astype(jnp.float32), 0.0)   # (bk, bn)
+    # contract over the n axis: (bm, bn) x (bk, bn) -> (bm, bk)
+    acc_ref[...] += jax.lax.dot_general(
+        g_ref[...].astype(jnp.float32), wm,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(n_i == nn - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk",
+                                             "n_logical", "interpret"))
+def masked_matmul_dx(g: jax.Array, w: jax.Array, s: jax.Array,
+                     seed: jax.Array, *, bm: int = 128, bn: int = 512,
+                     bk: int = 512, n_logical: int | None = None,
+                     interpret: bool = False) -> jax.Array:
+    """g: (M, N) upstream cotangent; w, s: (K, N).  Returns
+    dx = g @ (m ⊙ w)ᵀ : (M, K) in g.dtype.
+
+    The transposed access pattern gets its own grid/BlockSpec layout
+    (accumulation runs over the n axis, innermost), not a reuse of the
+    forward grid.
+    """
+    M, N = g.shape
+    K, N2 = w.shape
+    assert N == N2 and s.shape == (K, N)
+    n_total = N if n_logical is None else n_logical
+    bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm_ == 0 and N % bn_ == 0 and K % bk_ == 0, \
+        (M, N, K, bm_, bn_, bk_)
+    nm, nk, nn = M // bm_, K // bk_, N // bn_
+
+    grid = (nm, nk, nn)
+    kernel = functools.partial(_dx_kernel, bk=bk_, bn=bn_,
+                               n_total=n_total, nn=nn)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bn_), lambda i, k, n: (i, n)),
+            pl.BlockSpec((bk_, bn_), lambda i, k, n: (k, n)),
+            pl.BlockSpec((bk_, bn_), lambda i, k, n: (k, n)),
+            pl.BlockSpec((1,), lambda i, k, n: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bk_), lambda i, k, n: (i, k)),
+        out_shape=jax.ShapeDtypeStruct((M, K), g.dtype),
+        scratch_shapes=[pltpu.VMEM((bm_, bk_), jnp.float32)],
+        interpret=interpret,
+    )(g, w, s, jnp.asarray(seed, jnp.uint32).reshape(1))
+
+
+# ---------------------------------------------------------------------------
+# Fused STE backward: ds = (x^T @ g) * w * sigmoid'(s), single pass
+# ---------------------------------------------------------------------------
+
+
+def _ds_kernel(x_ref, g_ref, w_ref, s_ref, o_ref, acc_ref, *, nm: int):
+    m_i = pl.program_id(2)
+
+    @pl.when(m_i == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # contract over the batch axis: (bm, bk) x (bm, bn) -> (bk, bn)
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), g_ref[...].astype(jnp.float32),
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(m_i == nm - 1)
+    def _():
+        # elementwise epilogue in VMEM: neither x^T@g nor the sigmoid
+        # ever exist at weight size in HBM
+        sig = jax.nn.sigmoid(s_ref[...].astype(jnp.float32))
+        o_ref[...] = (acc_ref[...] * w_ref[...].astype(jnp.float32)
+                      * sig * (1.0 - sig)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk",
+                                             "interpret"))
+def masked_matmul_ds(x: jax.Array, g: jax.Array, w: jax.Array,
+                     s: jax.Array, *, bm: int = 128, bn: int = 512,
+                     bk: int = 512, interpret: bool = False) -> jax.Array:
+    """x: (M, K); g: (M, N); w, s: (K, N).  Returns the STE score
+    gradient ds = (xᵀ@g) ⊙ w ⊙ σ(s)(1−σ(s)) : (K, N) in s.dtype."""
+    M, K = x.shape
+    M2, N = g.shape
+    assert M == M2 and w.shape == (K, N) and s.shape == (K, N)
+    bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm_ == 0 and N % bn_ == 0 and K % bk_ == 0, \
+        (M, N, K, bm_, bn_, bk_)
+    nk, nn, nm = K // bk_, N // bn_, M // bm_
+
+    grid = (nk, nn, nm)
+    kernel = functools.partial(_ds_kernel, nm=nm)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda k, n, m: (m, k)),
+            pl.BlockSpec((bm_, bn_), lambda k, n, m: (m, n)),
+            pl.BlockSpec((bk_, bn_), lambda k, n, m: (k, n)),
+            pl.BlockSpec((bk_, bn_), lambda k, n, m: (k, n)),
+        ],
+        out_specs=pl.BlockSpec((bk_, bn_), lambda k, n, m: (k, n)),
+        out_shape=jax.ShapeDtypeStruct((K, N), s.dtype),
+        scratch_shapes=[pltpu.VMEM((bk_, bn_), jnp.float32)],
+        interpret=interpret,
+    )(x, g, w, s)
+
+
+# ---------------------------------------------------------------------------
+# Fused uplink sampler: scores -> Bernoulli bits -> packed uint32 words
+# ---------------------------------------------------------------------------
+
+
+def _sap_kernel(s_ref, seed_ref, o_ref, *, bw: int, n_total: int):
+    i = pl.program_id(1)
+    # word/lane coordinates of this (1, bw, 32) tile; bit j of word wi
+    # carries flat element wi*32 + j (little-endian, matching pack_bits)
+    words = i * bw + jax.lax.broadcasted_iota(jnp.uint32, (1, bw, 32), 1)
+    lanes = jax.lax.broadcasted_iota(jnp.uint32, (1, bw, 32), 2)
+    idx = (words * jnp.uint32(32) + lanes).astype(jnp.uint32)
+
+    u = _hash_uniform(idx, seed_ref[0])
+    theta = jax.nn.sigmoid(s_ref[...].astype(jnp.float32))
+    # padding bits (idx >= n_total) are forced to zero so the packed
+    # words match pack_bits(pad_to_words(mask)) exactly
+    m = (u < theta) & (idx < jnp.uint32(n_total))
+    bits = m.astype(jnp.uint32) << lanes
+    o_ref[...] = jnp.sum(bits, axis=2).astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("bw", "interpret"))
+def sample_and_pack(s: jax.Array, seeds: jax.Array, *, bw: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """s: (C, n) score rows; seeds: (C,) uint32 per-row stream seeds.
+    Returns (C, W) uint32 with W = ceil(n/32): the bit-packed Bernoulli
+    mask m = 1[hash_u(idx) < sigmoid(s)] of every row, sampled and
+    packed in one pass (bits past n are zero, as pad_to_words pads)."""
+    C, n = s.shape
+    assert seeds.shape == (C,), (seeds.shape, C)
+    W = (n + 31) // 32
+    # prefer a block that divides W exactly: real leaves (dims multiples
+    # of 8) give highly composite W, so no score-sized pad copy is made;
+    # only degenerate W (no divisor >= 8) falls back to rounding W up,
+    # where the jnp.pad copy is cheaper than a near-unit-block grid
+    b = min(bw, W)
+    while W % b:
+        b //= 2
+    if b >= 8 or b == W:
+        bw_, Wp = b, W
+    else:
+        bw_ = min(bw, W)
+        Wp = -(-W // bw_) * bw_
+    pad = Wp * 32 - n
+    sp = jnp.pad(s, ((0, 0), (0, pad))) if pad else s
+    s3 = sp.reshape(C, Wp, 32)
+    kernel = functools.partial(_sap_kernel, bw=bw_, n_total=n)
+    out = pl.pallas_call(
+        kernel,
+        grid=(C, Wp // bw_),
+        in_specs=[
+            pl.BlockSpec((1, bw_, 32), lambda c, i: (c, i, 0)),
+            pl.BlockSpec((1,), lambda c, i: (c,)),
+        ],
+        out_specs=pl.BlockSpec((1, bw_), lambda c, i: (c, i)),
+        out_shape=jax.ShapeDtypeStruct((C, Wp), jnp.uint32),
+        interpret=interpret,
+    )(s3, jnp.asarray(seeds, jnp.uint32))
+    return out[:, :W]

@@ -1,19 +1,34 @@
 """Jit'd public wrappers around the Pallas kernels.
 
 `masked_dense` is the drop-in for the mask-training forward on a Dense
-layer, with the STE custom-vjp: forward uses the fused kernel (never
-materializes the masked weights); backward recomputes the mask cheaply
-(elementwise) and routes gradients to x and to the scores via STE:
+layer, with the STE custom-vjp.  Forward AND backward run fused:
 
-    dL/dx = g @ (m*w)^T
-    dL/ds = (x^T @ g) * w * sigmoid'(s)      [STE through the sample]
+    y     = x @ (m*w)                        [masked_matmul]
+    dL/dx = g @ (m*w)^T                      [masked_matmul_dx]
+    dL/ds = (x^T @ g) * w * sigmoid'(s)      [masked_matmul_ds]
+
+The mask is never materialized in HBM on either pass: the backward
+regenerates it per tile from the same counter-based hash stream as the
+forward (bit-identical — asserted in tests/test_kernels.py).
+
+MXU-unaligned shapes are zero-padded up to lane (128) alignment before
+the kernel launch instead of silently falling back to the jnp reference:
+the hash is indexed by the LOGICAL column count (`n_logical`), so the
+padded launch samples exactly the same mask, and padded columns carry
+w == 0 so they contribute nothing.  `REPRO_REF_BWD=1` forces the naive
+jnp backward (debugging escape hatch / the benchmark baseline).
+
+`sample_and_pack` fuses the per-round uplink sampling with the 32->1
+bitpack (scores -> hash -> Bernoulli -> uint32 words in one pass).
 
 On non-TPU backends (this CPU container) the wrappers call the kernels
-in interpret mode or fall back to ref.py — selected by `repro_backend()`.
+in interpret mode — selected once per process by `_use_interpret()`,
+forceable with `REPRO_FORCE_INTERPRET=1` for CI determinism.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +42,14 @@ def repro_backend() -> str:
     return jax.default_backend()
 
 
+@functools.lru_cache(maxsize=1)
 def _use_interpret() -> bool:
+    """Cached per process: `jax.default_backend()` walks the backend
+    registry, which is pure overhead when re-queried inside every jit
+    trace.  `REPRO_FORCE_INTERPRET=1` pins interpret mode regardless of
+    backend (CI determinism)."""
+    if os.environ.get("REPRO_FORCE_INTERPRET", "") == "1":
+        return True
     return repro_backend() != "tpu"
 
 
@@ -43,17 +65,56 @@ def unpack_bits(words: jax.Array, n: int) -> jax.Array:
     return _bp.unpack_bits(words, n, interpret=_use_interpret())
 
 
+def sample_and_pack(scores: jax.Array, seeds: jax.Array) -> jax.Array:
+    """Fused uplink sampler: (C, n) score rows + (C,) uint32 seeds ->
+    (C, ceil(n/32)) uint32 words of m ~ Bern(sigmoid(scores)).
+
+    One kernel pass replaces the sample-then-pack_bits two-pass; the
+    full uint8 mask never exists in HBM.  `ref.sample_rows` /
+    `ref.sample_and_pack` are the bit-exact jnp oracles.
+    """
+    return _mm.sample_and_pack(scores, seeds, interpret=_use_interpret())
+
+
+# ---------------------------------------------------------------------------
+# Padding to MXU alignment (keeps the hash indexed by logical shape)
+# ---------------------------------------------------------------------------
+
+
+def _round_up(d: int, m: int) -> int:
+    return -(-d // m) * m
+
+
+def _block_for(dp: int) -> int:
+    """Largest MXU-friendly block (multiple of 128, <= 512) dividing the
+    padded dim."""
+    for b in (512, 256, 128):
+        if dp % b == 0:
+            return b
+    raise AssertionError(dp)  # dp is always a multiple of 128
+
+
+def _pad2(a: jax.Array, r: int, c: int) -> jax.Array:
+    pr, pc = r - a.shape[0], c - a.shape[1]
+    if pr == 0 and pc == 0:
+        return a
+    return jnp.pad(a, ((0, pr), (0, pc)))
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=())
 def masked_dense(x, w, s, seed):
     """y = x @ (bern(sigmoid(s); seed) * w), STE backward. x: (..., K)."""
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
     M = x2.shape[0]
-    if M % 128 == 0 and w.shape[0] % 512 == 0 and w.shape[1] % 512 == 0:
-        y = _mm.masked_matmul(x2, w, s, seed, interpret=_use_interpret())
-    else:
-        y = ref.masked_matmul(x2, w, s, seed)
-    return y.reshape(shape[:-1] + (w.shape[1],))
+    K, N = w.shape
+    Mp, Kp, Np = (_round_up(M, 128), _round_up(K, 128),
+                  _round_up(N, 128))
+    y = _mm.masked_matmul(
+        _pad2(x2, Mp, Kp), _pad2(w, Kp, Np), _pad2(s, Kp, Np), seed,
+        bm=128, bn=_block_for(Np), bk=_block_for(Kp), n_logical=N,
+        interpret=_use_interpret())[:M, :N]
+    return y.reshape(shape[:-1] + (N,))
 
 
 def _fwd(x, w, s, seed):
@@ -63,16 +124,24 @@ def _fwd(x, w, s, seed):
 def _bwd(res, g):
     x, w, s, seed = res
     K, N = w.shape
+    if os.environ.get("REPRO_REF_BWD", "") == "1":
+        dx, ds = ref.masked_dense_bwd(x, w, s, seed, g)
+        return dx, None, ds, None
     x2 = x.reshape(-1, K)
     g2 = g.reshape(-1, N)
-    m = ref.sample_mask(s, seed).astype(jnp.float32)
-    wf = w.astype(jnp.float32)
-    wm = (m * wf).astype(x.dtype)
-    dx = (g2 @ wm.T).reshape(x.shape).astype(x.dtype)
-    xg = (x2.astype(jnp.float32).T @ g2.astype(jnp.float32))
-    sig = jax.nn.sigmoid(s.astype(jnp.float32))
-    ds = (xg * wf * sig * (1.0 - sig)).astype(s.dtype)
-    return dx, None, ds, None
+    M = x2.shape[0]
+    Mp, Kp, Np = (_round_up(M, 128), _round_up(K, 128),
+                  _round_up(N, 128))
+    bn, bk = _block_for(Np), _block_for(Kp)
+    interp = _use_interpret()
+    xp, gp = _pad2(x2, Mp, Kp), _pad2(g2, Mp, Np)
+    wp, sp = _pad2(w, Kp, Np), _pad2(s, Kp, Np)
+    dx = _mm.masked_matmul_dx(gp, wp, sp, seed, bm=128, bn=bn, bk=bk,
+                              n_logical=N, interpret=interp)[:M, :K]
+    ds = _mm.masked_matmul_ds(xp, gp, wp, sp, bm=128, bn=bn, bk=bk,
+                              interpret=interp)[:K, :N]
+    return (dx.reshape(x.shape).astype(x.dtype), None,
+            ds.astype(s.dtype), None)
 
 
 masked_dense.defvjp(_fwd, _bwd)

@@ -7,10 +7,12 @@ import jax.numpy as jnp
 
 def hash_uniform(idx: jax.Array, seed) -> jax.Array:
     """Must match masked_matmul._hash_uniform exactly."""
-    x = idx.astype(jnp.uint32) + jnp.uint32(0x9E3779B9) * (
-        jnp.asarray(seed, jnp.uint32) + jnp.uint32(1))
+    s = jnp.asarray(seed, jnp.uint32) + jnp.uint32(1)
+    s = (s ^ (s >> 16)) * jnp.uint32(0x45D9F3B5)
+    s = s ^ (s >> 11)
+    x = idx.astype(jnp.uint32) + jnp.uint32(0x9E3779B9) * s
     x = (x ^ (x >> 16)) * jnp.uint32(0x85EBCA6B)
-    x = (x ^ (x >> 13)) * jnp.uint32(0xC2B2AE35)
+    x = (x ^ s ^ (x >> 13)) * jnp.uint32(0xC2B2AE35)
     x = x ^ (x >> 16)
     return (x >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
 
@@ -33,6 +35,67 @@ def sample_mask(s, seed):
            + jnp.arange(N, dtype=jnp.uint32)[None, :])
     u = hash_uniform(idx, seed)
     return (u < jax.nn.sigmoid(s.astype(jnp.float32))).astype(jnp.uint8)
+
+
+def masked_matmul_dx(g, w, s, seed):
+    """Oracle for kernels.masked_matmul_dx: dx = g @ (m ⊙ w)ᵀ with the
+    mask regenerated from the same hash stream as the forward."""
+    m = sample_mask(s, seed).astype(jnp.float32)
+    wm = m * w.astype(jnp.float32)
+    return (g.astype(jnp.float32) @ wm.T).astype(g.dtype)
+
+
+def masked_matmul_ds(x, g, w, s):
+    """Oracle for kernels.masked_matmul_ds: the STE score gradient
+    ds = (xᵀ@g) ⊙ w ⊙ σ(s)(1−σ(s))."""
+    xg = x.astype(jnp.float32).T @ g.astype(jnp.float32)
+    sig = jax.nn.sigmoid(s.astype(jnp.float32))
+    return (xg * w.astype(jnp.float32) * sig * (1.0 - sig)).astype(
+        s.dtype)
+
+
+def masked_dense_bwd(x, w, s, seed, g):
+    """The naive (3-temporary) STE backward — ops._bwd's fallback math
+    and the benchmark baseline: materializes the mask, the masked
+    weights, and xᵀ@g at weight size."""
+    K, N = w.shape
+    x2 = x.reshape(-1, K)
+    g2 = g.reshape(-1, N)
+    m = sample_mask(s, seed).astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    wm = (m * wf).astype(x.dtype)
+    dx = (g2 @ wm.T).reshape(x.shape).astype(x.dtype)
+    xg = x2.astype(jnp.float32).T @ g2.astype(jnp.float32)
+    sig = jax.nn.sigmoid(s.astype(jnp.float32))
+    ds = (xg * wf * sig * (1.0 - sig)).astype(s.dtype)
+    return dx, ds
+
+
+def sample_rows(s2, seeds):
+    """(C, n) score rows + (C,) seeds -> (C, n) uint8 Bernoulli masks.
+
+    Row c is sampled from the flat-index hash stream with seeds[c] —
+    bit-identical to what kernels.sample_and_pack packs."""
+    _, n = s2.shape
+    idx = jnp.arange(n, dtype=jnp.uint32)
+
+    def one(row, seed):
+        u = hash_uniform(idx, seed)
+        return (u < jax.nn.sigmoid(row.astype(jnp.float32))).astype(
+            jnp.uint8)
+
+    return jax.vmap(one)(s2, jnp.asarray(seeds, jnp.uint32))
+
+
+def sample_and_pack(s2, seeds):
+    """Oracle for kernels.sample_and_pack: the two-pass sample-then-pack
+    it fuses.  (C, n) scores -> (C, ceil(n/32)) uint32 words."""
+    m = sample_rows(s2, seeds)
+    n = m.shape[1]
+    pad = (-n) % 32
+    if pad:
+        m = jnp.pad(m, ((0, 0), (0, pad)))
+    return jax.vmap(pack_bits)(m)
 
 
 def pack_bits(mask_flat):

@@ -30,9 +30,26 @@ from repro.api import codecs as codecs_lib
 from repro.api import payloads as plds
 from repro.core import masking, regularizer, aggregation
 from repro.core.masking import MaskedParams
+from repro.kernels import ref as kref
 from repro.launch import sharding as shd
 
 Pytree = Any
+
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """jax.shard_map moved out of jax.experimental after 0.4.x and the
+    check_rep kwarg was later renamed check_vma; both moves happened in
+    different releases, so resolve home and kwarg name independently."""
+    import inspect
+    if hasattr(jax, "shard_map"):
+        sm = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as sm
+    kw = ("check_vma"
+          if "check_vma" in inspect.signature(sm).parameters
+          else "check_rep")
+    return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              **{kw: False})
 
 
 def n_cohorts(mesh) -> int:
@@ -243,6 +260,22 @@ def make_train_step(api, cfg: StepConfig):
 # ---------------------------------------------------------------------------
 
 
+def _mask_stream_seeds(step, dev, leaf_idx: int, C: int) -> jax.Array:
+    """Per-(round, shard, leaf, cohort) uint32 seeds for the counter-based
+    mask sampler.
+
+    The sampler (`kernels.masked_matmul._hash_uniform`) turns each seed
+    into a disjoint slice of one avalanche stream, so distinct seeds give
+    decorrelated Bernoulli draws; mixing with large odd constants keeps
+    the (step, dev, leaf, cohort) -> seed map collision-free in practice.
+    """
+    base = (jnp.asarray(step, jnp.uint32) * jnp.uint32(0x9E3779B9)
+            ^ (jnp.asarray(dev, jnp.uint32) + jnp.uint32(1))
+            * jnp.uint32(0x85EBCA6B)
+            ^ jnp.uint32(leaf_idx * 0xC2B2AE35 & 0xFFFFFFFF))
+    return base + jnp.arange(C, dtype=jnp.uint32) * jnp.uint32(0x01000193)
+
+
 def make_round_step(api, cfg: StepConfig, mesh=None, state_sh=None,
                     codec=None):
     """Cross-pod mask exchange. When `mesh`/`state_sh` are given, the
@@ -265,62 +298,78 @@ def make_round_step(api, cfg: StepConfig, mesh=None, state_sh=None,
     if isinstance(codec, str):
         codec = codecs_lib.get_codec(codec)
 
-    def _sample_local(scores, floats, weights, step, c_idx):
-        base = jax.random.PRNGKey(23)
-        key = jax.random.fold_in(jax.random.fold_in(base, step), c_idx)
-        mp = MaskedParams(weights, scores, floats)
-        return masking.final_mask(mp, key)
-
-    def _agg_local(mask_leaf, pod_axis):
-        """mask_leaf: (C_local, ...) local uint8 shard. Returns the local
-        theta shard (mean over all cohorts everywhere).
-
-        The packed path serializes each cohort's mask with the public
-        `aggregation.pad_to_words`/`pack_bits` pair and reduces through
-        `repro.api.payloads.mean_from_words` — the same transport code
-        the host-sim round engine uses, so the two paths cannot drift.
-        """
-        Cl = mask_leaf.shape[0]
-        body = mask_leaf.shape[1:]
-        flat = mask_leaf.reshape(Cl, -1)
-        n = flat.shape[1]
-        if cfg.packed_masks:
-            words = jax.vmap(
-                lambda r: aggregation.pack_bits(
-                    aggregation.pad_to_words(r)[0]))(flat)  # (Cl, W) u32
-            if pod_axis:
-                words_all = jax.lax.all_gather(words, pod_axis)
-                words_all = words_all.reshape(-1, words.shape[-1])
-            else:
-                words_all = words
-            theta = plds.mean_from_words(words_all, n)
-        else:
-            b = jnp.mean(flat.astype(jnp.bfloat16), axis=0)
-            if pod_axis:
-                b = jax.lax.pmean(b, pod_axis)
-            theta = b.astype(jnp.float32)
-        return theta.reshape(body)
-
     def _round_local(scores, floats, weights, opt_m, step):
-        """Runs per-shard under shard_map (or globally w/o mesh)."""
+        """Runs per-shard under shard_map (or globally w/o mesh).
+
+        Per-leaf uplink: the FUSED sample+pack kernel turns each
+        cohort's score row straight into bit-packed uint32 words
+        (scores -> hash -> Bernoulli -> words in one pass; the uint8
+        mask never exists in HBM on the transport path), then the
+        packed words ride `jax.lax.all_gather` over the 'pod' axis and
+        reduce through `repro.api.payloads.mean_from_words` — the same
+        transport code the host-sim round engine uses, so the two paths
+        cannot drift.  The unpacked (bf16-psum) path samples the SAME
+        counter-based hash streams in pure jnp (`kernels.ref`), so both
+        paths see bit-identical masks.
+        """
         pod_axis = "pod" if has_pod else None
         if mesh is not None:
-            # distinct RNG stream per device shard (same key would give
-            # identical bits on every shard)
+            # distinct hash stream per device shard (same seed would
+            # give identical bits on every shard)
             dev = jnp.int32(0)
             for a in mesh.axis_names:
                 dev = dev * mesh.shape[a] + jax.lax.axis_index(a)
         else:
             dev = jnp.int32(0)
-        masks = _sample_local(scores, floats, weights, step, dev)
 
-        def agg(m):
-            if m is None:
-                return None
-            return _agg_local(m, pod_axis)
-
-        theta = jax.tree_util.tree_map(agg, masks,
-                                       is_leaf=lambda x: x is None)
+        flat_s, tdef = jax.tree_util.tree_flatten(
+            scores, is_leaf=lambda x: x is None)
+        # metering accumulators: per-cohort one-counts via popcount of
+        # the packed words (the uint8 masks where they exist anyway),
+        # plus the pooled per-cohort streams for the codec meter
+        words_exact = hasattr(codec, "measure_pooled_words")
+        theta_flat = []
+        ones_parts, word_parts, bit_parts = [], [], []
+        n_pool, Cl_any = 0, 1
+        for i, sl in enumerate(flat_s):
+            if sl is None:
+                theta_flat.append(None)
+                continue
+            Cl = Cl_any = sl.shape[0]
+            body = sl.shape[1:]
+            flat = sl.reshape(Cl, -1)
+            n = flat.shape[1]
+            seeds = _mask_stream_seeds(step, dev, i, Cl)
+            if cfg.packed_masks:
+                words = aggregation.sample_and_pack_rows(
+                    flat, seeds, use_kernel=True)          # (Cl, W) u32
+                ones_parts.append(jnp.sum(
+                    jax.lax.population_count(words),
+                    axis=1).astype(jnp.float32))
+                if words_exact:
+                    word_parts.append(words)
+                else:  # codec needs gap structure, not just counts
+                    bit_parts.append(jax.vmap(
+                        lambda wd: aggregation.unpack_bits(wd, n)
+                    )(words))
+                if pod_axis:
+                    words_all = jax.lax.all_gather(words, pod_axis)
+                    words_all = words_all.reshape(-1, words.shape[-1])
+                else:
+                    words_all = words
+                theta = plds.mean_from_words(words_all, n)
+            else:
+                masks2 = kref.sample_rows(flat, seeds)
+                ones_parts.append(jnp.sum(
+                    masks2.astype(jnp.float32), axis=1))
+                bit_parts.append(masks2)
+                b = jnp.mean(masks2.astype(jnp.bfloat16), axis=0)
+                if pod_axis:
+                    b = jax.lax.pmean(b, pod_axis)
+                theta = b.astype(jnp.float32)
+            n_pool += n
+            theta_flat.append(theta.reshape(body))
+        theta = jax.tree_util.tree_unflatten(tdef, theta_flat)
         if cfg.downlink_bits:
             # the orphaned k-bit downlink, live: theta crosses the wire
             # stochastically quantized; every shard uses the same key so
@@ -350,20 +399,33 @@ def make_round_step(api, cfg: StepConfig, mesh=None, state_sh=None,
             lambda m: None if m is None else jnp.zeros_like(m),
             opt_m, is_leaf=lambda x: x is None)
         # local bpp estimate (same value on every device up to shard
-        # composition; cheap diagnostic) — the paper's eq. 13 meter
-        bpp = regularizer.empirical_entropy(masks)
-        # measured wire bits: pool every leaf's bits per cohort and ask
-        # the codec — the same `measure_pooled_bits` primitive the
-        # host-sim engine meters payloads with.  Each shard codes its
-        # own slice-stream; the psum over EVERY mesh axis makes the
-        # returned value the exact total of all shards' streams (and
-        # genuinely replicated, as the out_spec declares).
-        flat = [m.reshape(m.shape[0], -1) for m in
-                jax.tree_util.tree_leaves(masks,
-                                          is_leaf=lambda x: x is None)
-                if m is not None]
-        pooled = jnp.concatenate(flat, axis=1).astype(jnp.uint8)
-        per_cohort = jax.vmap(codec.measure_pooled_bits)(pooled)
+        # composition; cheap diagnostic) — the paper's eq. 13 meter,
+        # computed from the popcounts so the packed path never
+        # re-materializes the uint8 mask the fused kernel avoided
+        if n_pool:
+            ones_c = sum(ones_parts)                       # (Cl,)
+            p1 = jnp.sum(ones_c) / jnp.float32(n_pool * Cl_any)
+            bpp = regularizer.binary_entropy(p1)
+        else:
+            bpp = jnp.float32(0.0)
+        # measured wire bits: pool every leaf's stream per cohort and
+        # ask the codec — the same measure_* primitives the host-sim
+        # engine meters payloads with.  Popcount-exact codecs (bitpack,
+        # arithmetic) meter the packed words directly; others get the
+        # unpacked pooled bits.  Each shard codes its own slice-stream;
+        # the psum over EVERY mesh axis makes the returned value the
+        # exact total of all shards' streams (and genuinely replicated,
+        # as the out_spec declares).
+        if word_parts:
+            pooled = jnp.concatenate(word_parts, axis=1)
+            per_cohort = jax.vmap(
+                lambda wr: codec.measure_pooled_words(wr, n_pool)
+            )(pooled)
+        elif bit_parts:
+            pooled = jnp.concatenate(bit_parts, axis=1).astype(jnp.uint8)
+            per_cohort = jax.vmap(codec.measure_pooled_bits)(pooled)
+        else:
+            per_cohort = jnp.zeros((1,), jnp.int32)
         bits_total = jnp.sum(per_cohort.astype(jnp.float32))
         if mesh is not None:
             bits_total = jax.lax.psum(bits_total,
@@ -421,8 +483,8 @@ def make_round_step(api, cfg: StepConfig, mesh=None, state_sh=None,
                  specs_of(state_sh["opt_m"]),
                  jax.sharding.PartitionSpec(),
                  jax.sharding.PartitionSpec())
-    mapped = jax.shard_map(_round_local, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs, check_vma=False)
+    mapped = _shard_map(_round_local, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs)
 
     def round_step(state):
         sc, fl, om, bpp, bits_total = mapped(

@@ -10,7 +10,9 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref, ops
-from repro.kernels.masked_matmul import masked_matmul
+from repro.kernels.masked_matmul import (masked_matmul, masked_matmul_dx,
+                                         masked_matmul_ds,
+                                         sample_and_pack)
 from repro.kernels.bitpack import pack_bits, unpack_bits
 
 
@@ -125,6 +127,138 @@ def test_ops_masked_dense_matches_ref_forward():
         8, 4, 32)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                                rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(128, 512, 512), (256, 512, 1024)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_masked_matmul_dx_allclose(shape, dtype):
+    M, K, N = shape
+    key = jax.random.PRNGKey(M + K + N + 1)
+    kg, kw, ks = jax.random.split(key, 3)
+    g = jax.random.normal(kg, (M, N), jnp.float32).astype(dtype)
+    w = jax.random.normal(kw, (K, N), jnp.float32).astype(dtype)
+    s = jax.random.normal(ks, (K, N), jnp.float32)
+    dx = masked_matmul_dx(g, w, s, 42, interpret=True)
+    dx_ref = ref.masked_matmul_dx(g, w, s, 42)
+    np.testing.assert_allclose(
+        np.asarray(dx, np.float32), np.asarray(dx_ref, np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+        atol=1e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+@pytest.mark.parametrize("shape", [(128, 512, 512), (256, 1024, 512)])
+def test_masked_matmul_ds_allclose(shape):
+    M, K, N = shape
+    key = jax.random.PRNGKey(M + K + N + 2)
+    kx, kg, kw, ks = jax.random.split(key, 4)
+    x = jax.random.normal(kx, (M, K), jnp.float32)
+    g = jax.random.normal(kg, (M, N), jnp.float32)
+    w = jax.random.normal(kw, (K, N), jnp.float32).astype(jnp.bfloat16)
+    s = jax.random.normal(ks, (K, N), jnp.float32)
+    ds = masked_matmul_ds(x, g, w, s, interpret=True)
+    ds_ref = ref.masked_matmul_ds(x, g, w, s)
+    np.testing.assert_allclose(np.asarray(ds), np.asarray(ds_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("blocks", [(128, 128), (256, 128), (128, 256),
+                                    (256, 256)])
+def test_fwd_bwd_ref_masks_bit_identical_across_tilings(blocks):
+    """Fixed-seed fallback for the hypothesis sweep: the forward-kernel
+    mask, the dx-kernel regenerated mask, and ref.sample_mask must agree
+    BIT-EXACTLY regardless of block shape.  With w = 1 and an identity
+    input, the forward returns m and dx returns m^T, both exactly."""
+    bk, bn = blocks
+    K = N = 256
+    s = jax.random.normal(jax.random.PRNGKey(11), (K, N), jnp.float32)
+    w = jnp.ones((K, N), jnp.float32)
+    eye = jnp.eye(K, dtype=jnp.float32)
+    m_fwd = masked_matmul(eye, w, s, 99, bm=128, bn=bn, bk=bk,
+                          interpret=True)
+    m_dx = masked_matmul_dx(jnp.eye(N, dtype=jnp.float32), w, s, 99,
+                            bm=128, bn=bn, bk=bk, interpret=True)
+    m_ref = ref.sample_mask(s, 99).astype(jnp.float32)
+    assert np.array_equal(np.asarray(m_fwd), np.asarray(m_ref))
+    assert np.array_equal(np.asarray(m_dx).T, np.asarray(m_ref))
+
+
+def test_padded_launch_mask_matches_ref_bit_exact():
+    """ops.masked_dense zero-pads MXU-unaligned shapes but hashes the
+    LOGICAL index (n_logical), so the sampled mask must still equal
+    ref.sample_mask on the original shape bit-for-bit."""
+    K, N = 100, 60
+    s = jax.random.normal(jax.random.PRNGKey(5), (K, N), jnp.float32)
+    w = jnp.ones((K, N), jnp.float32)
+    m = ops.masked_dense(jnp.eye(K, dtype=jnp.float32), w, s, 31)
+    m_ref = ref.sample_mask(s, 31).astype(jnp.float32)
+    assert np.array_equal(np.asarray(m), np.asarray(m_ref))
+
+
+@pytest.mark.parametrize("seed,C,n", [
+    (0, 1, 32), (3, 2, 1000), (17, 3, 4096), (101, 2, 33),
+])
+def test_sample_and_pack_matches_ref(seed, C, n):
+    """Fixed-seed fallback for the hypothesis sweep: the fused kernel's
+    words equal the two-pass sample-then-pack oracle exactly."""
+    key = jax.random.PRNGKey(seed)
+    s = jax.random.normal(key, (C, n), jnp.float32)
+    seeds = jnp.arange(C, dtype=jnp.uint32) * 7919 + seed
+    words = sample_and_pack(s, seeds, interpret=True)
+    words_ref = ref.sample_and_pack(s, seeds)
+    assert words.shape == (C, (n + 31) // 32)
+    assert bool(jnp.all(words == words_ref))
+    # lossless round trip back to the jnp-sampled mask
+    m = jax.vmap(lambda wd: ref.unpack_bits(wd, n))(words)
+    assert bool(jnp.all(m == ref.sample_rows(s, seeds)))
+
+
+def test_sample_and_pack_extreme_scores():
+    n = 96
+    s_on = jnp.full((1, n), 40.0)
+    s_off = jnp.full((1, n), -40.0)
+    seeds = jnp.asarray([5], jnp.uint32)
+    assert bool(jnp.all(sample_and_pack(s_on, seeds, interpret=True)
+                        == jnp.uint32(0xFFFFFFFF)))
+    assert bool(jnp.all(sample_and_pack(s_off, seeds, interpret=True)
+                        == 0))
+
+
+@pytest.mark.parametrize("shape", [(32, 64, 16), (40, 100, 60),
+                                   (128, 512, 512)])
+def test_masked_dense_grads_match_ref_oracle(shape):
+    """Fixed-seed fallback for the hypothesis sweep: jax.grad through
+    the fused custom-vjp must match the naive jnp STE backward (same
+    mask, same math) — including MXU-unaligned shapes via padding."""
+    M, K, N = shape
+    key = jax.random.PRNGKey(M + N)
+    kx, kw, ks = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (M, K), jnp.float32)
+    w = jax.random.normal(kw, (K, N), jnp.float32)
+    s = jax.random.normal(ks, (K, N), jnp.float32)
+
+    def loss(x, s):
+        return jnp.sum(ops.masked_dense(x, w, s, 13) ** 2)
+
+    gx, gs = jax.grad(loss, argnums=(0, 1))(x, s)
+    y_ref = ref.masked_matmul(x, w, s, 13)
+    dx_ref, ds_ref = ref.masked_dense_bwd(x, w, s, 13, 2.0 * y_ref)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(dx_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(ds_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_use_interpret_cached_and_forceable(monkeypatch):
+    ops._use_interpret.cache_clear()
+    try:
+        monkeypatch.setenv("REPRO_FORCE_INTERPRET", "1")
+        assert ops._use_interpret() is True
+        # cached: changing the env after the first call has no effect
+        monkeypatch.delenv("REPRO_FORCE_INTERPRET")
+        assert ops._use_interpret() is True
+        assert ops._use_interpret.cache_info().hits >= 1
+    finally:
+        ops._use_interpret.cache_clear()
 
 
 def test_hash_uniform_distribution():

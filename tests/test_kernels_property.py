@@ -1,7 +1,7 @@
-"""Randomized property sweeps for the bitpack kernels.
+"""Randomized property sweeps for the Pallas kernels.
 
 Requires `hypothesis` (the `test` extra); the whole module skips
-cleanly when it is absent — tier-1 coverage of the same round trip
+cleanly when it is absent — tier-1 coverage of the same properties
 lives in test_kernels.py as fixed-seed cases.
 """
 import pytest
@@ -10,10 +10,13 @@ hypothesis = pytest.importorskip("hypothesis")
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.kernels.bitpack import pack_bits, unpack_bits
+from repro.kernels.masked_matmul import (masked_matmul, masked_matmul_dx,
+                                         sample_and_pack)
 
 
 @given(st.integers(0, 2 ** 20), st.integers(1, 64))
@@ -26,3 +29,63 @@ def test_bitpack_roundtrip_property(seed, words):
     assert bool(jnp.all(pk == ref.pack_bits(m)))
     un = unpack_bits(pk, n, interpret=True)
     assert bool(jnp.all(un == m))
+
+
+@given(st.integers(0, 2 ** 20),
+       st.sampled_from([128, 256]), st.sampled_from([128, 256]),
+       st.sampled_from([128, 256]), st.sampled_from([128, 256]))
+@settings(max_examples=10, deadline=None)
+def test_masks_bit_identical_across_tilings_property(
+        seed, bk_f, bn_f, bk_b, bn_b):
+    """Forward-kernel mask, dx-kernel regenerated mask, and
+    ref.sample_mask agree bit-exactly for ANY (seed, tiling) pair —
+    the invariant the STE backward correctness rests on."""
+    K = N = 256
+    s = jax.random.normal(jax.random.PRNGKey(seed % 9973), (K, N),
+                          jnp.float32)
+    w = jnp.ones((K, N), jnp.float32)
+    m_fwd = masked_matmul(jnp.eye(K, dtype=jnp.float32), w, s, seed,
+                          bm=128, bn=bn_f, bk=bk_f, interpret=True)
+    m_dx = masked_matmul_dx(jnp.eye(N, dtype=jnp.float32), w, s, seed,
+                            bm=128, bn=bn_b, bk=bk_b, interpret=True)
+    m_ref = ref.sample_mask(s, seed).astype(jnp.float32)
+    assert np.array_equal(np.asarray(m_fwd), np.asarray(m_ref))
+    assert np.array_equal(np.asarray(m_dx).T, np.asarray(m_ref))
+
+
+@given(st.integers(0, 2 ** 16), st.integers(1, 3),
+       st.integers(1, 3000))
+@settings(max_examples=15, deadline=None)
+def test_sample_and_pack_matches_two_pass_property(seed, C, n):
+    """The fused sample+pack kernel equals sample-then-pack_bits
+    exactly for any row count / length (incl. non-multiples of 32)."""
+    key = jax.random.PRNGKey(seed % 9973)
+    s = jax.random.normal(key, (C, n), jnp.float32)
+    seeds = jnp.arange(C, dtype=jnp.uint32) * 104729 + seed
+    words = sample_and_pack(s, seeds, interpret=True)
+    assert bool(jnp.all(words == ref.sample_and_pack(s, seeds)))
+
+
+@given(st.integers(0, 2 ** 16),
+       st.sampled_from([(8, 32, 16), (40, 100, 60), (16, 130, 70)]))
+@settings(max_examples=10, deadline=None)
+def test_masked_dense_grad_matches_ref_property(seed, shape):
+    """jax.grad through the fused custom-vjp matches the pure-jnp STE
+    oracle to tolerance for arbitrary (incl. unaligned) shapes."""
+    M, K, N = shape
+    key = jax.random.PRNGKey(seed % 9973)
+    kx, kw, ks = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (M, K), jnp.float32)
+    w = jax.random.normal(kw, (K, N), jnp.float32)
+    s = jax.random.normal(ks, (K, N), jnp.float32)
+
+    def loss(x, s):
+        return jnp.sum(ops.masked_dense(x, w, s, seed) ** 2)
+
+    gx, gs = jax.grad(loss, argnums=(0, 1))(x, s)
+    y_ref = ref.masked_matmul(x, w, s, seed)
+    dx_ref, ds_ref = ref.masked_dense_bwd(x, w, s, seed, 2.0 * y_ref)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(dx_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(ds_ref),
+                               rtol=1e-4, atol=1e-4)
