@@ -1,5 +1,5 @@
 """Shared benchmark scaffolding: the paper's experimental grid on the
-synthetic tasks (offline container — see DESIGN.md §7), reduced-scale by
+synthetic tasks (offline container — see docs/DESIGN.md §7), reduced-scale by
 default so a full figure reproduces in CPU minutes."""
 from __future__ import annotations
 

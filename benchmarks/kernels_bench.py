@@ -1,7 +1,7 @@
 """Kernel benchmark harness: fused masked-matmul forward/backward and
 the fused sample+pack uplink kernel vs their pure-jnp oracles.
 
-Two kinds of output:
+Three kinds of output:
 
   * Timings — median-of-N `time.perf_counter` wall clock (after separate
     warmup calls) for fwd / bwd / sample+pack across a shape zoo drawn
@@ -14,11 +14,25 @@ Two kinds of output:
     the pallas_call boundary.  The count runs on the jaxpr (where
     `pallas_call` is a single opaque equation) rather than compiled HLO
     text, because interpret-mode emulation inlines full-size plumbing
-    buffers into the compiled module that do not exist on TPU.  The
-    naive path materializes sigmoid(s), the hash uniforms, m*w and
-    x^T@g at weight size; the fused forward AND backward must define
-    zero such values.  Compiled-HLO substring counts are still reported
-    (informational) for continuity with the original forward check.
+    buffers into the compiled module that do not exist on TPU.  Pure
+    view/layout equations (squeeze/reshape — how `lax.scan` feeds the
+    per-layer score slice to the kernel; XLA aliases them) are not
+    counted: the invariant is about weight-sized values COMPUTED
+    outside the kernel.  The naive path materializes sigmoid(s), the
+    hash uniforms, m*w and x^T@g at weight size; the fused forward AND
+    backward must define zero such values.  Compiled-HLO substring
+    counts are still reported (informational) for continuity with the
+    original forward check.
+
+  * Whole-model step — the same invariant asserted END-TO-END on a
+    jitted `launch.steps.make_train_step` for an MXU-aligned
+    transformer-block config: the jaxpr of the full train step
+    (forward AND backward, scores as a first-class grad argument)
+    defines zero weight-shaped f32 values outside `pallas_call` for
+    EVERY masked block shape, while the materialized reference path
+    (`REPRO_EFF_PATH=1`) scores > 0 on each — proving the model zoo's
+    masked-execution routing delivers the kernel win at the training
+    hot path, not just per layer.  Timed fused vs. materialized.
 
 Run:  PYTHONPATH=src python benchmarks/kernels_bench.py [--iters N]
       [--warmup N] [--max-dim D] [--json PATH]
@@ -27,6 +41,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import statistics
 import time
 
@@ -35,7 +50,11 @@ import jax.numpy as jnp
 from jax import core as jcore
 
 from repro.configs import get_config
+from repro.configs.base import ArchConfig
+from repro.core import masking
 from repro.kernels import ref, ops
+from repro.launch import steps as steplib
+from repro.models import build_model
 
 
 # ---------------------------------------------------------------------------
@@ -100,15 +119,22 @@ def shape_zoo(max_dim: int = 1536, m: int = 256):
 _CHECK_SHAPE = (256, 1024, 1024)  # MXU-aligned so no pad/slice eqns
 
 
-def count_weight_f32_defs(fn, args, weight_shape) -> int:
-    """Number of jaxpr equations (recursively) defining an f32 value of
-    `weight_shape` outside any `pallas_call`.
+# pure view/layout primitives: no new value is computed, XLA aliases
+# them to the operand (lax.scan feeds per-layer score slices to the
+# kernels through squeeze) — not weight-sized HBM traffic
+_VIEW_PRIMS = frozenset({"squeeze", "reshape"})
+
+
+def count_weight_f32_defs_jaxpr(jaxpr, weight_shape) -> int:
+    """Number of equations (recursively) in a jaxpr defining an f32
+    value of `weight_shape` outside any `pallas_call`.
 
     Call-like equations that merely forward inner results (pjit,
     custom_vjp, scan, ...) are recursed into instead of counted, so a
     hit is a real weight-sized compute/materialization step; the
     pallas_call equation itself is never descended into — its innards
-    live in VMEM, which is the entire point.
+    live in VMEM, which is the entire point.  View-only equations
+    (`_VIEW_PRIMS`) are skipped.
     """
     tgt = (tuple(weight_shape), jnp.dtype(jnp.float32))
     n_hits = 0
@@ -136,14 +162,22 @@ def count_weight_f32_defs(fn, args, weight_shape) -> int:
                 for j in inner:
                     walk(j)
                 continue  # call wrapper: count only the defining eqns
+            if eqn.primitive.name in _VIEW_PRIMS:
+                continue
             for v in eqn.outvars:
                 aval = getattr(v, "aval", None)
                 if aval is not None and (
                         tuple(aval.shape), aval.dtype) == tgt:
                     n_hits += 1
 
-    walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    walk(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
     return n_hits
+
+
+def count_weight_f32_defs(fn, args, weight_shape) -> int:
+    """`count_weight_f32_defs_jaxpr` of `jax.make_jaxpr(fn)(*args)`."""
+    return count_weight_f32_defs_jaxpr(jax.make_jaxpr(fn)(*args),
+                                       weight_shape)
 
 
 def _check_operands(M, K, N):
@@ -181,6 +215,93 @@ def weight_temporaries_bwd():
     args = (x, w, s, g)
     return (count_weight_f32_defs(naive, args, (K, N)),
             count_weight_f32_defs(fused, args, (K, N)))
+
+
+# ---------------------------------------------------------------------------
+# Whole-model check: the invariant on a full transformer-block train step
+# ---------------------------------------------------------------------------
+
+# MXU-aligned transformer block config: every masked (K, N) block —
+# w_q/w_k/w_v/w_o (128, 128), w_up/w_gate (128, 256), w_down (256, 128)
+# — is lane-aligned, so `masked_dense` launches unpadded and the count
+# below is exact.  vocab=320 keeps the (float) unembed cast from
+# colliding with any masked block shape.
+MODEL_CHECK_CFG = ArchConfig(
+    name="bench-aligned", family="dense", n_layers=2, d_model=128,
+    n_heads=2, n_kv_heads=2, d_ff=256, vocab=320, head_dim=64)
+
+
+def model_step_setup(C: int = 1, B: int = 2, S: int = 64):
+    """(api, fed state, cohort batch) for MODEL_CHECK_CFG."""
+    api = build_model(MODEL_CHECK_CFG)
+    state = steplib.init_fed_state(jax.random.PRNGKey(0), api,
+                                   masking.MaskSpec(), C=C)
+    tokens = (jnp.arange(B * S, dtype=jnp.int32).reshape(B, S) * 3) \
+        % MODEL_CHECK_CFG.vocab
+    batch = {"tokens": jnp.broadcast_to(tokens, (C, B, S))}
+    return api, state, batch
+
+
+def masked_block_shapes(state):
+    """Distinct trailing-2D block shapes of every masked leaf."""
+    return sorted({tuple(l.shape[-2:]) for l in
+                   jax.tree_util.tree_leaves(state["scores"])
+                   if l is not None})
+
+
+def _trace_model_step(api, state, batch, scfg, eff_path: bool):
+    prev = os.environ.get("REPRO_EFF_PATH")
+    os.environ["REPRO_EFF_PATH"] = "1" if eff_path else "0"
+    try:
+        step = steplib.make_train_step(api, scfg)
+        # compile INSIDE the env guard — the path is chosen at trace time
+        compiled = jax.jit(step).lower(state, batch).compile()
+        return jax.make_jaxpr(step)(state, batch), compiled
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_EFF_PATH", None)
+        else:
+            os.environ["REPRO_EFF_PATH"] = prev
+
+
+def model_step_weight_defs(iters: int = 0, warmup: int = 1):
+    """The end-to-end invariant on the jitted whole-model train step.
+
+    Two granularities:
+      * block shapes (K, N) — what one `masked_dense` launch consumes;
+        the FUSED path must define ZERO f32 values at any of them
+        outside pallas_call (forward and backward).
+      * full leaf shapes (C, L, K, N) — where the materialized
+        REPRO_EFF_PATH reference pays: hash uniforms, sigmoid(theta),
+        the STE mask.  Both paths share the score-sized regularizer /
+        optimizer arithmetic at this scale, so the assertion is
+        RELATIVE: eff must define strictly more than fused on every
+        leaf.
+    """
+    api, state, batch = model_step_setup()
+    scfg = steplib.StepConfig(lam=0.1, lr=0.5)
+    fused_jx, fused_fn = _trace_model_step(api, state, batch, scfg,
+                                           eff_path=False)
+    eff_jx, eff_fn = _trace_model_step(api, state, batch, scfg,
+                                       eff_path=True)
+    out = {"block_shapes": {}, "leaf_shapes": {}}
+    for sh in masked_block_shapes(state):
+        out["block_shapes"]["x".join(map(str, sh))] = {
+            "eff": count_weight_f32_defs_jaxpr(eff_jx, sh),
+            "fused": count_weight_f32_defs_jaxpr(fused_jx, sh)}
+    leaf_shapes = sorted({tuple(l.shape) for l in
+                          jax.tree_util.tree_leaves(state["scores"])
+                          if l is not None})
+    for sh in leaf_shapes:
+        out["leaf_shapes"]["x".join(map(str, sh))] = {
+            "eff": count_weight_f32_defs_jaxpr(eff_jx, sh),
+            "fused": count_weight_f32_defs_jaxpr(fused_jx, sh)}
+    if iters:
+        out["train_step_us"] = timed(fused_fn, state, batch,
+                                     iters=iters, warmup=warmup)
+        out["train_step_eff_us"] = timed(eff_fn, state, batch,
+                                         iters=iters, warmup=warmup)
+    return out
 
 
 def hbm_weight_tensors_baseline_vs_fused():
@@ -314,6 +435,30 @@ def main(argv=None) -> dict:
     results["hlo_substring_counts"] = {"fwd_naive": nb, "fwd_fused": nf}
     print(f"hbm_weight_tensors_baseline,{nb},count")
     print(f"hbm_weight_tensors_fused,{nf},count")
+
+    # end-to-end: the invariant on a jitted whole-model train step (a
+    # full transformer block stack, forward AND backward) — the model
+    # zoo's masked-execution routing must leave ZERO weight-shaped f32
+    # defs outside pallas_call for every masked block shape, while the
+    # materialized REPRO_EFF_PATH reference scores > 0 on each
+    model = model_step_weight_defs(iters=args.iters, warmup=args.warmup)
+    results["model_step"] = model
+    for sh, cts in model["block_shapes"].items():
+        print(f"model_step_block_f32_defs_{sh}_fused,"
+              f"{cts['fused']},count")
+        assert cts["fused"] == 0, \
+            f"model step defines {cts['fused']} weight-f32 values " \
+            f"for block {sh} outside pallas_call"
+    for sh, cts in model["leaf_shapes"].items():
+        print(f"model_step_leaf_f32_defs_{sh},"
+              f"{cts['eff']}:{cts['fused']},eff:fused")
+        assert cts["eff"] > cts["fused"], \
+            f"materialized path lost its {sh} temporaries — check " \
+            "the counter"
+    if "train_step_us" in model:
+        print(f"model_train_step,{model['train_step_us']:.0f},fused")
+        print(f"model_train_step_eff,{model['train_step_eff_us']:.0f},"
+              "materialized")
 
     assert len(results["shapes"]) >= 3, results["shapes"]
     with open(args.json, "w") as f:

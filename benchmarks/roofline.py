@@ -7,7 +7,7 @@ Terms (v5e targets, per DESIGN):
 
 cost_analysis() is PER-PARTITION (verified against a hand-sharded
 matmul), so the per-chip terms read off directly. Caveat (documented in
-EXPERIMENTS.md): XLA cost analysis counts a lax.scan body ONCE, so
+docs/DESIGN.md §7): XLA cost analysis counts a lax.scan body ONCE, so
 layer-stacked HLO_FLOPs under-count by ~n_layers for scanned stacks; the
 hillclimb cells are re-lowered with scan_unroll=n_layers for exact
 numbers, and MODEL_FLOPS = 6*N_active*D provides the analytic anchor

@@ -150,5 +150,5 @@ SHAPES = {
     "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
 }
 
-# archs allowed to run long_500k (sub-quadratic memory path); see DESIGN.md
+# archs allowed to run long_500k (sub-quadratic memory path); see docs/DESIGN.md
 LONG_CONTEXT_OK = {"mamba2-370m", "recurrentgemma-9b", "gemma3-4b"}

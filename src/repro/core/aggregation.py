@@ -142,7 +142,8 @@ def aggregate_floats(float_trees: Sequence[Pytree],
 
 
 def sample_and_pack_rows(flat_scores: jax.Array, seeds: jax.Array,
-                         use_kernel: bool = False) -> jax.Array:
+                         use_kernel: bool = False, mode: str = "sample",
+                         tau: float = 0.5) -> jax.Array:
     """Fused per-cohort uplink sampling + 32->1 bitpack.
 
     (C, n) score rows + (C,) uint32 seeds -> (C, ceil(n/32)) uint32
@@ -151,13 +152,15 @@ def sample_and_pack_rows(flat_scores: jax.Array, seeds: jax.Array,
     fused masked-matmul kernels regenerate).  With ``use_kernel`` the
     one-pass Pallas kernel runs (scores -> hash -> Bernoulli -> words;
     no uint8 mask in HBM); otherwise the pure-jnp two-pass reference —
-    the two are bit-identical.
+    the two are bit-identical.  ``mode="threshold"`` packs the
+    deterministic FedMask mask 1[sigmoid(s) > tau] (seeds ignored).
     """
     if use_kernel:
         from repro.kernels import ops as _kops
-        return _kops.sample_and_pack(flat_scores, seeds)
+        return _kops.sample_and_pack(flat_scores, seeds, mode=mode,
+                                     tau=tau)
     from repro.kernels import ref as _kref
-    return _kref.sample_and_pack(flat_scores, seeds)
+    return _kref.sample_and_pack(flat_scores, seeds, mode=mode, tau=tau)
 
 
 # ---------------------------------------------------------------------------

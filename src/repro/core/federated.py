@@ -11,7 +11,7 @@ Protocol per round t (Sec. II of the paper):
 Clients are vmapped: `client_data` carries a leading K axis. Partial
 participation / node failure / stragglers are a per-round boolean vector:
 missing clients are renormalized out of the mean — this IS the fault
-model at 1000-node scale (see DESIGN.md §5).
+model at 1000-node scale (see docs/DESIGN.md §5).
 """
 from __future__ import annotations
 

@@ -11,8 +11,20 @@ straight-through estimator (STE): d m / d theta := 1.
 
 Everything here is pytree-generic: a model is any pytree of parameter
 leaves; which leaves are maskable is decided by a `MaskSpec` predicate so
-norm scales / biases / routers can stay float (see DESIGN.md
+norm scales / biases / routers can stay float (see docs/DESIGN.md
 §Arch-applicability).
+
+Two execution paths consume these primitives (docs/DESIGN.md §3):
+
+  * the FUSED path — `masked_forward_tree` merges (weights, scores,
+    floats) into one params pytree whose maskable leaves are
+    `MaskedLeaf` bundles; the model zoo routes those through the Pallas
+    kernels (`repro.models.layers.masked_dense_apply`), regenerating
+    the mask per tile from the counter-based hash stream.
+  * the REFERENCE path — `sample_effective` (PRNG draw; serving, eval,
+    the host-sim engine) and `hash_effective` (the materialized twin of
+    the fused path: identical hash-stream masks, effective params at
+    full weight size).
 """
 from __future__ import annotations
 
@@ -21,6 +33,8 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import ref as _kref
 
 Pytree = Any
 
@@ -126,8 +140,16 @@ class MaskSpec:
 
     def is_masked(self, path: str, leaf: jax.Array) -> bool:
         lp = path.lower()
-        if any(p in lp for p in self.float_patterns):
-            return False
+        parts = lp.split("/")
+        for p in self.float_patterns:
+            pl = p.lower()
+            # substring for descriptive patterns; single-letter patterns
+            # ("D") must match a whole path component — patterns are
+            # matched case-insensitively (the dynamics params A_log / D
+            # are float: masking a decay rate destroys stability,
+            # docs/DESIGN.md §Arch-applicability)
+            if (len(pl) > 1 and pl in lp) or pl in parts:
+                return False
         if not self.mask_embeddings and ("embed" in lp or "unembed" in lp
                                          or "lm_head" in lp):
             return False
@@ -251,6 +273,140 @@ def sample_effective(mp: MaskedParams, key: jax.Array,
         ki += 1
         out.append((m.astype(w.dtype) * w))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Masked execution: the (w, s, seed) convention shared with the uplink
+# ---------------------------------------------------------------------------
+
+
+def mask_stream_seed(step, dev, leaf_idx: int, cohort, run_seed=0):
+    """The deterministic (run, step, shard, leaf, cohort) -> uint32 seed
+    convention for the counter-based mask sampler.
+
+    ONE implementation serves both consumers: the per-round uplink
+    (`launch.steps` -> `aggregation.sample_and_pack_rows`) and the
+    fused model forward (`masked_forward_tree`), so a leaf's forward
+    mask under seed sigma is bit-identical to the words
+    `sample_and_pack` packs for that leaf under the same sigma.
+
+    The sampler (`kernels.masked_matmul._hash_uniform`) turns each seed
+    into a disjoint slice of one avalanche stream, so distinct seeds
+    give decorrelated Bernoulli draws; mixing with large odd constants
+    keeps the tuple -> seed map collision-free in practice.  `cohort`
+    may be a scalar or an array (vectorized over cohorts).
+    """
+    base = (jnp.asarray(step, jnp.uint32) * jnp.uint32(0x9E3779B9)
+            ^ (jnp.asarray(dev, jnp.uint32) + jnp.uint32(1))
+            * jnp.uint32(0x85EBCA6B)
+            ^ jnp.uint32(leaf_idx * 0xC2B2AE35 & 0xFFFFFFFF)
+            ^ jnp.asarray(run_seed, jnp.uint32) * jnp.uint32(0x7FEB352D))
+    return base + jnp.asarray(cohort, jnp.uint32) * jnp.uint32(0x01000193)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MaskedLeaf:
+    """One maskable tensor on the fused execution path: frozen random
+    weights `w`, trainable score logits `s`, and the hash-stream
+    coordinates (`seed`, `off`) that make its sampled mask a slice of
+    the leaf's flat uplink stream.
+
+    For a leaf of shape lead + (K, N), `seed` and `off` have shape
+    `lead`: every trailing 2-D block is an independent kernel launch
+    whose flat hash index starts at off[block] = block_idx * K * N —
+    under `jax.lax.scan` over a layer-stacked (L, K, N) leaf the slices
+    stay self-describing.  `mode`/`tau` are static aux data ("sample"
+    for the Bernoulli draw, "threshold" for FedMask).
+    """
+    w: Any
+    s: Any
+    seed: Any
+    off: Any
+    mode: str = "sample"
+    tau: float = 0.5
+
+    def tree_flatten(self):
+        return ((self.w, self.s, self.seed, self.off),
+                (self.mode, self.tau))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @classmethod
+    def build(cls, w, s, seed, mode: str = "sample", tau: float = 0.5):
+        """Bundle a maskable leaf with its stream coordinates.  `seed`
+        is a scalar; it is broadcast over the leading (layer-stack /
+        expert / kernel-tap) axes with per-block flat-index offsets."""
+        lead = w.shape[:-2]
+        K, N = w.shape[-2:]
+        nblk = 1
+        for d in lead:
+            nblk *= d
+        off = (jnp.arange(nblk, dtype=jnp.uint32)
+               * jnp.uint32(K * N)).reshape(lead)
+        seed = jnp.broadcast_to(jnp.asarray(seed, jnp.uint32), lead)
+        return cls(w, s, seed, off, mode, tau)
+
+
+def materialize_leaf(leaf: MaskedLeaf) -> jax.Array:
+    """Effective weights m * w for one MaskedLeaf, masks bit-identical
+    to the fused kernels' (same hash stream, same offsets), STE grads.
+
+    The unfused fallback for consumers `masked_dense` cannot express
+    (conv kernels, stacked MoE experts) — materializes one weight-sized
+    temporary, so keep it off the transformer hot path.
+    """
+    K, N = leaf.w.shape[-2:]
+    theta = sigmoid(leaf.s.astype(jnp.float32))
+    if leaf.mode == "threshold":
+        m = ste_threshold(theta, leaf.tau)
+    else:
+        idx = (leaf.off[..., None, None]
+               + jnp.arange(K * N, dtype=jnp.uint32).reshape(K, N))
+        u = _kref.hash_uniform(idx, leaf.seed[..., None, None])
+        m = ste_bernoulli(theta, u)
+    return m.astype(leaf.w.dtype) * leaf.w
+
+
+def masked_forward_tree(mp: MaskedParams, seed_fn: Callable,
+                        mode: str = "sample", tau: float = 0.5) -> Pytree:
+    """Merge MaskedParams into ONE params pytree for `api.forward`:
+    maskable leaves become `MaskedLeaf` bundles (the fused execution
+    path), float leaves pass through unchanged.
+
+    `seed_fn(leaf_idx) -> uint32 scalar` supplies the per-leaf stream
+    seed; leaf indices enumerate the flattened tree (None leaves
+    included), matching the uplink's enumeration in
+    `launch.steps.make_round_step` exactly.
+    """
+    flat_w, treedef = jax.tree_util.tree_flatten(
+        mp.weights, is_leaf=lambda x: x is None)
+    flat_s, _ = jax.tree_util.tree_flatten(
+        mp.scores, is_leaf=lambda x: x is None)
+    flat_f, _ = jax.tree_util.tree_flatten(
+        mp.floats, is_leaf=lambda x: x is None)
+    out = []
+    for i, (w, s, f) in enumerate(zip(flat_w, flat_s, flat_f)):
+        if w is None:
+            out.append(f)
+            continue
+        out.append(MaskedLeaf.build(w, s, seed_fn(i), mode, tau))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def hash_effective(mp: MaskedParams, seed_fn: Callable,
+                   mode: str = "sample", tau: float = 0.5) -> Pytree:
+    """Materialized twin of `masked_forward_tree`: effective params
+    m * w with the SAME hash-stream masks as the fused kernels (the
+    REPRO_EFF_PATH=1 escape hatch and the path-equivalence oracle).
+    """
+    return jax.tree_util.tree_map(
+        lambda p: materialize_leaf(p) if isinstance(p, MaskedLeaf)
+        else p,
+        masked_forward_tree(mp, seed_fn, mode, tau),
+        is_leaf=lambda x: x is None or isinstance(x, MaskedLeaf))
 
 
 def final_mask(mp: MaskedParams, key: jax.Array) -> Pytree:

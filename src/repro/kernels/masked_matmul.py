@@ -34,7 +34,16 @@ reproduces it with pure jnp for the allclose oracle.  `n_logical` lets a
 caller zero-pad operands to MXU alignment while keeping the hash indexed
 by the LOGICAL column count, so padded and unpadded launches sample
 bit-identical masks (padding columns carry w == 0 and contribute
-nothing).
+nothing).  The `off` operand shifts the flat hash index: a layer-stacked
+(L, K, N) leaf sampled through per-layer kernel launches with
+off = l*K*N draws exactly the bits `sample_and_pack` packs for the full
+flattened leaf — the model-forward masks and the uplink stream are one
+stream (docs/DESIGN.md §3).
+
+`mode="threshold"` swaps the Bernoulli draw for the deterministic
+FedMask predicate m = 1[sigmoid(s) > tau] (tau rides as a runtime
+scalar operand, so no retrace per tau); the hash/seed/off operands are
+ignored in that mode.
 
 Block shapes default to (128, 512, 512) — MXU-aligned (multiples of
 128) and VMEM-safe: bm*bk + 2*bk*bn + bm*bn tiles ≈ 128*512*4B +
@@ -70,8 +79,21 @@ def _hash_uniform(idx: jax.Array, seed) -> jax.Array:
     return (x >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
 
 
-def _kernel(x_ref, w_ref, s_ref, seed_ref, o_ref, acc_ref, *,
-            bk: int, bn: int, n_total: int, nk: int):
+def _tile_mask(s_ref, seed_ref, off_ref, tau_ref, *, row0, col0,
+               bk: int, bn: int, n_total: int, mode: str):
+    """Bernoulli (hash-stream) or threshold mask for one (bk, bn) tile."""
+    theta = jax.nn.sigmoid(s_ref[...].astype(jnp.float32))
+    if mode == "threshold":
+        return theta > tau_ref[0]
+    rows = row0 + jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 0)
+    cols = col0 + jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 1)
+    idx = off_ref[0] + rows * jnp.uint32(n_total) + cols
+    return _hash_uniform(idx, seed_ref[0]) < theta
+
+
+def _kernel(x_ref, w_ref, s_ref, seed_ref, off_ref, tau_ref, o_ref,
+            acc_ref, *, bk: int, bn: int, n_total: int, nk: int,
+            mode: str):
     k_i = pl.program_id(2)
 
     @pl.when(k_i == 0)
@@ -80,15 +102,9 @@ def _kernel(x_ref, w_ref, s_ref, seed_ref, o_ref, acc_ref, *,
 
     # global element indices of this (bk, bn) tile of w/s
     n_i = pl.program_id(1)
-    row0 = k_i * bk
-    col0 = n_i * bn
-    rows = row0 + jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 0)
-    cols = col0 + jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 1)
-    idx = rows * jnp.uint32(n_total) + cols
-
-    u = _hash_uniform(idx, seed_ref[0])
-    theta = jax.nn.sigmoid(s_ref[...].astype(jnp.float32))
-    m = (u < theta)
+    m = _tile_mask(s_ref, seed_ref, off_ref, tau_ref,
+                   row0=k_i * jnp.uint32(bk), col0=n_i * jnp.uint32(bn),
+                   bk=bk, bn=bn, n_total=n_total, mode=mode)
     wm = jnp.where(m, w_ref[...].astype(jnp.float32), 0.0)
     acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), wm,
                             preferred_element_type=jnp.float32)
@@ -98,15 +114,29 @@ def _kernel(x_ref, w_ref, s_ref, seed_ref, o_ref, acc_ref, *,
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _scalar_operands(seed, off, tau):
+    return (jnp.asarray(seed, jnp.uint32).reshape(1),
+            jnp.asarray(off, jnp.uint32).reshape(1),
+            jnp.asarray(tau, jnp.float32).reshape(1))
+
+
+_SCALAR_SPECS = [pl.BlockSpec((1,), lambda i, j, k: (0,))] * 3
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk",
-                                             "n_logical", "interpret"))
+                                             "n_logical", "interpret",
+                                             "mode"))
 def masked_matmul(x: jax.Array, w: jax.Array, s: jax.Array,
-                  seed: jax.Array, *, bm: int = 128, bn: int = 512,
-                  bk: int = 512, n_logical: int | None = None,
-                  interpret: bool = False) -> jax.Array:
-    """x: (M, K) bf16/f32; w, s: (K, N); seed: scalar uint32.
+                  seed: jax.Array, off: jax.Array = 0, *, bm: int = 128,
+                  bn: int = 512, bk: int = 512,
+                  n_logical: int | None = None, interpret: bool = False,
+                  mode: str = "sample", tau: jax.Array = 0.5
+                  ) -> jax.Array:
+    """x: (M, K) bf16/f32; w, s: (K, N); seed/off: scalar uint32.
     Returns (M, N) in x.dtype.  `n_logical` overrides the column count
-    used for the hash index (for zero-padded launches)."""
+    used for the hash index (for zero-padded launches); `off` shifts the
+    flat hash index (layer-stacked leaves).  `mode="threshold"` uses the
+    deterministic m = 1[sigmoid(s) > tau] mask instead of the hash."""
     M, K = x.shape
     K2, N = w.shape
     assert K == K2 and s.shape == (K, N)
@@ -118,7 +148,7 @@ def masked_matmul(x: jax.Array, w: jax.Array, s: jax.Array,
 
     grid = (nm, nn, nk)
     kernel = functools.partial(_kernel, bk=bk_, bn=bn_, n_total=n_total,
-                               nk=nk)
+                               nk=nk, mode=mode)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -126,13 +156,12 @@ def masked_matmul(x: jax.Array, w: jax.Array, s: jax.Array,
             pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),
             pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),
             pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),
-            pl.BlockSpec((1,), lambda i, j, k: (0,)),
-        ],
+        ] + _SCALAR_SPECS,
         out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
         interpret=interpret,
-    )(x, w, s, jnp.asarray(seed, jnp.uint32).reshape(1))
+    )(x, w, s, *_scalar_operands(seed, off, tau))
 
 
 # ---------------------------------------------------------------------------
@@ -140,8 +169,9 @@ def masked_matmul(x: jax.Array, w: jax.Array, s: jax.Array,
 # ---------------------------------------------------------------------------
 
 
-def _dx_kernel(g_ref, w_ref, s_ref, seed_ref, o_ref, acc_ref, *,
-               bk: int, bn: int, n_total: int, nn: int):
+def _dx_kernel(g_ref, w_ref, s_ref, seed_ref, off_ref, tau_ref, o_ref,
+               acc_ref, *, bk: int, bn: int, n_total: int, nn: int,
+               mode: str):
     n_i = pl.program_id(2)
 
     @pl.when(n_i == 0)
@@ -152,15 +182,9 @@ def _dx_kernel(g_ref, w_ref, s_ref, seed_ref, o_ref, acc_ref, *,
     # row-major flat index the forward kernel hashes, so the regenerated
     # mask is bit-identical to the forward sample
     k_i = pl.program_id(1)
-    row0 = k_i * bk
-    col0 = n_i * bn
-    rows = row0 + jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 0)
-    cols = col0 + jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 1)
-    idx = rows * jnp.uint32(n_total) + cols
-
-    u = _hash_uniform(idx, seed_ref[0])
-    theta = jax.nn.sigmoid(s_ref[...].astype(jnp.float32))
-    m = (u < theta)
+    m = _tile_mask(s_ref, seed_ref, off_ref, tau_ref,
+                   row0=k_i * jnp.uint32(bk), col0=n_i * jnp.uint32(bn),
+                   bk=bk, bn=bn, n_total=n_total, mode=mode)
     wm = jnp.where(m, w_ref[...].astype(jnp.float32), 0.0)   # (bk, bn)
     # contract over the n axis: (bm, bn) x (bk, bn) -> (bm, bk)
     acc_ref[...] += jax.lax.dot_general(
@@ -174,17 +198,21 @@ def _dx_kernel(g_ref, w_ref, s_ref, seed_ref, o_ref, acc_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk",
-                                             "n_logical", "interpret"))
+                                             "n_logical", "interpret",
+                                             "mode"))
 def masked_matmul_dx(g: jax.Array, w: jax.Array, s: jax.Array,
-                     seed: jax.Array, *, bm: int = 128, bn: int = 512,
-                     bk: int = 512, n_logical: int | None = None,
-                     interpret: bool = False) -> jax.Array:
+                     seed: jax.Array, off: jax.Array = 0, *,
+                     bm: int = 128, bn: int = 512, bk: int = 512,
+                     n_logical: int | None = None,
+                     interpret: bool = False, mode: str = "sample",
+                     tau: jax.Array = 0.5) -> jax.Array:
     """g: (M, N) upstream cotangent; w, s: (K, N).  Returns
     dx = g @ (m ⊙ w)ᵀ : (M, K) in g.dtype.
 
     The transposed access pattern gets its own grid/BlockSpec layout
     (accumulation runs over the n axis, innermost), not a reuse of the
-    forward grid.
+    forward grid.  `off`/`mode`/`tau` as in `masked_matmul` — the
+    regenerated mask is bit-identical to the forward's.
     """
     M, N = g.shape
     K, N2 = w.shape
@@ -197,7 +225,7 @@ def masked_matmul_dx(g: jax.Array, w: jax.Array, s: jax.Array,
 
     grid = (nm, nk, nn)
     kernel = functools.partial(_dx_kernel, bk=bk_, bn=bn_,
-                               n_total=n_total, nn=nn)
+                               n_total=n_total, nn=nn, mode=mode)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -205,13 +233,12 @@ def masked_matmul_dx(g: jax.Array, w: jax.Array, s: jax.Array,
             pl.BlockSpec((bm_, bn_), lambda i, k, n: (i, n)),
             pl.BlockSpec((bk_, bn_), lambda i, k, n: (k, n)),
             pl.BlockSpec((bk_, bn_), lambda i, k, n: (k, n)),
-            pl.BlockSpec((1,), lambda i, k, n: (0,)),
-        ],
+        ] + _SCALAR_SPECS,
         out_specs=pl.BlockSpec((bm_, bk_), lambda i, k, n: (i, k)),
         out_shape=jax.ShapeDtypeStruct((M, K), g.dtype),
         scratch_shapes=[pltpu.VMEM((bm_, bk_), jnp.float32)],
         interpret=interpret,
-    )(g, w, s, jnp.asarray(seed, jnp.uint32).reshape(1))
+    )(g, w, s, *_scalar_operands(seed, off, tau))
 
 
 # ---------------------------------------------------------------------------
@@ -279,7 +306,8 @@ def masked_matmul_ds(x: jax.Array, g: jax.Array, w: jax.Array,
 # ---------------------------------------------------------------------------
 
 
-def _sap_kernel(s_ref, seed_ref, o_ref, *, bw: int, n_total: int):
+def _sap_kernel(s_ref, seed_ref, o_ref, *, bw: int, n_total: int,
+                mode: str, tau: float):
     i = pl.program_id(1)
     # word/lane coordinates of this (1, bw, 32) tile; bit j of word wi
     # carries flat element wi*32 + j (little-endian, matching pack_bits)
@@ -287,22 +315,29 @@ def _sap_kernel(s_ref, seed_ref, o_ref, *, bw: int, n_total: int):
     lanes = jax.lax.broadcasted_iota(jnp.uint32, (1, bw, 32), 2)
     idx = (words * jnp.uint32(32) + lanes).astype(jnp.uint32)
 
-    u = _hash_uniform(idx, seed_ref[0])
     theta = jax.nn.sigmoid(s_ref[...].astype(jnp.float32))
+    if mode == "threshold":
+        m = theta > jnp.float32(tau)
+    else:
+        m = _hash_uniform(idx, seed_ref[0]) < theta
     # padding bits (idx >= n_total) are forced to zero so the packed
     # words match pack_bits(pad_to_words(mask)) exactly
-    m = (u < theta) & (idx < jnp.uint32(n_total))
+    m = m & (idx < jnp.uint32(n_total))
     bits = m.astype(jnp.uint32) << lanes
     o_ref[...] = jnp.sum(bits, axis=2).astype(jnp.uint32)
 
 
-@functools.partial(jax.jit, static_argnames=("bw", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bw", "interpret", "mode",
+                                             "tau"))
 def sample_and_pack(s: jax.Array, seeds: jax.Array, *, bw: int = 256,
-                    interpret: bool = False) -> jax.Array:
+                    interpret: bool = False, mode: str = "sample",
+                    tau: float = 0.5) -> jax.Array:
     """s: (C, n) score rows; seeds: (C,) uint32 per-row stream seeds.
     Returns (C, W) uint32 with W = ceil(n/32): the bit-packed Bernoulli
     mask m = 1[hash_u(idx) < sigmoid(s)] of every row, sampled and
-    packed in one pass (bits past n are zero, as pad_to_words pads)."""
+    packed in one pass (bits past n are zero, as pad_to_words pads).
+    `mode="threshold"` packs the deterministic FedMask mask
+    m = 1[sigmoid(s) > tau] instead (seeds are ignored)."""
     C, n = s.shape
     assert seeds.shape == (C,), (seeds.shape, C)
     W = (n + 31) // 32
@@ -321,7 +356,8 @@ def sample_and_pack(s: jax.Array, seeds: jax.Array, *, bw: int = 256,
     pad = Wp * 32 - n
     sp = jnp.pad(s, ((0, 0), (0, pad))) if pad else s
     s3 = sp.reshape(C, Wp, 32)
-    kernel = functools.partial(_sap_kernel, bw=bw_, n_total=n)
+    kernel = functools.partial(_sap_kernel, bw=bw_, n_total=n,
+                               mode=mode, tau=tau)
     out = pl.pallas_call(
         kernel,
         grid=(C, Wp // bw_),

@@ -9,21 +9,33 @@ layer, with the STE custom-vjp.  Forward AND backward run fused:
 
 The mask is never materialized in HBM on either pass: the backward
 regenerates it per tile from the same counter-based hash stream as the
-forward (bit-identical — asserted in tests/test_kernels.py).
+forward (bit-identical — asserted in tests/test_kernels.py).  The `off`
+argument shifts the flat hash index so a layer-stacked (L, K, N) leaf
+executed as L per-layer launches (off = l*K*N) samples exactly the
+stream `sample_and_pack` packs for the flattened leaf — this is how the
+model zoo's `MaskedLeaf` execution path (repro.models.layers) and the
+uplink share one stream (docs/DESIGN.md §3).
+
+`masked_dense_threshold` is the deterministic FedMask twin: the mask is
+m = 1[sigmoid(s) > tau] (no hash), same STE backward, same fusion.
 
 MXU-unaligned shapes are zero-padded up to lane (128) alignment before
 the kernel launch instead of silently falling back to the jnp reference:
 the hash is indexed by the LOGICAL column count (`n_logical`), so the
 padded launch samples exactly the same mask, and padded columns carry
-w == 0 so they contribute nothing.  `REPRO_REF_BWD=1` forces the naive
-jnp backward (debugging escape hatch / the benchmark baseline).
+w == 0 so they contribute nothing.
 
 `sample_and_pack` fuses the per-round uplink sampling with the 32->1
 bitpack (scores -> hash -> Bernoulli -> uint32 words in one pass).
 
+Environment knobs (documented in README "Execution paths"):
+  * REPRO_REF_BWD=1        — naive jnp STE backward (debug baseline)
+  * REPRO_FORCE_INTERPRET=1 — pin Pallas interpret mode (CI determinism)
+  * REPRO_EFF_PATH=1       — read by repro.launch.steps: train through
+    materialized effective params instead of the fused kernels
+
 On non-TPU backends (this CPU container) the wrappers call the kernels
-in interpret mode — selected once per process by `_use_interpret()`,
-forceable with `REPRO_FORCE_INTERPRET=1` for CI determinism.
+in interpret mode — selected once per process by `_use_interpret()`.
 """
 from __future__ import annotations
 
@@ -65,15 +77,18 @@ def unpack_bits(words: jax.Array, n: int) -> jax.Array:
     return _bp.unpack_bits(words, n, interpret=_use_interpret())
 
 
-def sample_and_pack(scores: jax.Array, seeds: jax.Array) -> jax.Array:
+def sample_and_pack(scores: jax.Array, seeds: jax.Array,
+                    mode: str = "sample", tau: float = 0.5) -> jax.Array:
     """Fused uplink sampler: (C, n) score rows + (C,) uint32 seeds ->
     (C, ceil(n/32)) uint32 words of m ~ Bern(sigmoid(scores)).
 
     One kernel pass replaces the sample-then-pack_bits two-pass; the
     full uint8 mask never exists in HBM.  `ref.sample_rows` /
     `ref.sample_and_pack` are the bit-exact jnp oracles.
+    `mode="threshold"` packs m = 1[sigmoid(scores) > tau] (FedMask).
     """
-    return _mm.sample_and_pack(scores, seeds, interpret=_use_interpret())
+    return _mm.sample_and_pack(scores, seeds, interpret=_use_interpret(),
+                               mode=mode, tau=tau)
 
 
 # ---------------------------------------------------------------------------
@@ -101,9 +116,7 @@ def _pad2(a: jax.Array, r: int, c: int) -> jax.Array:
     return jnp.pad(a, ((0, pr), (0, pc)))
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=())
-def masked_dense(x, w, s, seed):
-    """y = x @ (bern(sigmoid(s); seed) * w), STE backward. x: (..., K)."""
+def _fused_fwd(x, w, s, seed, off, tau, mode):
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
     M = x2.shape[0]
@@ -112,21 +125,22 @@ def masked_dense(x, w, s, seed):
                   _round_up(N, 128))
     y = _mm.masked_matmul(
         _pad2(x2, Mp, Kp), _pad2(w, Kp, Np), _pad2(s, Kp, Np), seed,
-        bm=128, bn=_block_for(Np), bk=_block_for(Kp), n_logical=N,
-        interpret=_use_interpret())[:M, :N]
+        off, bm=128, bn=_block_for(Np), bk=_block_for(Kp), n_logical=N,
+        interpret=_use_interpret(), mode=mode, tau=tau)[:M, :N]
     return y.reshape(shape[:-1] + (N,))
 
 
-def _fwd(x, w, s, seed):
-    return masked_dense(x, w, s, seed), (x, w, s, seed)
-
-
-def _bwd(res, g):
-    x, w, s, seed = res
+def _fused_bwd(x, w, s, seed, off, tau, mode, g):
     K, N = w.shape
     if os.environ.get("REPRO_REF_BWD", "") == "1":
-        dx, ds = ref.masked_dense_bwd(x, w, s, seed, g)
-        return dx, None, ds, None
+        if mode == "threshold":
+            m = ref.threshold_mask(s, tau).astype(jnp.float32)
+            wf = w.astype(jnp.float32)
+            g2 = g.reshape(-1, N)
+            dx = (g2 @ (m * wf).T).reshape(x.shape).astype(x.dtype)
+            ds = ref.masked_matmul_ds(x.reshape(-1, K), g2, w, s)
+            return dx, ds
+        return ref.masked_dense_bwd(x, w, s, seed, g, off)
     x2 = x.reshape(-1, K)
     g2 = g.reshape(-1, N)
     M = x2.shape[0]
@@ -136,12 +150,66 @@ def _bwd(res, g):
     interp = _use_interpret()
     xp, gp = _pad2(x2, Mp, Kp), _pad2(g2, Mp, Np)
     wp, sp = _pad2(w, Kp, Np), _pad2(s, Kp, Np)
-    dx = _mm.masked_matmul_dx(gp, wp, sp, seed, bm=128, bn=bn, bk=bk,
-                              n_logical=N, interpret=interp)[:M, :K]
+    dx = _mm.masked_matmul_dx(gp, wp, sp, seed, off, bm=128, bn=bn,
+                              bk=bk, n_logical=N, interpret=interp,
+                              mode=mode, tau=tau)[:M, :K]
     ds = _mm.masked_matmul_ds(xp, gp, wp, sp, bm=128, bn=bn, bk=bk,
                               interpret=interp)[:K, :N]
-    return (dx.reshape(x.shape).astype(x.dtype), None,
-            ds.astype(s.dtype), None)
+    return (dx.reshape(x.shape).astype(x.dtype), ds.astype(s.dtype))
 
 
-masked_dense.defvjp(_fwd, _bwd)
+@jax.custom_vjp
+def _masked_dense(x, w, s, seed, off):
+    return _fused_fwd(x, w, s, seed, off, 0.5, "sample")
+
+
+def _md_fwd(x, w, s, seed, off):
+    return _masked_dense(x, w, s, seed, off), (x, w, s, seed, off)
+
+
+def _md_bwd(res, g):
+    x, w, s, seed, off = res
+    dx, ds = _fused_bwd(x, w, s, seed, off, 0.5, "sample", g)
+    return dx, None, ds, None, None
+
+
+_masked_dense.defvjp(_md_fwd, _md_bwd)
+
+
+@jax.custom_vjp
+def _masked_dense_thr(x, w, s, tau):
+    return _fused_fwd(x, w, s, 0, 0, tau, "threshold")
+
+
+def _mdt_fwd(x, w, s, tau):
+    return _masked_dense_thr(x, w, s, tau), (x, w, s, tau)
+
+
+def _mdt_bwd(res, g):
+    x, w, s, tau = res
+    dx, ds = _fused_bwd(x, w, s, 0, 0, tau, "threshold", g)
+    return dx, None, ds, None
+
+
+_masked_dense_thr.defvjp(_mdt_fwd, _mdt_bwd)
+
+
+def masked_dense(x, w, s, seed, off=0):
+    """y = x @ (bern(sigmoid(s); seed) * w), STE backward. x: (..., K).
+
+    `off` shifts the flat hash index: per-layer launches over a stacked
+    (L, K, N) leaf pass off = l*K*N so the L masks together are exactly
+    the leaf's flat `sample_and_pack` stream under the same seed.
+    """
+    return _masked_dense(x, w, s, jnp.asarray(seed, jnp.uint32),
+                         jnp.asarray(off, jnp.uint32))
+
+
+def masked_dense_threshold(x, w, s, tau=0.5):
+    """y = x @ (1[sigmoid(s) > tau] * w), STE backward (FedMask mode).
+
+    Deterministic twin of `masked_dense`: no hash stream, same fused
+    kernels and the same ds epilogue (STE passes d m/d theta := 1
+    through the threshold exactly as through the Bernoulli sample).
+    """
+    return _masked_dense_thr(x, w, s, jnp.asarray(tau, jnp.float32))

@@ -17,30 +17,33 @@ def hash_uniform(idx: jax.Array, seed) -> jax.Array:
     return (x >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
 
 
-def masked_matmul(x, w, s, seed):
-    K, N = w.shape
-    idx = (jnp.arange(K, dtype=jnp.uint32)[:, None] * jnp.uint32(N)
-           + jnp.arange(N, dtype=jnp.uint32)[None, :])
-    u = hash_uniform(idx, seed)
-    theta = jax.nn.sigmoid(s.astype(jnp.float32))
-    m = (u < theta)
-    wm = jnp.where(m, w.astype(jnp.float32), 0.0)
+def masked_matmul(x, w, s, seed, off=0):
+    wm = sample_mask(s, seed, off).astype(jnp.float32) \
+        * w.astype(jnp.float32)
     return (x.astype(jnp.float32) @ wm).astype(x.dtype)
 
 
-def sample_mask(s, seed):
-    """The mask the fused kernel implicitly uses (for uplink packing)."""
+def sample_mask(s, seed, off=0):
+    """The mask the fused kernel implicitly uses (for uplink packing).
+    `off` shifts the flat hash index (layer-stacked leaves)."""
     K, N = s.shape
-    idx = (jnp.arange(K, dtype=jnp.uint32)[:, None] * jnp.uint32(N)
+    idx = (jnp.asarray(off, jnp.uint32)
+           + jnp.arange(K, dtype=jnp.uint32)[:, None] * jnp.uint32(N)
            + jnp.arange(N, dtype=jnp.uint32)[None, :])
     u = hash_uniform(idx, seed)
     return (u < jax.nn.sigmoid(s.astype(jnp.float32))).astype(jnp.uint8)
 
 
-def masked_matmul_dx(g, w, s, seed):
+def threshold_mask(s, tau=0.5):
+    """The deterministic FedMask mask m = 1[sigmoid(s) > tau]."""
+    return (jax.nn.sigmoid(s.astype(jnp.float32))
+            > jnp.asarray(tau, jnp.float32)).astype(jnp.uint8)
+
+
+def masked_matmul_dx(g, w, s, seed, off=0):
     """Oracle for kernels.masked_matmul_dx: dx = g @ (m ⊙ w)ᵀ with the
     mask regenerated from the same hash stream as the forward."""
-    m = sample_mask(s, seed).astype(jnp.float32)
+    m = sample_mask(s, seed, off).astype(jnp.float32)
     wm = m * w.astype(jnp.float32)
     return (g.astype(jnp.float32) @ wm.T).astype(g.dtype)
 
@@ -54,14 +57,14 @@ def masked_matmul_ds(x, g, w, s):
         s.dtype)
 
 
-def masked_dense_bwd(x, w, s, seed, g):
+def masked_dense_bwd(x, w, s, seed, g, off=0):
     """The naive (3-temporary) STE backward — ops._bwd's fallback math
     and the benchmark baseline: materializes the mask, the masked
     weights, and xᵀ@g at weight size."""
     K, N = w.shape
     x2 = x.reshape(-1, K)
     g2 = g.reshape(-1, N)
-    m = sample_mask(s, seed).astype(jnp.float32)
+    m = sample_mask(s, seed, off).astype(jnp.float32)
     wf = w.astype(jnp.float32)
     wm = (m * wf).astype(x.dtype)
     dx = (g2 @ wm.T).reshape(x.shape).astype(x.dtype)
@@ -87,10 +90,17 @@ def sample_rows(s2, seeds):
     return jax.vmap(one)(s2, jnp.asarray(seeds, jnp.uint32))
 
 
-def sample_and_pack(s2, seeds):
+def threshold_rows(s2, tau=0.5):
+    """(C, n) score rows -> (C, n) uint8 deterministic FedMask masks."""
+    return (jax.nn.sigmoid(s2.astype(jnp.float32))
+            > jnp.asarray(tau, jnp.float32)).astype(jnp.uint8)
+
+
+def sample_and_pack(s2, seeds, mode="sample", tau=0.5):
     """Oracle for kernels.sample_and_pack: the two-pass sample-then-pack
     it fuses.  (C, n) scores -> (C, ceil(n/32)) uint32 words."""
-    m = sample_rows(s2, seeds)
+    m = (threshold_rows(s2, tau) if mode == "threshold"
+         else sample_rows(s2, seeds))
     n = m.shape[1]
     pad = (-n) % 32
     if pad:

@@ -46,14 +46,19 @@ def _flat_batch(key, toks, batch, seq):
         lambda i: jax.lax.dynamic_slice(toks, (i,), (seq,)))(idx)}
 
 
-def _mask_plan(name, *, force_lam=None):
-    """FedPM-style mask training: cohort-axis state, bitpacked round.
-    `codec` picks the wire codec the round step meters uplinks with
-    (`--codec` in `repro.launch.train`)."""
+def _mask_plan(name, *, force_lam=None, mask_mode=None):
+    """Mask-training plans (fedpm_reg / fedpm / fedmask): cohort-axis
+    state, fused masked-execution train step, bitpacked round.  `codec`
+    picks the wire codec the round step meters uplinks with (`--codec`
+    in `repro.launch.train`); `mask_mode="threshold"` is the FedMask
+    variant — the forward differentiates through the fused threshold
+    kernels and the uplink packs the deterministic mask."""
     def plan(model_api, scfg: steplib.StepConfig, *, key, cohorts,
              spec=None, optimizer="momentum", codec=None) -> LaunchPlan:
         if force_lam is not None:
             scfg = dataclasses.replace(scfg, lam=force_lam)
+        if mask_mode is not None:
+            scfg = dataclasses.replace(scfg, mask_mode=mask_mode)
         spec = masking.MaskSpec() if spec is None else spec
         state = steplib.init_fed_state(key, model_api, spec, C=cohorts,
                                        optimizer=optimizer)
@@ -78,4 +83,6 @@ def _fedavg_plan(model_api, scfg: steplib.StepConfig, *, key, cohorts,
 
 api.register_launch("fedpm_reg", _mask_plan("fedpm_reg"))
 api.register_launch("fedpm", _mask_plan("fedpm", force_lam=0.0))
+api.register_launch("fedmask", _mask_plan("fedmask", force_lam=0.0,
+                                          mask_mode="threshold"))
 api.register_launch("fedavg", _fedavg_plan)

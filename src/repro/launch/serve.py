@@ -1,6 +1,13 @@
 """Serving launcher: batched decode from a (seed, mask) artifact or a
 fresh random sub-network.
 
+Serving deliberately runs the REFERENCE path (docs/DESIGN.md §3): the
+deployed mask is static, so `masking.sample_effective(mode="threshold")`
+materializes effective params ONCE and every decode step reuses them —
+decode is KV-cache-bound, and re-sampling the mask per token through
+the fused kernels would only add work.  The fused (w, s, seed) path is
+the *training* hot path (`launch.steps.make_train_step`).
+
     python -m repro.launch.serve --arch gemma3-4b --smoke --tokens 16
 """
 from __future__ import annotations

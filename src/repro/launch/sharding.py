@@ -1,6 +1,6 @@
 """Sharding rules: pytree-path + shape -> PartitionSpec.
 
-Strategy (DESIGN.md §2):
+Strategy (docs/DESIGN.md §2):
   * weights/scores/optimizer state: last dim -> "model" (TP), the
     second-to-last -> "data" (FSDP-style). Leading stack axes (layer /
     group / expert scan dims) are never sharded — except MoE expert

@@ -1,6 +1,6 @@
 """Canonical lowered steps for the production mesh.
 
-Federated mapping at pod scale (DESIGN.md §2): a *cohort* (= FL client
+Federated mapping at pod scale (docs/DESIGN.md §2): a *cohort* (= FL client
 site) is one pod (multi-pod mesh) or the whole pod (single-pod). Inside
 a cohort, data-parallel slices share synchronized score updates (the
 site's local cluster); ACROSS cohorts the ONLY traffic is the paper's
@@ -16,11 +16,20 @@ Serving cells lower serve_step (one-token decode over a full KV cache).
 
 State layout: scores/floats/opt carry a leading cohort axis C sharded
 on "pod"; frozen weights have no cohort axis (same seed everywhere).
+
+train_step runs the FUSED masked-execution path by default: the model
+forward consumes `masking.MaskedLeaf` (w, s, seed) bundles and every
+maskable projection runs `ops.masked_dense` — the mask and the masked
+weights never exist in HBM on either pass (docs/DESIGN.md §3).
+`REPRO_EFF_PATH=1` is the escape hatch: identical hash-stream masks,
+but materialized through `masking.hash_effective` (the pre-fusion
+reference semantics, for debugging/bisection).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Any, Optional
 
 import jax
@@ -69,6 +78,12 @@ class StepConfig:
     optimizer: str = "momentum"      # "momentum" | "adam" (scores)
     adam_eps: float = 1e-8
     downlink_bits: int = 0           # k-bit theta broadcast (0 = f32)
+    seed: int = 17                   # run seed mixed into every mask
+    #                                  stream (forward AND uplink) —
+    #                                  plumbed from --seed in train.py
+    mask_mode: str = "sample"        # "sample" (Bernoulli, fedpm*) |
+    #                                  "threshold" (FedMask)
+    tau: float = 0.5                 # threshold for mask_mode="threshold"
 
 
 # ---------------------------------------------------------------------------
@@ -144,22 +159,36 @@ def fed_state_shardings(state_shapes, mesh):
 # ---------------------------------------------------------------------------
 
 
+def _eff_path() -> bool:
+    """REPRO_EFF_PATH=1 escape hatch (checked at trace time): train
+    through materialized effective params (`masking.hash_effective`) —
+    bit-identical hash-stream masks, pre-fusion memory behaviour."""
+    return os.environ.get("REPRO_EFF_PATH", "") == "1"
+
+
 def make_train_step(api, cfg: StepConfig):
-    def cohort_loss(scores, floats, weights, batch, key):
+    """One local mini-batch score update on the fused masked-execution
+    path: the forward consumes a `masked_forward_tree` whose maskable
+    leaves run `ops.masked_dense` with scores as a first-class grad
+    argument (STE custom-vjp), per-leaf seeds derived from
+    (cfg.seed, step, leaf, cohort) by the SAME `mask_stream_seed`
+    convention the round uplink samples with."""
+    def cohort_loss(scores, floats, weights, batch, tick, cohort):
         mp = MaskedParams(weights, scores, floats)
-        eff = masking.sample_effective(mp, key, mode="sample")
-        out = api.forward(eff, batch, chunk_kv=cfg.chunk_kv)
+        seed_fn = lambda i: masking.mask_stream_seed(
+            tick, 0, i, cohort, run_seed=cfg.seed)
+        build = (masking.hash_effective if _eff_path()
+                 else masking.masked_forward_tree)
+        params = build(mp, seed_fn, mode=cfg.mask_mode, tau=cfg.tau)
+        out = api.forward(params, batch, chunk_kv=cfg.chunk_kv)
         loss = api.loss(out, batch)
         reg = regularizer.entropy_proxy(scores)
         return loss + cfg.lam * reg, (loss, reg)
 
     def train_step(state, batch):
         C = jax.tree_util.tree_leaves(state["scores"])[0].shape[0]
-        base = jax.random.PRNGKey(17)
 
         def one(scores, floats, opt_m, opt_v, batch_c, idx):
-            key = jax.random.fold_in(
-                jax.random.fold_in(base, state["step"]), idx)
             if cfg.microbatch > 1:
                 M = cfg.microbatch
                 mb = jax.tree_util.tree_map(
@@ -168,10 +197,11 @@ def make_train_step(api, cfg: StepConfig):
 
                 def acc(carry, xs):
                     gs_a, gf_a, loss_a = carry
-                    b_i, k_i = xs
+                    b_i, t_i = xs
                     (tot, (l, r)), (g1, g2) = jax.value_and_grad(
                         cohort_loss, argnums=(0, 1), has_aux=True)(
-                            scores, floats, state["weights"], b_i, k_i)
+                            scores, floats, state["weights"], b_i, t_i,
+                            idx)
                     add = lambda a, g: None if a is None else a + g
                     gs_a = jax.tree_util.tree_map(
                         add, gs_a, g1, is_leaf=lambda x: x is None)
@@ -183,10 +213,13 @@ def make_train_step(api, cfg: StepConfig):
                     lambda x: None if x is None else
                     jnp.zeros(x.shape, jnp.float32), t,
                     is_leaf=lambda x: x is None)
-                ks = jax.random.split(key, M)
+                # one stream tick per microbatch so accumulation chunks
+                # draw distinct masks
+                ticks = state["step"] * M + jnp.arange(
+                    M, dtype=jnp.int32)
                 (gs, gf, loss), _ = jax.lax.scan(
                     acc, (zeros(scores), zeros(floats),
-                          jnp.float32(0.0)), (mb, ks))
+                          jnp.float32(0.0)), (mb, ticks))
                 gs = jax.tree_util.tree_map(
                     lambda g: None if g is None else g / M, gs,
                     is_leaf=lambda x: x is None)
@@ -198,7 +231,8 @@ def make_train_step(api, cfg: StepConfig):
             else:
                 (tot, (loss, reg)), (gs, gf) = jax.value_and_grad(
                     cohort_loss, argnums=(0, 1), has_aux=True)(
-                        scores, floats, state["weights"], batch_c, key)
+                        scores, floats, state["weights"], batch_c,
+                        state["step"], idx)
             if opt_v is not None:  # adam on scores
                 b1, b2 = 0.9, 0.999
                 new_m = jax.tree_util.tree_map(
@@ -260,20 +294,16 @@ def make_train_step(api, cfg: StepConfig):
 # ---------------------------------------------------------------------------
 
 
-def _mask_stream_seeds(step, dev, leaf_idx: int, C: int) -> jax.Array:
-    """Per-(round, shard, leaf, cohort) uint32 seeds for the counter-based
-    mask sampler.
-
-    The sampler (`kernels.masked_matmul._hash_uniform`) turns each seed
-    into a disjoint slice of one avalanche stream, so distinct seeds give
-    decorrelated Bernoulli draws; mixing with large odd constants keeps
-    the (step, dev, leaf, cohort) -> seed map collision-free in practice.
-    """
-    base = (jnp.asarray(step, jnp.uint32) * jnp.uint32(0x9E3779B9)
-            ^ (jnp.asarray(dev, jnp.uint32) + jnp.uint32(1))
-            * jnp.uint32(0x85EBCA6B)
-            ^ jnp.uint32(leaf_idx * 0xC2B2AE35 & 0xFFFFFFFF))
-    return base + jnp.arange(C, dtype=jnp.uint32) * jnp.uint32(0x01000193)
+def _mask_stream_seeds(step, dev, leaf_idx: int, C: int,
+                       run_seed=0) -> jax.Array:
+    """Per-(run, round, shard, leaf, cohort) uint32 seeds for the
+    counter-based mask sampler — one thin wrapper over the SHARED
+    convention (`masking.mask_stream_seed`) the fused model forward
+    derives its per-leaf seeds with, so a leaf's forward mask and its
+    uplink `sample_and_pack` words come from one stream family."""
+    return masking.mask_stream_seed(step, dev, leaf_idx,
+                                    jnp.arange(C, dtype=jnp.uint32),
+                                    run_seed=run_seed)
 
 
 def make_round_step(api, cfg: StepConfig, mesh=None, state_sh=None,
@@ -339,10 +369,12 @@ def make_round_step(api, cfg: StepConfig, mesh=None, state_sh=None,
             body = sl.shape[1:]
             flat = sl.reshape(Cl, -1)
             n = flat.shape[1]
-            seeds = _mask_stream_seeds(step, dev, i, Cl)
+            seeds = _mask_stream_seeds(step, dev, i, Cl,
+                                       run_seed=cfg.seed)
             if cfg.packed_masks:
                 words = aggregation.sample_and_pack_rows(
-                    flat, seeds, use_kernel=True)          # (Cl, W) u32
+                    flat, seeds, use_kernel=True,
+                    mode=cfg.mask_mode, tau=cfg.tau)       # (Cl, W) u32
                 ones_parts.append(jnp.sum(
                     jax.lax.population_count(words),
                     axis=1).astype(jnp.float32))
@@ -359,7 +391,9 @@ def make_round_step(api, cfg: StepConfig, mesh=None, state_sh=None,
                     words_all = words
                 theta = plds.mean_from_words(words_all, n)
             else:
-                masks2 = kref.sample_rows(flat, seeds)
+                masks2 = (kref.threshold_rows(flat, cfg.tau)
+                          if cfg.mask_mode == "threshold"
+                          else kref.sample_rows(flat, seeds))
                 ones_parts.append(jnp.sum(
                     masks2.astype(jnp.float32), axis=1))
                 bit_parts.append(masks2)

@@ -49,6 +49,10 @@ def main(argv=None):
                     help="k-bit stochastic theta broadcast "
                          "(0 = raw float32 downlink)")
     ap.add_argument("--lam", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=17,
+                    help="run seed for every mask stream (forward and "
+                         "uplink) — two runs with the same seed sample "
+                         "bit-identical masks")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--round-every", type=int, default=10)
     ap.add_argument("--cohorts", type=int, default=2)
@@ -66,7 +70,8 @@ def main(argv=None):
     key = jax.random.PRNGKey(0)
     scfg = steplib.StepConfig(lam=args.lam, lr=args.lr,
                               optimizer=args.score_opt,
-                              downlink_bits=args.downlink_bits)
+                              downlink_bits=args.downlink_bits,
+                              seed=args.seed)
 
     plan = fedapi.get_launch_plan(args.algo)(
         api, scfg, key=key, cohorts=args.cohorts,

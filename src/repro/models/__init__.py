@@ -1,4 +1,17 @@
-"""Model zoo dispatcher: family -> (init, forward, loss, cache, decode)."""
+"""Model zoo dispatcher: family -> (init, forward, loss, cache, decode).
+
+Forward contract (docs/DESIGN.md §3): `forward(params, batch, ...)`
+accepts a params pytree whose maskable leaves are EITHER plain arrays
+(float training, or effective params materialized by
+`masking.sample_effective` / `masking.hash_effective` — the reference
+path) OR `masking.MaskedLeaf` (w, s, seed) bundles built by
+`masking.masked_forward_tree` — the fused execution path, where every
+maskable Dense/projection runs `ops.masked_dense` directly and the
+Bernoulli mask never exists in HBM.  Model code never branches on the
+path: `layers.masked_dense_apply` / `layers.effective_weight` dispatch
+per leaf, so the same forward serves float baselines, masked training,
+and serving.
+"""
 from __future__ import annotations
 
 import dataclasses

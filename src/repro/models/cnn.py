@@ -60,8 +60,10 @@ def forward(params, cfg: ConvConfig, images):
     """images: (B, H, W, C) -> logits (B, n_classes)."""
     x = images.astype(jnp.float32)
     for i, cp in enumerate(params["convs"]):
+        # (3, 3, cin, cout) conv kernels ride the materializing fallback
+        w_conv = L.effective_weight(cp["w_conv"])
         x = jax.lax.conv_general_dilated(
-            x, cp["w_conv"].astype(jnp.float32), (1, 1), "SAME",
+            x, w_conv.astype(jnp.float32), (1, 1), "SAME",
             dimension_numbers=("NHWC", "HWIO", "NHWC"))
         x = jax.nn.relu(x + cp["bias"])
         if i % 2 == 1:
@@ -70,7 +72,7 @@ def forward(params, cfg: ConvConfig, images):
                 "VALID")
     x = x.reshape(x.shape[0], -1)
     for j, dp in enumerate(params["denses"]):
-        x = x @ dp["w_dense"].astype(jnp.float32) + dp["bias"]
+        x = L.masked_dense_apply(x, dp["w_dense"]) + dp["bias"]
         if j < len(params["denses"]) - 1:
             x = jax.nn.relu(x)
     return x

@@ -88,10 +88,10 @@ def _dec_block(cfg, lp, x, enc_out, positions, chunk_kv,
     x = x + out
     h = L.layer_norm(lp["cross_norm"], x)
     B, S_enc = enc_out.shape[0], enc_out.shape[1]
-    k = (enc_out @ lp["cross"]["w_k"]).reshape(B, S_enc, cfg.n_kv_heads,
-                                               cfg.hd)
-    v = (enc_out @ lp["cross"]["w_v"]).reshape(B, S_enc, cfg.n_kv_heads,
-                                               cfg.hd)
+    k = L.masked_dense_apply(enc_out, lp["cross"]["w_k"]).reshape(
+        B, S_enc, cfg.n_kv_heads, cfg.hd)
+    v = L.masked_dense_apply(enc_out, lp["cross"]["w_v"]).reshape(
+        B, S_enc, cfg.n_kv_heads, cfg.hd)
     out, _ = L.gqa_apply(lp["cross"], h, positions, cfg.n_heads,
                          cfg.n_kv_heads, cfg.hd, causal=False,
                          use_rope=False, kv_override=(k, v),
@@ -142,10 +142,10 @@ def decode_step(params, cfg: ArchConfig, cache, token, pos):
     def body(x, xs):
         lp, lc = xs
         h = L.layer_norm(lp["attn_norm"], x)
-        k_new = (h @ lp["attn"]["w_k"]).reshape(B, 1, cfg.n_kv_heads,
-                                                cfg.hd)
-        v_new = (h @ lp["attn"]["w_v"]).reshape(B, 1, cfg.n_kv_heads,
-                                                cfg.hd)
+        k_new = L.masked_dense_apply(h, lp["attn"]["w_k"]).reshape(
+            B, 1, cfg.n_kv_heads, cfg.hd)
+        v_new = L.masked_dense_apply(h, lp["attn"]["w_v"]).reshape(
+            B, 1, cfg.n_kv_heads, cfg.hd)
         kc = jax.lax.dynamic_update_slice(lc["k"],
                                           k_new.astype(lc["k"].dtype),
                                           (0, pos, 0, 0))

@@ -9,7 +9,7 @@ a second rec-only scan. The RG-LRU temporal mix uses an associative scan
 
 Float (non-masked) params: recurrence decay `a_param` (Lambda), conv
 bias, gate biases, norms — masking a decay destroys stability
-(DESIGN.md §Arch-applicability).
+(docs/DESIGN.md §Arch-applicability).
 """
 from __future__ import annotations
 
@@ -131,28 +131,36 @@ def rg_lru_scan(u, r, i, a_param):
 def _rec_mix(cfg, lp, x):
     """RG-LRU mixer on (B, S, D) -> (B, S, D)."""
     w = _lru_width(cfg)
-    gate = jax.nn.gelu((x @ lp["w_y"]).astype(jnp.float32))
-    u = x @ lp["w_x"]
+    gate = jax.nn.gelu(
+        L.masked_dense_apply(x, lp["w_y"]).astype(jnp.float32))
+    u = L.masked_dense_apply(x, lp["w_x"])
     u = L.conv1d_causal(lp["conv"], u).astype(jnp.float32)
-    r = jax.nn.sigmoid((u @ lp["w_rg"].astype(jnp.float32)) + lp["bias_rg"])
-    i = jax.nn.sigmoid((u @ lp["w_ri"].astype(jnp.float32)) + lp["bias_ri"])
+    r = jax.nn.sigmoid(L.masked_dense_apply(u, lp["w_rg"])
+                       .astype(jnp.float32) + lp["bias_rg"])
+    i = jax.nn.sigmoid(L.masked_dense_apply(u, lp["w_ri"])
+                       .astype(jnp.float32) + lp["bias_ri"])
     h, _ = rg_lru_scan(u, r, i, lp["a_param"])
-    return ((h * gate).astype(x.dtype)) @ lp["w_out"]
+    return L.masked_dense_apply((h * gate).astype(x.dtype),
+                                lp["w_out"])
 
 
 def _rec_step(cfg, lp, x_t, h_prev, conv_buf):
     """One decode step. x_t: (B, D); h_prev: (B, W)."""
-    gate = jax.nn.gelu((x_t @ lp["w_y"]).astype(jnp.float32))
-    u = x_t @ lp["w_x"]
+    gate = jax.nn.gelu(
+        L.masked_dense_apply(x_t, lp["w_y"]).astype(jnp.float32))
+    u = L.masked_dense_apply(x_t, lp["w_x"])
     conv_buf, u = L.conv1d_step(lp["conv"], conv_buf, u)
     u = u.astype(jnp.float32)
-    r = jax.nn.sigmoid(u @ lp["w_rg"].astype(jnp.float32) + lp["bias_rg"])
-    i = jax.nn.sigmoid(u @ lp["w_ri"].astype(jnp.float32) + lp["bias_ri"])
+    r = jax.nn.sigmoid(L.masked_dense_apply(u, lp["w_rg"])
+                       .astype(jnp.float32) + lp["bias_rg"])
+    i = jax.nn.sigmoid(L.masked_dense_apply(u, lp["w_ri"])
+                       .astype(jnp.float32) + lp["bias_ri"])
     log_a = -_C * jax.nn.softplus(lp["a_param"]) * r
     a = jnp.exp(log_a)
     h = a * h_prev + jnp.sqrt(jnp.maximum(1 - jnp.exp(2 * log_a), 1e-12)) \
         * (i * u)
-    return ((h * gate).astype(x_t.dtype)) @ lp["w_out"], h, conv_buf
+    return L.masked_dense_apply((h * gate).astype(x_t.dtype),
+                                lp["w_out"]), h, conv_buf
 
 
 def _block_fwd(cfg, kind, lp, x, positions, chunk_kv):
@@ -241,8 +249,10 @@ def _attn_step_ring(cfg, lp, x_t, kc, vc, kpos, pos):
     W = kc.shape[1]
     h = x_t[:, None]  # (B,1,D)
     slot = pos % W
-    k_new = (h @ lp["attn"]["w_k"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
-    v_new = (h @ lp["attn"]["w_v"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+    k_new = L.masked_dense_apply(h, lp["attn"]["w_k"]).reshape(
+        B, 1, cfg.n_kv_heads, cfg.hd)
+    v_new = L.masked_dense_apply(h, lp["attn"]["w_v"]).reshape(
+        B, 1, cfg.n_kv_heads, cfg.hd)
     k_new = L.apply_rope(k_new, pos[None], cfg.rope_theta)
     kc = jax.lax.dynamic_update_slice(kc, k_new.astype(kc.dtype),
                                       (0, slot, 0, 0))

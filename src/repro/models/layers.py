@@ -4,8 +4,16 @@ Conventions:
   * activations x: (B, S, D); params are nested dicts of jnp arrays.
   * maskable tensors get names WITHOUT the MaskSpec float patterns
     ("w_*"); norms/biases/routers carry "scale"/"bias"/"router" so the
-    paper's technique skips them (DESIGN.md §Arch-applicability).
+    paper's technique skips them (docs/DESIGN.md §Arch-applicability).
   * every layer has init(key, cfg...) -> params and apply(params, x, ...).
+  * every maskable projection is consumed through `masked_dense_apply`
+    (2-D dense weights) or `effective_weight` (conv kernels, stacked
+    MoE experts).  A leaf may be a plain array (float training, or
+    effective params materialized by `masking.sample_effective` /
+    `masking.hash_effective`) OR a `masking.MaskedLeaf` (w, s, seed)
+    bundle, in which case the dense path runs the fused Pallas kernels
+    (`ops.masked_dense`) — no mask or masked-weight tensor ever exists
+    in HBM (docs/DESIGN.md §3).
 """
 from __future__ import annotations
 
@@ -17,9 +25,44 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core import masking
+from repro.core.masking import MaskedLeaf
+from repro.kernels import ops
+
 Pytree = Any
 
 DEFAULT_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Masked execution dispatch: plain array | MaskedLeaf (w, s, seed)
+# ---------------------------------------------------------------------------
+
+
+def masked_dense_apply(x: jax.Array, p) -> jax.Array:
+    """y = x @ w_eff for a plain weight array or a `MaskedLeaf`.
+
+    Plain array: the ordinary matmul (float baselines, materialized
+    effective params).  MaskedLeaf: the fused masked-dense kernel —
+    the Bernoulli (or FedMask-threshold) mask is regenerated per tile
+    from the leaf's hash-stream coordinates on BOTH passes, with scores
+    a first-class grad argument through the STE custom-vjp.
+    """
+    if isinstance(p, MaskedLeaf):
+        if p.mode == "threshold":
+            return ops.masked_dense_threshold(x, p.w, p.s, p.tau)
+        return ops.masked_dense(x, p.w, p.s, p.seed, p.off)
+    return x @ p
+
+
+def effective_weight(p) -> jax.Array:
+    """Effective weight tensor for consumers `masked_dense` cannot
+    express (depthwise convs, stacked MoE expert einsums): materializes
+    m * w from the SAME hash stream as the fused kernels (one
+    weight-sized temporary; see docs/DESIGN.md §3 fallback table)."""
+    if isinstance(p, MaskedLeaf):
+        return masking.materialize_leaf(p)
+    return p
 
 # ---------------------------------------------------------------------------
 # Initializers
@@ -217,7 +260,7 @@ def gqa_apply(p, x, positions, n_heads, n_kv, head_dim, *, window=None,
     Returns (out, (k, v)) so callers can populate KV caches.
     """
     B, S, D = x.shape
-    q = (x @ p["w_q"]).reshape(B, S, n_heads, head_dim)
+    q = masked_dense_apply(x, p["w_q"]).reshape(B, S, n_heads, head_dim)
     if "bias_q" in p:
         q = q + p["bias_q"].reshape(n_heads, head_dim).astype(q.dtype)
     if mrope_positions is not None:
@@ -230,8 +273,8 @@ def gqa_apply(p, x, positions, n_heads, n_kv, head_dim, *, window=None,
         k_pos = (k_positions if k_positions is not None
                  else jnp.arange(k.shape[1]))
     else:
-        k = (x @ p["w_k"]).reshape(B, S, n_kv, head_dim)
-        v = (x @ p["w_v"]).reshape(B, S, n_kv, head_dim)
+        k = masked_dense_apply(x, p["w_k"]).reshape(B, S, n_kv, head_dim)
+        v = masked_dense_apply(x, p["w_v"]).reshape(B, S, n_kv, head_dim)
         if "bias_k" in p:
             k = k + p["bias_k"].reshape(n_kv, head_dim).astype(k.dtype)
             v = v + p["bias_v"].reshape(n_kv, head_dim).astype(v.dtype)
@@ -243,7 +286,8 @@ def gqa_apply(p, x, positions, n_heads, n_kv, head_dim, *, window=None,
 
     o = attention_core(q, k, v, positions, k_pos,
                        window=window, causal=causal, chunk_kv=chunk_kv)
-    return o.reshape(B, S, n_heads * head_dim) @ p["w_o"], (k, v)
+    return masked_dense_apply(
+        o.reshape(B, S, n_heads * head_dim), p["w_o"]), (k, v)
 
 
 # ---------------------------------------------------------------------------
@@ -280,14 +324,17 @@ def mla_apply(p, x, positions, n_heads, kv_lora, qk_nope, qk_rope, v_head,
     (the compressed-KV cache — MLA's memory saving)."""
     B, S, D = x.shape
     if "w_dq" in p:
-        cq = rms_norm({"scale": p["q_norm_scale"]}, x @ p["w_dq"])
-        q = (cq @ p["w_uq"]).reshape(B, S, n_heads, qk_nope + qk_rope)
+        cq = rms_norm({"scale": p["q_norm_scale"]},
+                      masked_dense_apply(x, p["w_dq"]))
+        q = masked_dense_apply(cq, p["w_uq"]).reshape(
+            B, S, n_heads, qk_nope + qk_rope)
     else:
-        q = (x @ p["w_q"]).reshape(B, S, n_heads, qk_nope + qk_rope)
+        q = masked_dense_apply(x, p["w_q"]).reshape(
+            B, S, n_heads, qk_nope + qk_rope)
     q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
     q_rope = apply_rope(q_rope, positions, rope_theta)
 
-    dkv = x @ p["w_dkv"]
+    dkv = masked_dense_apply(x, p["w_dkv"])
     c_kv = rms_norm({"scale": p["kv_norm_scale"]}, dkv[..., :kv_lora])
     k_rope_new = apply_rope(dkv[..., kv_lora:][:, :, None, :], positions,
                             rope_theta)  # (B,S,1,qk_rope)
@@ -301,8 +348,10 @@ def mla_apply(p, x, positions, n_heads, kv_lora, qk_nope, qk_rope, v_head,
         k_pos = positions
         q_pos = positions
 
-    k_nope = (c_kv_all @ p["w_uk"]).reshape(B, -1, n_heads, qk_nope)
-    v = (c_kv_all @ p["w_uv"]).reshape(B, -1, n_heads, v_head)
+    k_nope = masked_dense_apply(c_kv_all, p["w_uk"]).reshape(
+        B, -1, n_heads, qk_nope)
+    v = masked_dense_apply(c_kv_all, p["w_uv"]).reshape(
+        B, -1, n_heads, v_head)
     k = jnp.concatenate(
         [k_nope, jnp.broadcast_to(
             k_rope_all, k_nope.shape[:3] + (qk_rope,))], axis=-1)
@@ -310,7 +359,8 @@ def mla_apply(p, x, positions, n_heads, kv_lora, qk_nope, qk_rope, v_head,
     o = attention_core(qfull, k, v, q_pos, k_pos, window=None, causal=True,
                        chunk_kv=chunk_kv)
     # o has head_dim v_head? attention_core keeps q's Hd; v dims differ.
-    return o.reshape(B, S, -1) @ p["w_o"], (c_kv, k_rope_new)
+    return masked_dense_apply(o.reshape(B, S, -1), p["w_o"]), \
+        (c_kv, k_rope_new)
 
 
 # ---------------------------------------------------------------------------
@@ -332,12 +382,12 @@ def mlp_apply(p, x, act="silu"):
     a = {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
          "gelu_tanh": functools.partial(jax.nn.gelu, approximate=True),
          "relu": jax.nn.relu}[act]
-    up = x @ p["w_up"]
+    up = masked_dense_apply(x, p["w_up"])
     if "w_gate" in p:
-        up = a(x @ p["w_gate"]) * up
+        up = a(masked_dense_apply(x, p["w_gate"])) * up
     else:
         up = a(up)
-    return up @ p["w_down"]
+    return masked_dense_apply(up, p["w_down"])
 
 
 # ---------------------------------------------------------------------------
@@ -373,7 +423,7 @@ def moe_apply(p, x, n_experts, top_k, capacity_factor=1.25,
     The (T, E, C) dispatch tensor shrinks Gx — the one-hot dispatch
     einsums cost O(T * E * C * D) = O(T^2 * top_k * cf * D / G), so
     block-local dispatch cuts the dominant non-useful FLOPs by G while
-    matching real per-device capacity semantics (EXPERIMENTS.md §Perf).
+    matching real per-device capacity semantics (docs/DESIGN.md §7).
     """
     B, S, D = x.shape
     if block_dispatch and B * S % block_dispatch == 0 \
@@ -411,9 +461,15 @@ def moe_apply(p, x, n_experts, top_k, capacity_factor=1.25,
     xe = jnp.einsum("tec,td->ecd", disp, xt.astype(jnp.float32))
     xe = xe.astype(x.dtype)                                  # (E,C,D)
 
-    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) \
-        * jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
-    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])          # (E,C,D)
+    # stacked (E, ., .) expert weights: effective_weight materializes
+    # m*w for MaskedLeaf experts (per-expert blocks of the leaf's hash
+    # stream) — the einsum dispatch can't ride masked_dense directly
+    w_gate, w_up = effective_weight(p["w_gate"]), effective_weight(
+        p["w_up"])
+    w_down = effective_weight(p["w_down"])
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w_gate)) \
+        * jnp.einsum("ecd,edf->ecf", xe, w_up)
+    ye = jnp.einsum("ecf,efd->ecd", h, w_down)               # (E,C,D)
 
     comb = jnp.einsum("tke,tkc,tk->tec", onehot, pos_oh,
                       gval.astype(jnp.float32))
@@ -443,21 +499,23 @@ def conv1d_init(key, width, channels, dtype=DEFAULT_DTYPE):
 
 def conv1d_causal(p, x):
     """Depthwise causal conv. x: (B, S, C); kernel (W, C)."""
-    W = p["w_conv"].shape[0]
+    w_conv = effective_weight(p["w_conv"])
+    W = w_conv.shape[0]
     xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
     # stack shifted views: (B, S, W, C)
     views = jnp.stack([xp[:, i:i + x.shape[1]] for i in range(W)], axis=2)
     out = jnp.einsum("bswc,wc->bsc", views.astype(jnp.float32),
-                     p["w_conv"].astype(jnp.float32))
+                     w_conv.astype(jnp.float32))
     return (out + p["bias_conv"]).astype(x.dtype)
 
 
 def conv1d_step(p, buf, x_t):
     """Single decode step with rolling buffer. buf: (B, W-1, C)."""
-    W = p["w_conv"].shape[0]
+    w_conv = effective_weight(p["w_conv"])
+    W = w_conv.shape[0]
     full = jnp.concatenate([buf, x_t[:, None]], axis=1)  # (B, W, C)
     out = jnp.einsum("bwc,wc->bc", full.astype(jnp.float32),
-                     p["w_conv"].astype(jnp.float32)) + p["bias_conv"]
+                     w_conv.astype(jnp.float32)) + p["bias_conv"]
     return full[:, 1:], out.astype(x_t.dtype)
 
 

@@ -6,7 +6,7 @@ the showcase shape (constant-memory state).
 
 Parameter naming: maskable tensors are w_*; the dynamical-system params
 (A_log, dt bias, D) stay float — Bernoulli-masking a decay rate destroys
-stability (DESIGN.md §Arch-applicability).
+stability (docs/DESIGN.md §Arch-applicability).
 """
 from __future__ import annotations
 
@@ -130,7 +130,7 @@ def _mix(cfg: ArchConfig, lp, x, chunk=256):
     d_in, nh = _dims(cfg)
     G, N, P = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_headdim
     B_, S, D = x.shape
-    zxbcdt = x @ lp["w_in"]
+    zxbcdt = L.masked_dense_apply(x, lp["w_in"])
     z, xs, Bm, Cm, dt = jnp.split(
         zxbcdt, [d_in, 2 * d_in, 2 * d_in + G * N, 2 * d_in + 2 * G * N],
         axis=-1)
@@ -146,7 +146,7 @@ def _mix(cfg: ArchConfig, lp, x, chunk=256):
     y = y.reshape(B_, S, d_in)
     y = L.rms_norm({"scale": lp["gate_norm_scale"]},
                    y.astype(x.dtype) * jax.nn.silu(z))
-    return y @ lp["w_out"]
+    return L.masked_dense_apply(y, lp["w_out"])
 
 
 def forward(params, cfg: ArchConfig, tokens, chunk_kv=None, **_):
@@ -195,7 +195,7 @@ def decode_step(params, cfg: ArchConfig, cache, token, pos):
     def body(x, xs):
         lp, st, buf = xs
         h = L.rms_norm(lp["norm"], x[:, None])[:, 0]
-        zxbcdt = h @ lp["w_in"]
+        zxbcdt = L.masked_dense_apply(h, lp["w_in"])
         z, xin, Bm, Cm, dt = jnp.split(
             zxbcdt, [d_in, 2 * d_in, 2 * d_in + G * N,
                      2 * d_in + 2 * G * N], axis=-1)
@@ -218,7 +218,7 @@ def decode_step(params, cfg: ArchConfig, cache, token, pos):
         y = y.reshape(B_, d_in)
         y = L.rms_norm({"scale": lp["gate_norm_scale"]},
                        y.astype(x.dtype) * jax.nn.silu(z))
-        return x + y @ lp["w_out"], (st, buf)
+        return x + L.masked_dense_apply(y, lp["w_out"]), (st, buf)
 
     x, (sts, bufs) = jax.lax.scan(
         body, x, (params["layers"], cache["ssm_state"], cache["conv_buf"]),

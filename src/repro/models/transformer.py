@@ -244,7 +244,7 @@ def init_cache_windowed(cfg: ArchConfig, batch: int, max_seq: int,
     """Ring-buffer caches (size = sliding_window) for local layers; full
     caches only for the global layers. For gemma3-4b @ 500k this cuts
     cache bytes ~5.6x (28 local layers hold 1024 keys instead of 524288)
-    — EXPERIMENTS.md §Perf cell 3."""
+    — docs/DESIGN.md §7."""
     W = min(cfg.sliding_window, max_seq)
     plen, n_groups, n_tail = _local_global_split(cfg)
     n_loc = plen - 1
@@ -286,10 +286,10 @@ def decode_step_windowed(params: Pytree, cfg: ArchConfig, cache: Pytree,
 
     def attn_ring(lp, h, kc, vc, kpos, theta):
         slot = pos % W
-        k_new = (h @ lp["attn"]["w_k"]).reshape(B, 1, cfg.n_kv_heads,
-                                                cfg.hd)
-        v_new = (h @ lp["attn"]["w_v"]).reshape(B, 1, cfg.n_kv_heads,
-                                                cfg.hd)
+        k_new = L.masked_dense_apply(h, lp["attn"]["w_k"]).reshape(
+            B, 1, cfg.n_kv_heads, cfg.hd)
+        v_new = L.masked_dense_apply(h, lp["attn"]["w_v"]).reshape(
+            B, 1, cfg.n_kv_heads, cfg.hd)
         k_new = L.apply_rope(k_new, positions, theta)
         kc = jax.lax.dynamic_update_slice(
             kc, k_new.astype(kc.dtype), (0, slot, 0, 0))
@@ -304,10 +304,10 @@ def decode_step_windowed(params: Pytree, cfg: ArchConfig, cache: Pytree,
         return out, kc, vc, kpos
 
     def attn_full(lp, h, kc, vc, theta):
-        k_new = (h @ lp["attn"]["w_k"]).reshape(B, 1, cfg.n_kv_heads,
-                                                cfg.hd)
-        v_new = (h @ lp["attn"]["w_v"]).reshape(B, 1, cfg.n_kv_heads,
-                                                cfg.hd)
+        k_new = L.masked_dense_apply(h, lp["attn"]["w_k"]).reshape(
+            B, 1, cfg.n_kv_heads, cfg.hd)
+        v_new = L.masked_dense_apply(h, lp["attn"]["w_v"]).reshape(
+            B, 1, cfg.n_kv_heads, cfg.hd)
         k_new = L.apply_rope(k_new, positions, theta)
         kc = jax.lax.dynamic_update_slice(
             kc, k_new.astype(kc.dtype), (0, pos, 0, 0))
@@ -408,8 +408,10 @@ def decode_step(params: Pytree, cfg: ArchConfig, cache: Pytree,
 
     def attn_gqa(lp, h, lc, w, th):
         # project new kv, write into cache at pos, attend over cache
-        k_new = (h @ lp["attn"]["w_k"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
-        v_new = (h @ lp["attn"]["w_v"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+        k_new = L.masked_dense_apply(h, lp["attn"]["w_k"]).reshape(
+            B, 1, cfg.n_kv_heads, cfg.hd)
+        v_new = L.masked_dense_apply(h, lp["attn"]["w_v"]).reshape(
+            B, 1, cfg.n_kv_heads, cfg.hd)
         if "bias_k" in lp["attn"]:
             k_new = k_new + lp["attn"]["bias_k"].reshape(
                 cfg.n_kv_heads, cfg.hd).astype(k_new.dtype)
@@ -429,7 +431,7 @@ def decode_step(params: Pytree, cfg: ArchConfig, cache: Pytree,
         return out, {"k": kc, "v": vc}
 
     def attn_mla(lp, h, lc):
-        dkv = h @ lp["attn"]["w_dkv"]
+        dkv = L.masked_dense_apply(h, lp["attn"]["w_dkv"])
         c_kv_new = L.rms_norm({"scale": lp["attn"]["kv_norm_scale"]},
                               dkv[..., :cfg.kv_lora_rank])
         k_rope_new = L.apply_rope(

@@ -190,6 +190,7 @@ def test_partial_participation_zeroes_dropped_clients(setup):
 
 def test_launch_plans_registered():
     from repro.launch import plans  # noqa: F401 (registers)
-    assert set(api.launchable()) >= {"fedpm_reg", "fedpm", "fedavg"}
+    assert set(api.launchable()) >= {"fedpm_reg", "fedpm", "fedmask",
+                                     "fedavg"}
     with pytest.raises(KeyError, match="launch plan"):
-        api.get_launch_plan("fedmask")
+        api.get_launch_plan("topk")

@@ -87,6 +87,135 @@ def test_smoke_masked_train_step(name):
     assert any(float(jnp.max(jnp.abs(x))) > 0 for x in gl)
 
 
+# one config per model family (dense / moe / vlm / ssm / hybrid /
+# encdec) for the fused-vs-reference path equivalence sweep
+FAMILY_REPS = ("internlm2-1.8b", "deepseek-v2-lite-16b", "qwen2-vl-2b",
+               "mamba2-370m", "recurrentgemma-9b", "whisper-medium")
+
+
+@pytest.mark.parametrize("name", FAMILY_REPS)
+def test_masked_execution_matches_reference_path(name):
+    """The tentpole invariant: the fused masked-execution forward
+    (MaskedLeaf -> ops.masked_dense) and the materialized reference
+    path (masking.hash_effective -> plain forward) sample bit-identical
+    masks under the shared seed convention, so logits are bit-identical
+    and score grads agree."""
+    cfg = get_config(name, smoke=True)
+    api = build_model(cfg)
+    key = jax.random.PRNGKey(5)
+    params = api.init_params(key)
+    mp = masking.init_masked(key, params, masking.MaskSpec())
+    seed_fn = lambda i: masking.mask_stream_seed(3, 0, i, 1, run_seed=17)
+    batch = _batch_for(cfg, key)
+
+    fused = api.forward(masking.masked_forward_tree(mp, seed_fn), batch)
+    eff = api.forward(masking.hash_effective(mp, seed_fn), batch)
+    assert np.array_equal(np.asarray(fused[0], np.float32),
+                          np.asarray(eff[0], np.float32)), \
+        "fused and materialized logits diverge"
+
+    def loss_fused(scores):
+        t = masking.masked_forward_tree(
+            masking.MaskedParams(mp.weights, scores, mp.floats), seed_fn)
+        return api.loss(api.forward(t, batch), batch)
+
+    def loss_eff(scores):
+        e = masking.hash_effective(
+            masking.MaskedParams(mp.weights, scores, mp.floats), seed_fn)
+        return api.loss(api.forward(e, batch), batch)
+
+    l1, g1 = jax.value_and_grad(loss_fused)(mp.scores)
+    l2, g2 = jax.value_and_grad(loss_eff)(mp.scores)
+    assert float(l1) == float(l2)
+    for (path, a), (_, b) in zip(masking.leaves_with_paths(g1),
+                                 masking.leaves_with_paths(g2)):
+        if a is None:
+            continue
+        # grads differ only by bf16 rounding of the reference's x^T@g
+        d = float(jnp.max(jnp.abs(a - b)))
+        scale = float(jnp.max(jnp.abs(b))) + 1e-9
+        assert d <= 0.05 * scale + 1e-5, (path, d, scale)
+
+
+def test_masked_execution_matches_reference_path_cnn():
+    """The cnn family (the paper's own Conv models): conv kernels ride
+    the materializing fallback, denses the fused kernels — same stream,
+    same outputs."""
+    from repro.models import cnn
+    cfg = cnn.ConvConfig("quick", (8, 8), (32,), n_classes=4, img_size=8)
+    key = jax.random.PRNGKey(6)
+    params = cnn.init_params(key, cfg)
+    mp = masking.init_masked(key, params, masking.MaskSpec())
+    seed_fn = lambda i: masking.mask_stream_seed(0, 0, i, 0, run_seed=9)
+    images = jax.random.normal(key, (4, 8, 8, 3), jnp.float32)
+    labels = jnp.asarray([0, 1, 2, 3], jnp.int32)
+
+    y1 = cnn.forward(masking.masked_forward_tree(mp, seed_fn), cfg,
+                     images)
+    y2 = cnn.forward(masking.hash_effective(mp, seed_fn), cfg, images)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-5)
+
+    def loss_of(build):
+        def f(scores):
+            t = build(masking.MaskedParams(mp.weights, scores,
+                                           mp.floats), seed_fn)
+            return cnn.ce_loss(cnn.forward(t, cfg, images),
+                               {"labels": labels})
+        return f
+
+    l1, g1 = jax.value_and_grad(
+        loss_of(masking.masked_forward_tree))(mp.scores)
+    l2, g2 = jax.value_and_grad(
+        loss_of(masking.hash_effective))(mp.scores)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+    for (path, a), (_, b) in zip(masking.leaves_with_paths(g1),
+                                 masking.leaves_with_paths(g2)):
+        if a is None:
+            continue
+        # the reference path rounds x^T@g through bf16; the fused
+        # kernel keeps it f32 — bf16-level agreement is the bound
+        d = float(jnp.max(jnp.abs(a - b)))
+        scale = float(jnp.max(jnp.abs(b))) + 1e-9
+        assert d <= 0.05 * scale + 1e-5, (path, d, scale)
+
+
+@pytest.mark.parametrize("name", ["internlm2-1.8b", "mamba2-370m"])
+def test_masked_execution_threshold_mode(name):
+    """FedMask threshold mode through the fused kernels equals the
+    materialized threshold reference."""
+    cfg = get_config(name, smoke=True)
+    api = build_model(cfg)
+    key = jax.random.PRNGKey(8)
+    params = api.init_params(key)
+    mp = masking.init_masked(key, params, masking.MaskSpec())
+    seed_fn = lambda i: masking.mask_stream_seed(0, 0, i, 0)
+    batch = _batch_for(cfg, key)
+    fused = api.forward(masking.masked_forward_tree(
+        mp, seed_fn, mode="threshold", tau=0.45), batch)
+    eff = api.forward(masking.hash_effective(
+        mp, seed_fn, mode="threshold", tau=0.45), batch)
+    assert np.array_equal(np.asarray(fused[0], np.float32),
+                          np.asarray(eff[0], np.float32))
+
+
+def test_dynamics_params_stay_float():
+    """A_log / D (ssm) and a_param (hybrid) must NOT be masked —
+    Bernoulli-masking a decay rate destroys stability (docs/DESIGN.md
+    §Arch-applicability)."""
+    for name, frags in (("mamba2-370m", ("A_log", "/D")),
+                        ("recurrentgemma-9b", ("a_param",))):
+        cfg = get_config(name, smoke=True)
+        api = build_model(cfg)
+        params = api.init_params(jax.random.PRNGKey(0))
+        mp = masking.init_masked(jax.random.PRNGKey(0), params,
+                                 masking.MaskSpec())
+        for path, leaf in masking.leaves_with_paths(mp.scores):
+            for frag in frags:
+                if frag.strip("/") in path.split("/")[-1]:
+                    assert leaf is None, f"{name}: {path} got masked"
+
+
 @pytest.mark.parametrize("name", [n for n in ARCH_NAMES
                                   if n != "qwen2-vl-2b"])
 def test_decode_matches_forward(name):

@@ -248,6 +248,102 @@ def test_masked_dense_grads_match_ref_oracle(shape):
                                rtol=1e-4, atol=1e-4)
 
 
+def test_masked_dense_offset_matches_ref_bit_exact():
+    """The `off` operand shifts the flat hash index: identity-probing
+    the kernel recovers ref.sample_mask(s, seed, off) bit-for-bit, on
+    aligned and padded launches."""
+    K, N = 100, 60
+    s = jax.random.normal(jax.random.PRNGKey(5), (K, N), jnp.float32)
+    w = jnp.ones((K, N), jnp.float32)
+    for off in (0, 12345, 3 * K * N):
+        m = ops.masked_dense(jnp.eye(K, dtype=jnp.float32), w, s, 31,
+                             off)
+        m_ref = ref.sample_mask(s, 31, off).astype(jnp.float32)
+        assert np.array_equal(np.asarray(m), np.asarray(m_ref)), off
+
+
+def test_stacked_leaf_offsets_equal_uplink_stream():
+    """THE shared-stream identity behind the model zoo's MaskedLeaf
+    convention: per-block masks at off = l*K*N are exactly the bits
+    `sample_and_pack` packs for the flat stacked leaf under one seed."""
+    L, K, N = 3, 24, 56
+    ss = jax.random.normal(jax.random.PRNGKey(3), (L, K, N), jnp.float32)
+    words = ref.sample_and_pack(ss.reshape(1, -1),
+                                jnp.asarray([31], jnp.uint32))
+    flat = ref.unpack_bits(words[0], L * K * N).reshape(L, K, N)
+    per = jnp.stack([ref.sample_mask(ss[l], 31, l * K * N)
+                     for l in range(L)])
+    assert np.array_equal(np.asarray(flat), np.asarray(per))
+    # and the kernel agrees with the per-block oracle
+    w = jnp.ones((K, N), jnp.float32)
+    for l in range(L):
+        m = ops.masked_dense(jnp.eye(K, dtype=jnp.float32), w, ss[l],
+                             31, l * K * N)
+        assert np.array_equal(np.asarray(m),
+                              np.asarray(per[l], np.float32))
+
+
+def test_masked_dense_offset_grads_match_ref():
+    M, K, N = 40, 100, 60
+    key = jax.random.PRNGKey(7)
+    kx, kw, ks = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (M, K), jnp.float32)
+    w = jax.random.normal(kw, (K, N), jnp.float32)
+    s = jax.random.normal(ks, (K, N), jnp.float32)
+
+    def loss(x, s):
+        return jnp.sum(ops.masked_dense(x, w, s, 13, 777) ** 2)
+
+    gx, gs = jax.grad(loss, argnums=(0, 1))(x, s)
+    y_ref = ref.masked_matmul(x, w, s, 13, 777)
+    dx_ref, ds_ref = ref.masked_dense_bwd(x, w, s, 13, 2.0 * y_ref, 777)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(dx_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(ds_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_masked_dense_threshold_forward_and_grads():
+    """FedMask mode: m = 1[sigmoid(s) > tau] through the fused kernels,
+    STE backward identical in form to the Bernoulli mode's."""
+    M, K, N = 40, 96, 72
+    key = jax.random.PRNGKey(11)
+    kx, kw, ks = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (M, K), jnp.float32)
+    w = jax.random.normal(kw, (K, N), jnp.float32)
+    s = jax.random.normal(ks, (K, N), jnp.float32)
+    tau = 0.4
+    eff = ref.threshold_mask(s, tau).astype(jnp.float32) * w
+    y = ops.masked_dense_threshold(x, w, s, tau)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ eff),
+                               rtol=1e-5, atol=1e-5)
+
+    def loss(x, s):
+        return jnp.sum(ops.masked_dense_threshold(x, w, s, tau) ** 2)
+
+    gx, gs = jax.grad(loss, argnums=(0, 1))(x, s)
+    g = 2.0 * np.asarray(y)
+    sig = np.asarray(jax.nn.sigmoid(s))
+    np.testing.assert_allclose(np.asarray(gx), g @ np.asarray(eff).T,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(gs),
+        (np.asarray(x).T @ g) * np.asarray(w) * sig * (1 - sig),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_sample_and_pack_threshold_mode():
+    s2 = jax.random.normal(jax.random.PRNGKey(5), (2, 500), jnp.float32)
+    seeds = jnp.asarray([1, 2], jnp.uint32)
+    wt = sample_and_pack(s2, seeds, interpret=True, mode="threshold",
+                         tau=0.3)
+    wr = ref.sample_and_pack(s2, seeds, mode="threshold", tau=0.3)
+    assert np.array_equal(np.asarray(wt), np.asarray(wr))
+    m = jax.vmap(lambda wd: ref.unpack_bits(wd, 500))(wt)
+    assert np.array_equal(np.asarray(m),
+                          np.asarray(ref.threshold_rows(s2, 0.3)))
+
+
 def test_use_interpret_cached_and_forceable(monkeypatch):
     ops._use_interpret.cache_clear()
     try:

@@ -133,6 +133,129 @@ def test_sample_and_pack_rows_kernel_matches_reference():
     assert not bool(jnp.all(wk[0] == wk[1]))
 
 
+def _scores_equal(a, b):
+    return all(
+        x is None or np.array_equal(np.asarray(x), np.asarray(y))
+        for (_, x), (_, y) in zip(masking.leaves_with_paths(a),
+                                  masking.leaves_with_paths(b)))
+
+
+def test_train_step_seed_plumbed_and_deterministic():
+    """StepConfig.seed feeds every mask stream (no hard-coded PRNGKey):
+    equal seeds reproduce the step bit-for-bit, different seeds sample
+    different masks and so take a different step."""
+    cfg, api = _mini()
+    key = jax.random.PRNGKey(11)
+    state = steplib.init_fed_state(key, api, SPEC, C=2)
+    batch = {"tokens": jnp.broadcast_to((jnp.arange(16) * 3) % 7,
+                                        (2, 2, 16)).astype(jnp.int32)}
+    s_a, _ = jax.jit(steplib.make_train_step(
+        api, steplib.StepConfig(seed=1)))(state, batch)
+    s_a2, _ = jax.jit(steplib.make_train_step(
+        api, steplib.StepConfig(seed=1)))(state, batch)
+    s_b, _ = jax.jit(steplib.make_train_step(
+        api, steplib.StepConfig(seed=2)))(state, batch)
+    assert _scores_equal(s_a["scores"], s_a2["scores"])
+    assert not _scores_equal(s_a["scores"], s_b["scores"])
+
+
+def test_train_step_eff_path_matches_fused(monkeypatch):
+    """REPRO_EFF_PATH=1 (materialized effective params) draws the SAME
+    hash-stream masks as the fused kernels: identical loss, score
+    updates equal to bf16 rounding."""
+    cfg, api = _mini()
+    key = jax.random.PRNGKey(12)
+    state = steplib.init_fed_state(key, api, SPEC, C=2)
+    scfg = steplib.StepConfig(lam=0.1, lr=0.5)
+    batch = {"tokens": jnp.broadcast_to((jnp.arange(16) * 5) % 11,
+                                        (2, 2, 16)).astype(jnp.int32)}
+    s_f, m_f = jax.jit(steplib.make_train_step(api, scfg))(state, batch)
+    monkeypatch.setenv("REPRO_EFF_PATH", "1")
+    s_e, m_e = jax.jit(steplib.make_train_step(api, scfg))(state, batch)
+    assert float(m_f["loss"]) == float(m_e["loss"])
+    for (p, a), (_, b) in zip(masking.leaves_with_paths(s_f["scores"]),
+                              masking.leaves_with_paths(s_e["scores"])):
+        if a is None:
+            continue
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-2, atol=2e-2, err_msg=p)
+
+
+def test_round_step_threshold_mode():
+    """mask_mode="threshold" (the fedmask plan): the uplink packs the
+    deterministic mask, so with shared scores theta IS the thresholded
+    mask — and re-running is bit-identical (no sampling)."""
+    cfg, api = _mini()
+    key = jax.random.PRNGKey(13)
+    state = steplib.init_fed_state(key, api, SPEC, C=2)
+    state["scores"] = jax.tree_util.tree_map(
+        lambda s: None if s is None else s
+        + jax.random.normal(key, s.shape),
+        state["scores"], is_leaf=lambda x: x is None)
+    rs = jax.jit(steplib.make_round_step(api, steplib.StepConfig(
+        mask_mode="threshold", tau=0.5)))
+    s1, m1 = rs(state)
+    s2, _ = rs(state)
+    assert _scores_equal(s1["scores"], s2["scores"])
+    # theta = mean over cohorts of the deterministic thresholded masks
+    # (no sampling); new scores are logit(theta), clipped at 1e-6
+    for (p, leaf), (_, s0) in zip(
+            masking.leaves_with_paths(s1["scores"]),
+            masking.leaves_with_paths(state["scores"])):
+        if leaf is None:
+            continue
+        theta = jax.nn.sigmoid(np.asarray(leaf, np.float32))
+        want = np.mean(
+            (jax.nn.sigmoid(np.asarray(s0, np.float32)) > 0.5)
+            .astype(np.float32), axis=0)
+        assert np.allclose(theta, want, atol=2e-5), p
+    assert 0.0 <= float(m1["bpp"]) <= 1.0
+
+
+def test_fedmask_launch_plan_runs():
+    """--algo fedmask resolves to a launch plan whose train step
+    differentiates through the fused threshold kernels."""
+    from repro import api as fedapi
+    from repro.launch import plans  # noqa: F401 (registers)
+    cfg, api = _mini()
+    plan = fedapi.get_launch_plan("fedmask")(
+        api, steplib.StepConfig(lr=0.5), key=jax.random.PRNGKey(0),
+        cohorts=2)
+    toks = jnp.arange(512, dtype=jnp.int32) % 7
+    batch = plan.make_batch(jax.random.PRNGKey(1), toks, 2, 16)
+    state, m = plan.step_fn(plan.state, batch)
+    assert np.isfinite(float(m["loss"]))
+    state, rm = plan.round_fn(state)
+    assert 0.0 <= float(rm["bpp"]) <= 1.0
+
+
+def _load_kernels_bench():
+    import importlib.util
+    import pathlib
+    p = (pathlib.Path(__file__).resolve().parents[1] / "benchmarks"
+         / "kernels_bench.py")
+    spec = importlib.util.spec_from_file_location("kernels_bench", p)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_train_step_jaxpr_zero_weight_temporaries():
+    """Acceptance invariant (tier-1 twin of the benchmark gate): the
+    jaxpr of a jitted make_train_step for an MXU-aligned transformer
+    config defines ZERO weight-shaped f32 values outside pallas_call —
+    forward AND backward — for every masked block shape, while the
+    materialized REPRO_EFF_PATH reference defines strictly more at
+    every leaf shape."""
+    bench = _load_kernels_bench()
+    model = bench.model_step_weight_defs(iters=0)
+    assert model["block_shapes"], "no masked blocks found"
+    for sh, cts in model["block_shapes"].items():
+        assert cts["fused"] == 0, (sh, cts)
+    for sh, cts in model["leaf_shapes"].items():
+        assert cts["eff"] > cts["fused"], (sh, cts)
+
+
 def test_serve_step_runs():
     cfg, api = _mini("gemma3-4b")
     key = jax.random.PRNGKey(3)

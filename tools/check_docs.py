@@ -1,0 +1,114 @@
+#!/usr/bin/env python
+"""Docs link checker: fail on dangling intra-repo references.
+
+Checks, over README.md and every markdown file under docs/:
+
+  * markdown links `[text](target)` whose target is a relative path —
+    the file must exist (anchors `#...` are stripped; pure-anchor and
+    external http(s)/mailto links are skipped);
+  * `docs/DESIGN.md` prose references anywhere in README.md, docs/,
+    src/, benchmarks/, examples/ and tests/ — the file must exist, and
+    a `§N` / `§Name` section reference must match a heading in it.
+
+Run from the repo root:  python tools/check_docs.py
+Exit code 0 = clean, 1 = dangling references (listed on stderr).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SECREF_RE = re.compile(r"docs/DESIGN\.md\s+§([\w-]+)")
+
+
+def md_files():
+    out = [ROOT / "README.md"]
+    docs = ROOT / "docs"
+    if docs.is_dir():
+        out.extend(sorted(docs.rglob("*.md")))
+    return [p for p in out if p.exists()]
+
+
+def check_md_links(errors):
+    for md in md_files():
+        for lineno, line in enumerate(md.read_text().splitlines(), 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://", "mailto:",
+                                      "#")):
+                    continue
+                path = target.split("#", 1)[0]
+                if not path:
+                    continue
+                resolved = (md.parent / path).resolve()
+                if not resolved.exists():
+                    errors.append(f"{md.relative_to(ROOT)}:{lineno}: "
+                                  f"dangling link -> {target}")
+
+
+def design_headings():
+    design = ROOT / "docs" / "DESIGN.md"
+    if not design.exists():
+        return None
+    heads = []
+    for line in design.read_text().splitlines():
+        m = re.match(r"#+\s+(.*)", line)
+        if m:
+            heads.append(m.group(1).lower())
+    return heads
+
+
+def check_section_refs(errors):
+    heads = design_headings()
+    if heads is None:
+        errors.append("docs/DESIGN.md does not exist but is referenced")
+        return
+    scan_roots = ["README.md", "docs", "src", "benchmarks", "examples",
+                  "tests"]
+    files = []
+    for r in scan_roots:
+        p = ROOT / r
+        if p.is_file():
+            files.append(p)
+        elif p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+            files.extend(sorted(p.rglob("*.md")))
+    for f in files:
+        try:
+            text = f.read_text()
+        except UnicodeDecodeError:
+            continue
+        for lineno, line in enumerate(text.splitlines(), 1):
+            for sec in SECREF_RE.findall(line):
+                sl = sec.lower()
+                # "§3" matches a "## 3. ..." heading; "§Arch-..."
+                # matches by prefix
+                ok = any(h.startswith(f"{sl}.") or h.startswith(f"{sl} ")
+                         or sl in h for h in heads)
+                if not ok:
+                    errors.append(
+                        f"{f.relative_to(ROOT)}:{lineno}: "
+                        f"docs/DESIGN.md §{sec} matches no heading")
+
+
+def main() -> int:
+    errors = []
+    check_md_links(errors)
+    check_section_refs(errors)
+    if errors:
+        for e in errors:
+            print(e, file=sys.stderr)
+        print(f"{len(errors)} dangling doc reference(s)",
+              file=sys.stderr)
+        return 1
+    n = len(md_files())
+    print(f"docs OK: {n} markdown file(s), all intra-repo links and "
+          "DESIGN.md section references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
