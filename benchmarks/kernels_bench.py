@@ -25,14 +25,22 @@ Three kinds of output:
     original forward check.
 
   * Whole-model step — the same invariant asserted END-TO-END on a
-    jitted `launch.steps.make_train_step` for an MXU-aligned
-    transformer-block config: the jaxpr of the full train step
-    (forward AND backward, scores as a first-class grad argument)
+    jitted `launch.steps.make_train_step` for an MXU-aligned config of
+    EACH kernel-bearing family: dense transformer (2-D blocks),
+    deepseek-style MoE (stacked (E, K, N) expert leaves through the
+    GROUPED kernel) and recurrentgemma-style hybrid ((W, C) conv
+    leaves through the fused conv kernel): the jaxpr of the full train
+    step (forward AND backward, scores as a first-class grad argument)
     defines zero weight-shaped f32 values outside `pallas_call` for
     EVERY masked block shape, while the materialized reference path
-    (`REPRO_EFF_PATH=1`) scores > 0 on each — proving the model zoo's
-    masked-execution routing delivers the kernel win at the training
-    hot path, not just per layer.  Timed fused vs. materialized.
+    (`REPRO_EFF_PATH=1`) scores > 0 on each leaf — proving the model
+    zoo's masked-execution routing delivers the kernel win at the
+    training hot path for every maskable leaf shape, not just per
+    layer.  Timed fused vs. materialized.
+
+`tools/check_bench.py` diffs a fresh JSON against the committed
+baseline (structural counts asserted; fused-vs-ref timing ratios gated
+on real hardware, informational under interpret).
 
 Run:  PYTHONPATH=src python benchmarks/kernels_bench.py [--iters N]
       [--warmup N] [--max-dim D] [--json PATH]
@@ -108,6 +116,27 @@ def shape_zoo(max_dim: int = 1536, m: int = 256):
                 continue
             seen.add((K, N))
             out.append((f"{name}:{tag}", m, K, N))
+    return out
+
+
+GROUPED_ZOO_ARCHS = ("deepseek-v2-lite-16b", "deepseek-v2-236b")
+
+
+def grouped_shape_zoo(max_dim: int = 1536, m: int = 128,
+                      max_experts: int = 4):
+    """(label, E, M, K, N) for the stacked MoE expert matmuls
+    (d_model -> moe_d_ff per routed expert) of the MoE zoo archs,
+    expert count capped for CPU-interpret tractability."""
+    out, seen = [], set()
+    for name in GROUPED_ZOO_ARCHS:
+        cfg = get_config(name)
+        E = min(cfg.n_experts, max_experts)
+        K, N = (_shrink(cfg.d_model, max_dim // 2),
+                _shrink(cfg.moe_d_ff, max_dim // 2))
+        if (E, K, N) in seen:
+            continue
+        seen.add((E, K, N))
+        out.append((f"{name}:moe_up", E, m, K, N))
     return out
 
 
@@ -221,23 +250,47 @@ def weight_temporaries_bwd():
 # Whole-model check: the invariant on a full transformer-block train step
 # ---------------------------------------------------------------------------
 
-# MXU-aligned transformer block config: every masked (K, N) block —
-# w_q/w_k/w_v/w_o (128, 128), w_up/w_gate (128, 256), w_down (256, 128)
-# — is lane-aligned, so `masked_dense` launches unpadded and the count
-# below is exact.  vocab=320 keeps the (float) unembed cast from
-# colliding with any masked block shape.
+# MXU-aligned model configs: every masked trailing-2D block — incl.
+# the STACKED MoE expert (E, K, N) and depthwise conv (W, C) leaves —
+# is lane-aligned, so every fused launch is unpadded and the counts
+# below are exact.  vocab=320 keeps the (float) unembed cast from
+# colliding with any masked block shape; activation dims (B, S, cap)
+# are chosen so no 2-D f32 activation collides with a block shape.
 MODEL_CHECK_CFG = ArchConfig(
     name="bench-aligned", family="dense", n_layers=2, d_model=128,
     n_heads=2, n_kv_heads=2, d_ff=256, vocab=320, head_dim=64)
 
+# deepseek-style MoE: MLA attention (all factors 128-aligned) + 1 dense
+# + 1 MoE layer of 2 routed experts (stacked (2, 128, 128) leaves ->
+# the GROUPED kernel) + 1 shared expert
+MOE_CHECK_CFG = ArchConfig(
+    name="bench-moe-aligned", family="moe", n_layers=2, d_model=128,
+    n_heads=2, n_kv_heads=2, d_ff=256, vocab=320,
+    kv_lora_rank=128, q_lora_rank=0, qk_nope_dim=128, qk_rope_dim=128,
+    v_head_dim=128, n_experts=2, n_shared_experts=1, top_k=2,
+    moe_d_ff=128, first_dense_layers=1)
 
-def model_step_setup(C: int = 1, B: int = 2, S: int = 64):
-    """(api, fed state, cohort batch) for MODEL_CHECK_CFG."""
-    api = build_model(MODEL_CHECK_CFG)
+# recurrentgemma-style hybrid: RG-LRU blocks with a (4, 128) depthwise
+# conv kernel leaf (-> the fused conv kernel) + local attention
+HYBRID_CHECK_CFG = ArchConfig(
+    name="bench-hybrid-aligned", family="hybrid", n_layers=3,
+    d_model=128, n_heads=2, n_kv_heads=2, d_ff=256, vocab=320,
+    head_dim=64, sliding_window=16, block_pattern=("rec", "rec", "attn"),
+    lru_width=128, conv_width=4)
+
+MODEL_CHECK_CFGS = {"dense": (MODEL_CHECK_CFG, 64),
+                    "moe": (MOE_CHECK_CFG, 48),
+                    "hybrid": (HYBRID_CHECK_CFG, 32)}
+
+
+def model_step_setup(cfg: ArchConfig = MODEL_CHECK_CFG, C: int = 1,
+                     B: int = 2, S: int = 64):
+    """(api, fed state, cohort batch) for an aligned check config."""
+    api = build_model(cfg)
     state = steplib.init_fed_state(jax.random.PRNGKey(0), api,
                                    masking.MaskSpec(), C=C)
     tokens = (jnp.arange(B * S, dtype=jnp.int32).reshape(B, S) * 3) \
-        % MODEL_CHECK_CFG.vocab
+        % cfg.vocab
     batch = {"tokens": jnp.broadcast_to(tokens, (C, B, S))}
     return api, state, batch
 
@@ -264,21 +317,25 @@ def _trace_model_step(api, state, batch, scfg, eff_path: bool):
             os.environ["REPRO_EFF_PATH"] = prev
 
 
-def model_step_weight_defs(iters: int = 0, warmup: int = 1):
+def model_step_weight_defs(cfg: ArchConfig = MODEL_CHECK_CFG,
+                           iters: int = 0, warmup: int = 1,
+                           S: int = 64):
     """The end-to-end invariant on the jitted whole-model train step.
 
     Two granularities:
-      * block shapes (K, N) — what one `masked_dense` launch consumes;
-        the FUSED path must define ZERO f32 values at any of them
-        outside pallas_call (forward and backward).
-      * full leaf shapes (C, L, K, N) — where the materialized
+      * block shapes — the trailing-2D tile one fused launch consumes
+        ((K, N) dense blocks, the (K, N) of a stacked (E, K, N) expert
+        leaf, the (W, C) of a conv kernel leaf); the FUSED path must
+        define ZERO f32 values at any of them outside pallas_call
+        (forward and backward).
+      * full leaf shapes (C, L[, E], K, N) — where the materialized
         REPRO_EFF_PATH reference pays: hash uniforms, sigmoid(theta),
         the STE mask.  Both paths share the score-sized regularizer /
         optimizer arithmetic at this scale, so the assertion is
         RELATIVE: eff must define strictly more than fused on every
         leaf.
     """
-    api, state, batch = model_step_setup()
+    api, state, batch = model_step_setup(cfg, S=S)
     scfg = steplib.StepConfig(lam=0.1, lr=0.5)
     fused_jx, fused_fn = _trace_model_step(api, state, batch, scfg,
                                            eff_path=False)
@@ -376,6 +433,48 @@ def bench_shape(label, M, K, N, iters, warmup, key):
     return {"name": label, "M": M, "K": K, "N": N, **t}
 
 
+def bench_grouped_shape(label, E, M, K, N, iters, warmup, key):
+    """Fused grouped kernels vs the materializing einsum baseline for
+    one stacked (E, K, N) expert shape."""
+    kx, kw, ks, kg = jax.random.split(key, 4)
+    x = jax.random.normal(kx, (E, M, K), jnp.float32).astype(jnp.bfloat16)
+    w = jax.random.normal(kw, (E, K, N), jnp.float32).astype(jnp.bfloat16)
+    s = jax.random.normal(ks, (E, K, N), jnp.float32)
+    g = jax.random.normal(kg, (E, M, N), jnp.float32).astype(jnp.bfloat16)
+    seeds = jnp.full((E,), 7, jnp.uint32)
+    offs = jnp.arange(E, dtype=jnp.uint32) * jnp.uint32(K * N)
+
+    fwd = jax.jit(lambda x, w, s: ops.masked_dense_grouped(x, w, s, 7))
+    fwd_ref = jax.jit(
+        lambda x, w, s: ref.masked_matmul_grouped(x, w, s, seeds, offs))
+
+    def _bwd(x, w, s, g):
+        _, vjp = jax.vjp(
+            lambda x_, s_: ops.masked_dense_grouped(x_, w, s_, 7), x, s)
+        return vjp(g)
+
+    bwd = jax.jit(_bwd)
+
+    def _bwd_ref(x, w, s, g):
+        y = ref.masked_matmul_grouped(x, w, s, seeds, offs)
+        dx, ds = ref.masked_dense_grouped_bwd(x, w, s, seeds, offs, g)
+        return y, dx, ds
+
+    bwd_ref = jax.jit(_bwd_ref)
+
+    t = dict(
+        fwd_us=timed(fwd, x, w, s, iters=iters, warmup=warmup),
+        fwd_ref_us=timed(fwd_ref, x, w, s, iters=iters, warmup=warmup),
+        bwd_us=timed(bwd, x, w, s, g, iters=iters, warmup=warmup),
+        bwd_ref_us=timed(bwd_ref, x, w, s, g, iters=iters,
+                         warmup=warmup),
+    )
+    fwd_flops = 2 * E * M * K * N
+    t["fwd_gflops"] = fwd_flops / t["fwd_us"] / 1e3
+    t["bwd_gflops"] = 3 * fwd_flops / t["bwd_us"] / 1e3
+    return {"name": label, "E": E, "M": M, "K": K, "N": N, **t}
+
+
 def main(argv=None) -> dict:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--iters", type=int, default=3,
@@ -412,6 +511,20 @@ def main(argv=None) -> dict:
             print(f"{label}:{op}_ref_{M}x{K}x{N},"
                   f"{row[f'{op}_ref_us']:.0f},baseline")
 
+    # grouped (E, K, N) expert shapes: the MoE hot matmuls
+    results["grouped_shapes"] = []
+    for label, E, M, K, N in grouped_shape_zoo(max_dim=args.max_dim):
+        key, sub = jax.random.split(key)
+        row = bench_grouped_shape(label, E, M, K, N, args.iters,
+                                  args.warmup, sub)
+        results["grouped_shapes"].append(row)
+        for op in ("fwd", "bwd"):
+            print(f"{label}:{op}_{E}x{M}x{K}x{N},"
+                  f"{row[f'{op}_us']:.0f},"
+                  f"{row[f'{op}_gflops']:.1f}GFLOP/s")
+            print(f"{label}:{op}_ref_{E}x{M}x{K}x{N},"
+                  f"{row[f'{op}_ref_us']:.0f},baseline")
+
     # structural invariants: no weight-shaped f32 value may be defined
     # outside the pallas_call on either pass
     fwd_naive, fwd_fused = weight_temporaries_fwd()
@@ -431,34 +544,51 @@ def main(argv=None) -> dict:
     assert fwd_naive > 0 and bwd_naive > 0, \
         "naive baseline lost its temporaries — check the counter"
 
+    # compiled-HLO substring counts: under interpret-mode emulation the
+    # fused number is inflated by plumbing buffers that do not exist on
+    # TPU, so the field is explicitly labeled (the jaxpr counts above
+    # are the asserted invariant)
     nb, nf = hbm_weight_tensors_baseline_vs_fused()
-    results["hlo_substring_counts"] = {"fwd_naive": nb, "fwd_fused": nf}
-    print(f"hbm_weight_tensors_baseline,{nb},count")
-    print(f"hbm_weight_tensors_fused,{nf},count")
+    results["hlo_substring_counts"] = {
+        "fwd_naive": nb, "fwd_fused": nf,
+        "interpret_inflated": bool(interpret)}
+    if interpret:
+        print(f"hbm_weight_tensors_baseline,{nb},interpret_inflated")
+        print(f"hbm_weight_tensors_fused,{nf},interpret_inflated")
+    else:
+        print(f"hbm_weight_tensors_baseline,{nb},count")
+        print(f"hbm_weight_tensors_fused,{nf},count")
 
-    # end-to-end: the invariant on a jitted whole-model train step (a
-    # full transformer block stack, forward AND backward) — the model
+    # end-to-end: the invariant on a jitted whole-model train step —
+    # forward AND backward — for a dense transformer stack, a
+    # deepseek-style MoE (stacked (E, K, N) expert leaves through the
+    # GROUPED kernel) and a recurrentgemma-style hybrid (depthwise
+    # (W, C) conv leaves through the fused conv kernel): the model
     # zoo's masked-execution routing must leave ZERO weight-shaped f32
     # defs outside pallas_call for every masked block shape, while the
-    # materialized REPRO_EFF_PATH reference scores > 0 on each
-    model = model_step_weight_defs(iters=args.iters, warmup=args.warmup)
-    results["model_step"] = model
-    for sh, cts in model["block_shapes"].items():
-        print(f"model_step_block_f32_defs_{sh}_fused,"
-              f"{cts['fused']},count")
-        assert cts["fused"] == 0, \
-            f"model step defines {cts['fused']} weight-f32 values " \
-            f"for block {sh} outside pallas_call"
-    for sh, cts in model["leaf_shapes"].items():
-        print(f"model_step_leaf_f32_defs_{sh},"
-              f"{cts['eff']}:{cts['fused']},eff:fused")
-        assert cts["eff"] > cts["fused"], \
-            f"materialized path lost its {sh} temporaries — check " \
-            "the counter"
-    if "train_step_us" in model:
-        print(f"model_train_step,{model['train_step_us']:.0f},fused")
-        print(f"model_train_step_eff,{model['train_step_eff_us']:.0f},"
-              "materialized")
+    # materialized REPRO_EFF_PATH reference scores > 0 on each leaf
+    results["model_step"] = {}
+    for fam, (cfg, S) in MODEL_CHECK_CFGS.items():
+        model = model_step_weight_defs(cfg, iters=args.iters,
+                                       warmup=args.warmup, S=S)
+        results["model_step"][fam] = model
+        for sh, cts in model["block_shapes"].items():
+            print(f"model_step[{fam}]_block_f32_defs_{sh}_fused,"
+                  f"{cts['fused']},count")
+            assert cts["fused"] == 0, \
+                f"{fam} model step defines {cts['fused']} weight-f32 " \
+                f"values for block {sh} outside pallas_call"
+        for sh, cts in model["leaf_shapes"].items():
+            print(f"model_step[{fam}]_leaf_f32_defs_{sh},"
+                  f"{cts['eff']}:{cts['fused']},eff:fused")
+            assert cts["eff"] > cts["fused"], \
+                f"{fam}: materialized path lost its {sh} temporaries " \
+                "— check the counter"
+        if "train_step_us" in model:
+            print(f"model_train_step[{fam}],"
+                  f"{model['train_step_us']:.0f},fused")
+            print(f"model_train_step_eff[{fam}],"
+                  f"{model['train_step_eff_us']:.0f},materialized")
 
     assert len(results["shapes"]) >= 3, results["shapes"]
     with open(args.json, "w") as f:

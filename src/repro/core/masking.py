@@ -313,11 +313,14 @@ class MaskedLeaf:
     the leaf's flat uplink stream.
 
     For a leaf of shape lead + (K, N), `seed` and `off` have shape
-    `lead`: every trailing 2-D block is an independent kernel launch
-    whose flat hash index starts at off[block] = block_idx * K * N —
-    under `jax.lax.scan` over a layer-stacked (L, K, N) leaf the slices
-    stay self-describing.  `mode`/`tau` are static aux data ("sample"
-    for the Bernoulli draw, "threshold" for FedMask).
+    `lead`: every trailing 2-D block samples at flat hash index
+    off[block] = block_idx * K * N — under `jax.lax.scan` over a
+    layer-stacked (L, K, N) leaf the slices stay self-describing, and
+    for a stacked (E, K, N) expert leaf the per-expert (E,)-shaped
+    `seed`/`off` feed ONE grouped kernel launch
+    (`ops.masked_dense_grouped`) covering all experts.  `mode`/`tau`
+    are static aux data ("sample" for the Bernoulli draw, "threshold"
+    for FedMask).
     """
     w: Any
     s: Any
@@ -354,9 +357,11 @@ def materialize_leaf(leaf: MaskedLeaf) -> jax.Array:
     """Effective weights m * w for one MaskedLeaf, masks bit-identical
     to the fused kernels' (same hash stream, same offsets), STE grads.
 
-    The unfused fallback for consumers `masked_dense` cannot express
-    (conv kernels, stacked MoE experts) — materializes one weight-sized
-    temporary, so keep it off the transformer hot path.
+    The materializing fallback — one weight-sized temporary.  Since
+    the grouped-expert and conv kernels landed, no training-path
+    consumer needs it: it backs `hash_effective` (the REPRO_EFF_PATH=1
+    twin), `freeze_for_decode` (one-time prefill materialization), and
+    the per-token decode loop's `layers.effective_weight`.
     """
     K, N = leaf.w.shape[-2:]
     theta = sigmoid(leaf.s.astype(jnp.float32))
@@ -402,11 +407,20 @@ def hash_effective(mp: MaskedParams, seed_fn: Callable,
     m * w with the SAME hash-stream masks as the fused kernels (the
     REPRO_EFF_PATH=1 escape hatch and the path-equivalence oracle).
     """
+    return freeze_for_decode(masked_forward_tree(mp, seed_fn, mode, tau))
+
+
+def freeze_for_decode(tree: Pytree) -> Pytree:
+    """Materialize every `MaskedLeaf` of a forward tree ONCE for a
+    decode session: the deployed mask is static, so effective params
+    are computed a single time at prefill and every subsequent
+    `decode_step` / `conv1d_step` consumes plain arrays — zero mask
+    resampling in steady-state decode (docs/DESIGN.md §3; used by
+    `launch/serve.py`).  Float leaves pass through unchanged."""
     return jax.tree_util.tree_map(
         lambda p: materialize_leaf(p) if isinstance(p, MaskedLeaf)
         else p,
-        masked_forward_tree(mp, seed_fn, mode, tau),
-        is_leaf=lambda x: x is None or isinstance(x, MaskedLeaf))
+        tree, is_leaf=lambda x: x is None or isinstance(x, MaskedLeaf))
 
 
 def final_mask(mp: MaskedParams, key: jax.Array) -> Pytree:

@@ -22,6 +22,18 @@ and a fused uplink sampler —
                      in one pass (replaces sample-then-pack_bits, which
                      materialized the full uint8 mask in HBM).
 
+The GROUPED family extends the same discipline to stacked (E, K, N)
+leaves (MoE expert weights): `masked_matmul_grouped` (+ dx/ds) runs one
+pallas_call for all E groups — the expert index rides the grid and each
+group carries its own `seed`/`off` scalar operands, so group e's mask
+is drawn at flat offset e*K*N of the leaf's uplink stream.  The CONV
+family (`masked_conv1d`, `masked_conv1d_ds`) covers the depthwise
+causal (W, C) kernel leaves (mamba2 / recurrentgemma frontends), where
+the W-tap reduction is elementwise per channel and unrolled in-kernel;
+`mode="plain"` is the mask-free twin the reference path runs on
+pre-materialized weights, keeping both paths instruction-identical
+(bit-equal f32 sums under FMA fusion).
+
 Naive XLA: materialize sigmoid(s) (f32), u (f32), m*w (bf16) — three
 extra weight-sized HBM tensors per step, and the backward repeats all
 three plus xᵀ@g. These kernels eliminate every weight-sized temporary;
@@ -79,16 +91,28 @@ def _hash_uniform(idx: jax.Array, seed) -> jax.Array:
     return (x >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
 
 
+def _tile_mask_vals(s_tile, seed, off, tau, *, row0, col0,
+                    n_total: int, mode: str):
+    """Bernoulli (hash-stream) or threshold mask for one 2-D score tile
+    (the value-level core shared by the dense, grouped, and conv
+    kernels; `seed`/`off`/`tau` are scalars already read from refs)."""
+    theta = jax.nn.sigmoid(s_tile.astype(jnp.float32))
+    if mode == "threshold":
+        return theta > tau
+    bk, bn = s_tile.shape
+    rows = row0 + jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 0)
+    cols = col0 + jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 1)
+    idx = off + rows * jnp.uint32(n_total) + cols
+    return _hash_uniform(idx, seed) < theta
+
+
 def _tile_mask(s_ref, seed_ref, off_ref, tau_ref, *, row0, col0,
                bk: int, bn: int, n_total: int, mode: str):
     """Bernoulli (hash-stream) or threshold mask for one (bk, bn) tile."""
-    theta = jax.nn.sigmoid(s_ref[...].astype(jnp.float32))
-    if mode == "threshold":
-        return theta > tau_ref[0]
-    rows = row0 + jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 0)
-    cols = col0 + jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 1)
-    idx = off_ref[0] + rows * jnp.uint32(n_total) + cols
-    return _hash_uniform(idx, seed_ref[0]) < theta
+    del bk, bn  # implied by the ref block shape
+    return _tile_mask_vals(s_ref[...], seed_ref[0], off_ref[0],
+                           tau_ref[0], row0=row0, col0=col0,
+                           n_total=n_total, mode=mode)
 
 
 def _kernel(x_ref, w_ref, s_ref, seed_ref, off_ref, tau_ref, o_ref,
@@ -370,3 +394,348 @@ def sample_and_pack(s: jax.Array, seeds: jax.Array, *, bw: int = 256,
         interpret=interpret,
     )(s3, jnp.asarray(seeds, jnp.uint32))
     return out[:, :W]
+
+
+# ---------------------------------------------------------------------------
+# Grouped masked matmul: y[e] = x[e] @ (m[e] ⊙ w[e]) for stacked weights
+# ---------------------------------------------------------------------------
+#
+# The group/expert index rides the grid (leading axis, block size 1) and
+# each group carries its OWN `seed`/`off` scalar operand, so group e's
+# mask is exactly its slice of the stacked leaf's flat hash stream
+# (off[e] = e*K*N under the `MaskedLeaf.build` convention).  This is how
+# MoE expert einsums ride the zero-weight-temporary invariant: one
+# pallas_call for all E experts, no (E, K, N) m⊙w tensor in HBM.
+
+
+def _grp_operands(seeds, offs, tau):
+    return (jnp.asarray(seeds, jnp.uint32).reshape(-1),
+            jnp.asarray(offs, jnp.uint32).reshape(-1),
+            jnp.asarray(tau, jnp.float32).reshape(1))
+
+
+def _g_kernel(x_ref, w_ref, s_ref, seed_ref, off_ref, tau_ref, o_ref,
+              acc_ref, *, bk: int, bn: int, n_total: int, nk: int,
+              mode: str):
+    k_i = pl.program_id(3)
+
+    @pl.when(k_i == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    n_i = pl.program_id(2)
+    m = _tile_mask_vals(s_ref[0], seed_ref[0], off_ref[0], tau_ref[0],
+                        row0=k_i * jnp.uint32(bk),
+                        col0=n_i * jnp.uint32(bn),
+                        n_total=n_total, mode=mode)
+    wm = jnp.where(m, w_ref[0].astype(jnp.float32), 0.0)
+    acc_ref[...] += jnp.dot(x_ref[0].astype(jnp.float32), wm,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k_i == nk - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk",
+                                             "n_logical", "interpret",
+                                             "mode"))
+def masked_matmul_grouped(x: jax.Array, w: jax.Array, s: jax.Array,
+                          seeds: jax.Array, offs: jax.Array, *,
+                          bm: int = 128, bn: int = 512, bk: int = 512,
+                          n_logical: int | None = None,
+                          interpret: bool = False, mode: str = "sample",
+                          tau: jax.Array = 0.5) -> jax.Array:
+    """x: (E, M, K); w, s: (E, K, N); seeds, offs: (E,) uint32 per-group
+    hash-stream coordinates.  Returns (E, M, N) in x.dtype: one
+    pallas_call computing y[e] = x[e] @ (m[e] ⊙ w[e]) with group e's
+    mask drawn at flat index offs[e] + row*n_total + col — exactly the
+    slice `sample_and_pack` packs for the stacked leaf when
+    offs[e] = e*K*N.  `mode="threshold"` as in `masked_matmul`."""
+    E, M, K = x.shape
+    assert w.shape == (E, K, s.shape[-1]) and s.shape == w.shape, \
+        (x.shape, w.shape, s.shape)
+    N = w.shape[-1]
+    n_total = N if n_logical is None else n_logical
+    bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm_ == 0 and N % bn_ == 0 and K % bk_ == 0, \
+        (M, N, K, bm_, bn_, bk_)
+    nm, nn, nk = M // bm_, N // bn_, K // bk_
+
+    kernel = functools.partial(_g_kernel, bk=bk_, bn=bn_,
+                               n_total=n_total, nk=nk, mode=mode)
+    return pl.pallas_call(
+        kernel,
+        grid=(E, nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((1, bm_, bk_), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, bk_, bn_), lambda e, i, j, k: (e, k, j)),
+            pl.BlockSpec((1, bk_, bn_), lambda e, i, j, k: (e, k, j)),
+            pl.BlockSpec((1,), lambda e, i, j, k: (e,)),
+            pl.BlockSpec((1,), lambda e, i, j, k: (e,)),
+            pl.BlockSpec((1,), lambda e, i, j, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, bm_, bn_), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        interpret=interpret,
+    )(x, w, s, *_grp_operands(seeds, offs, tau))
+
+
+def _g_dx_kernel(g_ref, w_ref, s_ref, seed_ref, off_ref, tau_ref, o_ref,
+                 acc_ref, *, bk: int, bn: int, n_total: int, nn: int,
+                 mode: str):
+    n_i = pl.program_id(3)
+
+    @pl.when(n_i == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_i = pl.program_id(2)
+    m = _tile_mask_vals(s_ref[0], seed_ref[0], off_ref[0], tau_ref[0],
+                        row0=k_i * jnp.uint32(bk),
+                        col0=n_i * jnp.uint32(bn),
+                        n_total=n_total, mode=mode)
+    wm = jnp.where(m, w_ref[0].astype(jnp.float32), 0.0)   # (bk, bn)
+    acc_ref[...] += jax.lax.dot_general(
+        g_ref[0].astype(jnp.float32), wm,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(n_i == nn - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk",
+                                             "n_logical", "interpret",
+                                             "mode"))
+def masked_matmul_grouped_dx(g: jax.Array, w: jax.Array, s: jax.Array,
+                             seeds: jax.Array, offs: jax.Array, *,
+                             bm: int = 128, bn: int = 512,
+                             bk: int = 512, n_logical: int | None = None,
+                             interpret: bool = False,
+                             mode: str = "sample",
+                             tau: jax.Array = 0.5) -> jax.Array:
+    """g: (E, M, N) upstream cotangent; w, s: (E, K, N).  Returns
+    dx[e] = g[e] @ (m[e] ⊙ w[e])ᵀ : (E, M, K) in g.dtype, masks
+    bit-identical to the grouped forward's (same per-group stream)."""
+    E, M, N = g.shape
+    K = w.shape[1]
+    assert w.shape == (E, K, N) and s.shape == (E, K, N)
+    n_total = N if n_logical is None else n_logical
+    bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm_ == 0 and N % bn_ == 0 and K % bk_ == 0, \
+        (M, N, K, bm_, bn_, bk_)
+    nm, nk, nn = M // bm_, K // bk_, N // bn_
+
+    kernel = functools.partial(_g_dx_kernel, bk=bk_, bn=bn_,
+                               n_total=n_total, nn=nn, mode=mode)
+    return pl.pallas_call(
+        kernel,
+        grid=(E, nm, nk, nn),
+        in_specs=[
+            pl.BlockSpec((1, bm_, bn_), lambda e, i, k, n: (e, i, n)),
+            pl.BlockSpec((1, bk_, bn_), lambda e, i, k, n: (e, k, n)),
+            pl.BlockSpec((1, bk_, bn_), lambda e, i, k, n: (e, k, n)),
+            pl.BlockSpec((1,), lambda e, i, k, n: (e,)),
+            pl.BlockSpec((1,), lambda e, i, k, n: (e,)),
+            pl.BlockSpec((1,), lambda e, i, k, n: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, bm_, bk_), lambda e, i, k, n: (e, i, k)),
+        out_shape=jax.ShapeDtypeStruct((E, M, K), g.dtype),
+        scratch_shapes=[pltpu.VMEM((bm_, bk_), jnp.float32)],
+        interpret=interpret,
+    )(g, w, s, *_grp_operands(seeds, offs, tau))
+
+
+def _g_ds_kernel(x_ref, g_ref, w_ref, s_ref, o_ref, acc_ref, *,
+                 nm: int):
+    m_i = pl.program_id(3)
+
+    @pl.when(m_i == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[0].astype(jnp.float32), g_ref[0].astype(jnp.float32),
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(m_i == nm - 1)
+    def _():
+        sig = jax.nn.sigmoid(s_ref[0].astype(jnp.float32))
+        o_ref[...] = (acc_ref[...] * w_ref[0].astype(jnp.float32)
+                      * sig * (1.0 - sig)).astype(o_ref.dtype)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk",
+                                             "interpret"))
+def masked_matmul_grouped_ds(x: jax.Array, g: jax.Array, w: jax.Array,
+                             s: jax.Array, *, bm: int = 128,
+                             bn: int = 512, bk: int = 512,
+                             interpret: bool = False) -> jax.Array:
+    """x: (E, M, K); g: (E, M, N); w, s: (E, K, N).  Returns the STE
+    score gradient ds[e] = (x[e]ᵀ@g[e]) ⊙ w[e] ⊙ σ(s[e])(1−σ(s[e])) :
+    (E, K, N) in s.dtype, epilogue fused in VMEM per group."""
+    E, M, K = x.shape
+    N = g.shape[-1]
+    assert g.shape == (E, M, N) and w.shape == (E, K, N) \
+        and s.shape == (E, K, N)
+    bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm_ == 0 and N % bn_ == 0 and K % bk_ == 0, \
+        (M, N, K, bm_, bn_, bk_)
+    nk, nn, nm = K // bk_, N // bn_, M // bm_
+
+    kernel = functools.partial(_g_ds_kernel, nm=nm)
+    return pl.pallas_call(
+        kernel,
+        grid=(E, nk, nn, nm),
+        in_specs=[
+            pl.BlockSpec((1, bm_, bk_), lambda e, k, n, m: (e, m, k)),
+            pl.BlockSpec((1, bm_, bn_), lambda e, k, n, m: (e, m, n)),
+            pl.BlockSpec((1, bk_, bn_), lambda e, k, n, m: (e, k, n)),
+            pl.BlockSpec((1, bk_, bn_), lambda e, k, n, m: (e, k, n)),
+        ],
+        out_specs=pl.BlockSpec((1, bk_, bn_), lambda e, k, n, m: (e, k, n)),
+        out_shape=jax.ShapeDtypeStruct((E, K, N), s.dtype),
+        scratch_shapes=[pltpu.VMEM((bk_, bn_), jnp.float32)],
+        interpret=interpret,
+    )(x, g, w, s)
+
+
+# ---------------------------------------------------------------------------
+# Masked depthwise causal conv: the (W, C) kernel leaf, fully fused
+# ---------------------------------------------------------------------------
+#
+# A depthwise conv is elementwise per channel, so it cannot ride the
+# matmul kernels; this kernel family extends the same hash-stream
+# discipline to it.  The W-tap reduction is unrolled in-kernel over a
+# (S, bc) activation tile (W is 4ish), the (W, bc) mask tile is drawn
+# from flat index off + w_row*n_total + col — the leaf's uplink stream —
+# and neither the mask nor m⊙w ever exists in HBM.  The `flip` variant
+# reverses the tap order, which turns the forward correlation into the
+# dL/dx transposed correlation with the SAME regenerated mask.
+
+
+def _conv_kernel(x_ref, w_ref, s_ref, seed_ref, off_ref, tau_ref, o_ref,
+                 *, Wt: int, S: int, n_total: int, mode: str,
+                 flip: bool):
+    if mode == "plain":
+        # mask-free twin for pre-materialized weights (the reference
+        # path): the SAME tap loop, so fused and reference convs are
+        # instruction-identical (bit-equal f32 sums under FMA fusion)
+        wm = w_ref[...].astype(jnp.float32)                 # (Wt, bc)
+    else:
+        j = pl.program_id(1)
+        bc = w_ref.shape[-1]
+        m = _tile_mask_vals(s_ref[...], seed_ref[0], off_ref[0],
+                            tau_ref[0], row0=jnp.uint32(0),
+                            col0=j * jnp.uint32(bc),
+                            n_total=n_total, mode=mode)
+        wm = jnp.where(m, w_ref[...].astype(jnp.float32), 0.0)
+    acc = None
+    for t in range(Wt):
+        row = Wt - 1 - t if flip else t
+        term = x_ref[0, t:t + S, :].astype(jnp.float32) \
+            * wm[row][None, :]
+        acc = term if acc is None else acc + term
+    o_ref[...] = acc.astype(o_ref.dtype)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "n_logical",
+                                             "interpret", "mode",
+                                             "flip"))
+def masked_conv1d(x_pad: jax.Array, w: jax.Array, s: jax.Array,
+                  seed: jax.Array, off: jax.Array = 0, *, bc: int = 128,
+                  n_logical: int | None = None, interpret: bool = False,
+                  mode: str = "sample", tau: jax.Array = 0.5,
+                  flip: bool = False) -> jax.Array:
+    """x_pad: (B, S + W - 1, C) causally padded input; w, s: (W, C)
+    depthwise kernel/scores.  Returns f32 (B, S, C):
+    y[b,s,c] = Σ_t x_pad[b,s+t,c] · (m ⊙ w)[t,c], the mask drawn at
+    flat index off + t*n_total + c (the leaf's uplink stream).
+    `flip=True` reverses the tap order (wm[W-1-t] at shift t) — the
+    dL/dx correlation of the causal conv, same mask."""
+    B, Sp, C = x_pad.shape
+    Wt, C2 = w.shape
+    assert C == C2 and s.shape == (Wt, C)
+    S = Sp - Wt + 1
+    n_total = C if n_logical is None else n_logical
+    bc_ = min(bc, C)
+    assert C % bc_ == 0, (C, bc_)
+    kernel = functools.partial(_conv_kernel, Wt=Wt, S=S,
+                               n_total=n_total, mode=mode, flip=flip)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, C // bc_),
+        in_specs=[
+            pl.BlockSpec((1, Sp, bc_), lambda b, j: (b, 0, j)),
+            pl.BlockSpec((Wt, bc_), lambda b, j: (0, j)),
+            pl.BlockSpec((Wt, bc_), lambda b, j: (0, j)),
+        ] + [pl.BlockSpec((1,), lambda b, j: (0,))] * 3,
+        out_specs=pl.BlockSpec((1, S, bc_), lambda b, j: (b, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((B, S, C), jnp.float32),
+        interpret=interpret,
+    )(x_pad, w, s, *_scalar_operands(seed, off, tau))
+
+
+def _conv_ds_kernel(x_ref, g_ref, w_ref, s_ref, o_ref, acc_ref, *,
+                    Wt: int, S: int, nb: int, epilogue: str):
+    b_i = pl.program_id(1)
+
+    @pl.when(b_i == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    gv = g_ref[0].astype(jnp.float32)                  # (S, bc)
+    acc_ref[...] += jnp.concatenate(
+        [jnp.sum(x_ref[0, t:t + S, :].astype(jnp.float32) * gv,
+                 axis=0, keepdims=True) for t in range(Wt)], axis=0)
+
+    @pl.when(b_i == nb - 1)
+    def _():
+        if epilogue == "dw":
+            # raw xᵀ★g: the weight gradient of the PLAIN conv (float
+            # baselines training the materialized kernel directly)
+            o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        else:
+            sig = jax.nn.sigmoid(s_ref[...].astype(jnp.float32))
+            o_ref[...] = (acc_ref[...] * w_ref[...].astype(jnp.float32)
+                          * sig * (1.0 - sig)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "interpret",
+                                             "epilogue"))
+def masked_conv1d_ds(x_pad: jax.Array, g: jax.Array, w: jax.Array,
+                     s: jax.Array, *, bc: int = 128,
+                     interpret: bool = False,
+                     epilogue: str = "ste") -> jax.Array:
+    """x_pad: (B, S + W - 1, C); g: (B, S, C) cotangent; w, s: (W, C).
+    Returns the STE score gradient
+    ds[t,c] = (Σ_{b,s} x_pad[b,s+t,c] g[b,s,c]) ⊙ w ⊙ σ(s)(1−σ(s)) :
+    (W, C) in s.dtype — the xᵀg correlation and the sigmoid epilogue
+    never leave VMEM.  `epilogue="dw"` skips the STE epilogue and
+    returns the raw correlation (the plain conv's weight gradient)."""
+    B, Sp, C = x_pad.shape
+    Wt, C2 = w.shape
+    S = Sp - Wt + 1
+    assert C == C2 and s.shape == (Wt, C) and g.shape == (B, S, C)
+    bc_ = min(bc, C)
+    assert C % bc_ == 0, (C, bc_)
+    kernel = functools.partial(_conv_ds_kernel, Wt=Wt, S=S, nb=B,
+                               epilogue=epilogue)
+    return pl.pallas_call(
+        kernel,
+        grid=(C // bc_, B),
+        in_specs=[
+            pl.BlockSpec((1, Sp, bc_), lambda j, b: (b, 0, j)),
+            pl.BlockSpec((1, S, bc_), lambda j, b: (b, 0, j)),
+            pl.BlockSpec((Wt, bc_), lambda j, b: (0, j)),
+            pl.BlockSpec((Wt, bc_), lambda j, b: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((Wt, bc_), lambda j, b: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((Wt, C), s.dtype),
+        scratch_shapes=[pltpu.VMEM((Wt, bc_), jnp.float32)],
+        interpret=interpret,
+    )(x_pad, g, w, s)

@@ -19,6 +19,17 @@ uplink share one stream (docs/DESIGN.md §3).
 `masked_dense_threshold` is the deterministic FedMask twin: the mask is
 m = 1[sigmoid(s) > tau] (no hash), same STE backward, same fusion.
 
+`masked_dense_grouped` (+ `_threshold`) is the stacked-leaf twin for
+(E, K, N) MoE expert weights: ONE grouped pallas_call per projection
+covers all E experts with per-group seed/off stream coordinates
+(offs[e] = e*K*N under the `MaskedLeaf.build` convention), so the
+stacked m⊙w never exists in HBM either.  `masked_conv1d`
+(+ `_threshold`) covers the depthwise causal (W, C) conv kernel leaves,
+and `conv1d_plain` is its mask-free twin for pre-materialized weights —
+the reference path runs it so fused and materialized convs are
+instruction-identical (bit-equal), and neither builds the old
+(B, S, W, C) stacked-views tensor.
+
 MXU-unaligned shapes are zero-padded up to lane (128) alignment before
 the kernel launch instead of silently falling back to the jnp reference:
 the hash is indexed by the LOGICAL column count (`n_logical`), so the
@@ -213,3 +224,268 @@ def masked_dense_threshold(x, w, s, tau=0.5):
     through the threshold exactly as through the Bernoulli sample).
     """
     return _masked_dense_thr(x, w, s, jnp.asarray(tau, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Grouped masked dense: stacked (E, K, N) weights, one kernel launch
+# ---------------------------------------------------------------------------
+
+
+def _pad3(a: jax.Array, m: int, k: int) -> jax.Array:
+    pm, pk = m - a.shape[1], k - a.shape[2]
+    if pm == 0 and pk == 0:
+        return a
+    return jnp.pad(a, ((0, 0), (0, pm), (0, pk)))
+
+
+def _grp_fused_fwd(x, w, s, seeds, offs, tau, mode):
+    shape = x.shape
+    E = shape[0]
+    x3 = x.reshape(E, -1, shape[-1])
+    M = x3.shape[1]
+    K, N = w.shape[-2:]
+    Mp, Kp, Np = (_round_up(M, 128), _round_up(K, 128),
+                  _round_up(N, 128))
+    y = _mm.masked_matmul_grouped(
+        _pad3(x3, Mp, Kp), _pad3(w, Kp, Np), _pad3(s, Kp, Np), seeds,
+        offs, bm=128, bn=_block_for(Np), bk=_block_for(Kp), n_logical=N,
+        interpret=_use_interpret(), mode=mode, tau=tau)[:, :M, :N]
+    return y.reshape(shape[:-1] + (N,))
+
+
+def _grp_fused_bwd(x, w, s, seeds, offs, tau, mode, g):
+    E = x.shape[0]
+    K, N = w.shape[-2:]
+    if os.environ.get("REPRO_REF_BWD", "") == "1":
+        x3 = x.reshape(E, -1, K)
+        g3 = g.reshape(E, -1, N)
+        dx, ds = ref.masked_dense_grouped_bwd(x3, w, s, seeds, offs, g3,
+                                              mode, tau)
+        return dx.reshape(x.shape).astype(x.dtype), ds
+    x3 = x.reshape(E, -1, K)
+    g3 = g.reshape(E, -1, N)
+    M = x3.shape[1]
+    Mp, Kp, Np = (_round_up(M, 128), _round_up(K, 128),
+                  _round_up(N, 128))
+    bn, bk = _block_for(Np), _block_for(Kp)
+    interp = _use_interpret()
+    xp, gp = _pad3(x3, Mp, Kp), _pad3(g3, Mp, Np)
+    wp, sp = _pad3(w, Kp, Np), _pad3(s, Kp, Np)
+    dx = _mm.masked_matmul_grouped_dx(
+        gp, wp, sp, seeds, offs, bm=128, bn=bn, bk=bk, n_logical=N,
+        interpret=interp, mode=mode, tau=tau)[:, :M, :K]
+    ds = _mm.masked_matmul_grouped_ds(
+        xp, gp, wp, sp, bm=128, bn=bn, bk=bk, interpret=interp)[:, :K, :N]
+    return (dx.reshape(x.shape).astype(x.dtype), ds.astype(s.dtype))
+
+
+@jax.custom_vjp
+def _masked_dense_grouped(x, w, s, seeds, offs):
+    return _grp_fused_fwd(x, w, s, seeds, offs, 0.5, "sample")
+
+
+def _mdg_fwd(x, w, s, seeds, offs):
+    return (_masked_dense_grouped(x, w, s, seeds, offs),
+            (x, w, s, seeds, offs))
+
+
+def _mdg_bwd(res, g):
+    x, w, s, seeds, offs = res
+    dx, ds = _grp_fused_bwd(x, w, s, seeds, offs, 0.5, "sample", g)
+    return dx, None, ds, None, None
+
+
+_masked_dense_grouped.defvjp(_mdg_fwd, _mdg_bwd)
+
+
+@jax.custom_vjp
+def _masked_dense_grouped_thr(x, w, s, tau):
+    E = x.shape[0]
+    zeros = jnp.zeros((E,), jnp.uint32)
+    return _grp_fused_fwd(x, w, s, zeros, zeros, tau, "threshold")
+
+
+def _mdgt_fwd(x, w, s, tau):
+    return _masked_dense_grouped_thr(x, w, s, tau), (x, w, s, tau)
+
+
+def _mdgt_bwd(res, g):
+    x, w, s, tau = res
+    E = x.shape[0]
+    zeros = jnp.zeros((E,), jnp.uint32)
+    dx, ds = _grp_fused_bwd(x, w, s, zeros, zeros, tau, "threshold", g)
+    return dx, None, ds, None
+
+
+_masked_dense_grouped_thr.defvjp(_mdgt_fwd, _mdgt_bwd)
+
+
+def masked_dense_grouped(x, w, s, seeds, offs=None):
+    """y[e] = x[e] @ (bern(sigmoid(s[e]); seeds[e], offs[e]) * w[e]) for
+    stacked (E, K, N) weights, STE backward.  x: (E, ..., K).
+
+    One `pallas_call` covers all E groups (the expert index rides the
+    grid) with per-group `seeds`/`offs` stream coordinates: under the
+    `MaskedLeaf.build` convention (offs[e] = e*K*N, one seed) the E
+    masks together are exactly the stacked leaf's flat
+    `sample_and_pack` stream.  MXU-unaligned M/K/N are zero-padded with
+    the hash indexed by the logical column count, as in `masked_dense`.
+    """
+    E = x.shape[0]
+    seeds = jnp.broadcast_to(jnp.asarray(seeds, jnp.uint32), (E,))
+    if offs is None:
+        K, N = w.shape[-2:]
+        offs = jnp.arange(E, dtype=jnp.uint32) * jnp.uint32(K * N)
+    offs = jnp.broadcast_to(jnp.asarray(offs, jnp.uint32), (E,))
+    return _masked_dense_grouped(x, w, s, seeds, offs)
+
+
+def masked_dense_grouped_threshold(x, w, s, tau=0.5):
+    """y[e] = x[e] @ (1[sigmoid(s[e]) > tau] * w[e]) for stacked
+    (E, K, N) weights, STE backward (FedMask mode; no hash stream)."""
+    return _masked_dense_grouped_thr(x, w, s,
+                                     jnp.asarray(tau, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Masked depthwise causal conv: the (W, C) kernel leaf, fully fused
+# ---------------------------------------------------------------------------
+
+
+def _conv_pads(w):
+    Wt, C = w.shape
+    Cp = _round_up(C, 128)
+    return Wt, C, Cp, min(_block_for(Cp), 128)
+
+
+def _conv_fused_fwd(x, w, s, seed, off, tau, mode):
+    B, S, C = x.shape
+    Wt, _, Cp, bc = _conv_pads(w)
+    xp = jnp.pad(x, ((0, 0), (Wt - 1, 0), (0, Cp - C)))
+    wp, sp = _pad2(w, Wt, Cp), _pad2(s, Wt, Cp)
+    y = _mm.masked_conv1d(xp, wp, sp, seed, off, bc=bc, n_logical=C,
+                          interpret=_use_interpret(), mode=mode,
+                          tau=tau)
+    return y[:, :, :C]
+
+
+def _conv_fused_bwd(x, w, s, seed, off, tau, mode, g):
+    if os.environ.get("REPRO_REF_BWD", "") == "1":
+        return ref.masked_conv1d_bwd(x, w, s, seed, g, off, mode, tau)
+    B, S, C = x.shape
+    Wt, _, Cp, bc = _conv_pads(w)
+    interp = _use_interpret()
+    wp, sp = _pad2(w, Wt, Cp), _pad2(s, Wt, Cp)
+    # dL/dx: correlation of g with the flipped masked taps — the same
+    # kernel with trailing (instead of leading) zero padding
+    gp = jnp.pad(g, ((0, 0), (0, Wt - 1), (0, Cp - C)))
+    dx = _mm.masked_conv1d(gp, wp, sp, seed, off, bc=bc, n_logical=C,
+                           interpret=interp, mode=mode, tau=tau,
+                           flip=True)[:, :, :C]
+    xp = jnp.pad(x, ((0, 0), (Wt - 1, 0), (0, Cp - C)))
+    gp2 = jnp.pad(g, ((0, 0), (0, 0), (0, Cp - C)))
+    ds = _mm.masked_conv1d_ds(xp, gp2, wp, sp, bc=bc,
+                              interpret=interp)[:, :C]
+    return dx.astype(x.dtype), ds.astype(s.dtype)
+
+
+@jax.custom_vjp
+def _masked_conv1d(x, w, s, seed, off):
+    return _conv_fused_fwd(x, w, s, seed, off, 0.5, "sample")
+
+
+def _mc_fwd(x, w, s, seed, off):
+    return _masked_conv1d(x, w, s, seed, off), (x, w, s, seed, off)
+
+
+def _mc_bwd(res, g):
+    x, w, s, seed, off = res
+    dx, ds = _conv_fused_bwd(x, w, s, seed, off, 0.5, "sample", g)
+    return dx, None, ds, None, None
+
+
+_masked_conv1d.defvjp(_mc_fwd, _mc_bwd)
+
+
+@jax.custom_vjp
+def _masked_conv1d_thr(x, w, s, tau):
+    return _conv_fused_fwd(x, w, s, 0, 0, tau, "threshold")
+
+
+def _mct_fwd(x, w, s, tau):
+    return _masked_conv1d_thr(x, w, s, tau), (x, w, s, tau)
+
+
+def _mct_bwd(res, g):
+    x, w, s, tau = res
+    dx, ds = _conv_fused_bwd(x, w, s, 0, 0, tau, "threshold", g)
+    return dx, None, ds, None
+
+
+_masked_conv1d_thr.defvjp(_mct_fwd, _mct_bwd)
+
+
+def masked_conv1d(x, w, s, seed, off=0):
+    """Depthwise causal conv through the masked (W, C) kernel leaf:
+    y[b,s,c] = Σ_t x[b, s+t-(W-1), c] · (m ⊙ w)[t,c], STE backward.
+    x: (B, S, C); returns f32 (B, S, C) (bias/cast stay with the
+    caller).  The mask is drawn at flat index off + t*C + c — the
+    leaf's uplink `sample_and_pack` stream — and is regenerated
+    per-tile on both passes; m⊙w never exists in HBM."""
+    return _masked_conv1d(x, w, s, jnp.asarray(seed, jnp.uint32),
+                          jnp.asarray(off, jnp.uint32))
+
+
+def masked_conv1d_threshold(x, w, s, tau=0.5):
+    """Deterministic FedMask twin of `masked_conv1d`:
+    m = 1[sigmoid(s) > tau], same fused kernels and STE backward."""
+    return _masked_conv1d_thr(x, w, s, jnp.asarray(tau, jnp.float32))
+
+
+@jax.custom_vjp
+def conv1d_plain(x, w):
+    """Depthwise causal conv with a PLAIN (pre-materialized) (W, C)
+    kernel, through the same Pallas tap loop as `masked_conv1d` — so
+    the reference path (effective params) and the fused masked path
+    are instruction-identical and their f32 sums bit-equal.  Replaces
+    the old (B, S, W, C) stacked-shifted-views einsum (a W× activation
+    blowup).  x: (B, S, C); returns f32 (B, S, C).
+
+    Float baselines also land here, which on non-TPU backends means
+    interpret-mode emulation — a deliberate trade: depthwise convs are
+    a sliver of model FLOPs (W ≈ 4 taps vs d² matmuls), non-TPU runs
+    are smoke-scale, and the payoff is that the fused-vs-materialized
+    path equivalence stays bit-exact on every backend."""
+    B, S, C = x.shape
+    Wt, _, Cp, bc = _conv_pads(w)
+    xp = jnp.pad(x, ((0, 0), (Wt - 1, 0), (0, Cp - C)))
+    wp = _pad2(w, Wt, Cp)
+    # wp doubles as the (unread) score operand: plain mode never
+    # touches s_ref, so no extra weight-sized tensor is shipped
+    return _mm.masked_conv1d(xp, wp, wp, 0, 0, bc=bc, n_logical=C,
+                             interpret=_use_interpret(),
+                             mode="plain")[:, :, :C]
+
+
+def _cp_fwd(x, w):
+    return conv1d_plain(x, w), (x, w)
+
+
+def _cp_bwd(res, g):
+    x, w = res
+    B, S, C = x.shape
+    Wt, _, Cp, bc = _conv_pads(w)
+    interp = _use_interpret()
+    wp = _pad2(w, Wt, Cp)
+    gp = jnp.pad(g, ((0, 0), (0, Wt - 1), (0, Cp - C)))
+    dx = _mm.masked_conv1d(gp, wp, wp, 0, 0, bc=bc, n_logical=C,
+                           interpret=interp, mode="plain",
+                           flip=True)[:, :, :C]
+    xp = jnp.pad(x, ((0, 0), (Wt - 1, 0), (0, Cp - C)))
+    gp2 = jnp.pad(g, ((0, 0), (0, 0), (0, Cp - C)))
+    dw = _mm.masked_conv1d_ds(xp, gp2, wp, wp, bc=bc, interpret=interp,
+                              epilogue="dw")[:, :C]
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+conv1d_plain.defvjp(_cp_fwd, _cp_bwd)

@@ -74,6 +74,92 @@ def masked_dense_bwd(x, w, s, seed, g, off=0):
     return dx, ds
 
 
+def _grouped_mask(s, seeds, offs, mode="sample", tau=0.5):
+    if mode == "threshold":
+        return jax.vmap(lambda se: threshold_mask(se, tau))(s)
+    return jax.vmap(sample_mask)(s, jnp.asarray(seeds, jnp.uint32),
+                                 jnp.asarray(offs, jnp.uint32))
+
+
+def masked_matmul_grouped(x, w, s, seeds, offs, mode="sample", tau=0.5):
+    """Oracle for kernels.masked_matmul_grouped: y[e] = x[e] @ (m[e]⊙w[e])
+    with group e's mask drawn at flat offset offs[e] of seeds[e]'s
+    stream (offs[e] = e*K*N makes the E masks one stacked-leaf stream)."""
+    wm = _grouped_mask(s, seeds, offs, mode, tau).astype(jnp.float32) \
+        * w.astype(jnp.float32)
+    return jnp.einsum("emk,ekn->emn", x.astype(jnp.float32),
+                      wm).astype(x.dtype)
+
+
+def masked_matmul_grouped_dx(g, w, s, seeds, offs, mode="sample",
+                             tau=0.5):
+    """Oracle for kernels.masked_matmul_grouped_dx:
+    dx[e] = g[e] @ (m[e] ⊙ w[e])ᵀ, same per-group streams."""
+    wm = _grouped_mask(s, seeds, offs, mode, tau).astype(jnp.float32) \
+        * w.astype(jnp.float32)
+    return jnp.einsum("emn,ekn->emk", g.astype(jnp.float32),
+                      wm).astype(g.dtype)
+
+
+def masked_matmul_grouped_ds(x, g, w, s):
+    """Oracle for kernels.masked_matmul_grouped_ds:
+    ds[e] = (x[e]ᵀ@g[e]) ⊙ w[e] ⊙ σ(s[e])(1−σ(s[e]))."""
+    xg = jnp.einsum("emk,emn->ekn", x.astype(jnp.float32),
+                    g.astype(jnp.float32))
+    sig = jax.nn.sigmoid(s.astype(jnp.float32))
+    return (xg * w.astype(jnp.float32) * sig * (1.0 - sig)).astype(
+        s.dtype)
+
+
+def masked_dense_grouped_bwd(x, w, s, seeds, offs, g, mode="sample",
+                             tau=0.5):
+    """The naive grouped STE backward (REPRO_REF_BWD=1 and the
+    benchmark baseline): materializes the stacked mask, m⊙w and xᵀ@g
+    at full (E, K, N) size."""
+    dx = masked_matmul_grouped_dx(g, w, s, seeds, offs, mode, tau)
+    ds = masked_matmul_grouped_ds(x, g, w, s)
+    return dx, ds
+
+
+def masked_conv1d(x, w, s, seed, off=0, mode="sample", tau=0.5):
+    """Oracle for kernels.masked_conv1d: depthwise causal conv with the
+    hash-stream masked (W, C) kernel, accumulated tap-by-tap in the
+    SAME order as the Pallas kernel (bit-identical f32 sums).
+    x: (B, S, C) unpadded; returns f32 (B, S, C)."""
+    Wt = w.shape[0]
+    S = x.shape[1]
+    m = (threshold_mask(s, tau) if mode == "threshold"
+         else sample_mask(s, seed, off))
+    wm = (m.astype(w.dtype) * w).astype(jnp.float32)
+    xp = jnp.pad(x, ((0, 0), (Wt - 1, 0), (0, 0)))
+    out = xp[:, 0:S].astype(jnp.float32) * wm[0]
+    for t in range(1, Wt):
+        out = out + xp[:, t:t + S].astype(jnp.float32) * wm[t]
+    return out
+
+
+def masked_conv1d_bwd(x, w, s, seed, g, off=0, mode="sample", tau=0.5):
+    """Naive STE backward of the masked depthwise causal conv
+    (REPRO_REF_BWD=1 escape hatch): dx is the flipped-tap correlation
+    of g with m⊙w, ds = (xᵀ★g) ⊙ w ⊙ σ'(s) at kernel size."""
+    Wt = w.shape[0]
+    S = x.shape[1]
+    m = (threshold_mask(s, tau) if mode == "threshold"
+         else sample_mask(s, seed, off))
+    wm = (m.astype(w.dtype) * w).astype(jnp.float32)
+    gp = jnp.pad(g, ((0, 0), (0, Wt - 1), (0, 0))).astype(jnp.float32)
+    dx = gp[:, 0:S] * wm[Wt - 1]
+    for u in range(1, Wt):
+        dx = dx + gp[:, u:u + S] * wm[Wt - 1 - u]
+    xp = jnp.pad(x, ((0, 0), (Wt - 1, 0), (0, 0))).astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    xg = jnp.stack([jnp.sum(xp[:, t:t + S] * gf, axis=(0, 1))
+                    for t in range(Wt)])
+    sig = jax.nn.sigmoid(s.astype(jnp.float32))
+    ds = (xg * w.astype(jnp.float32) * sig * (1.0 - sig)).astype(s.dtype)
+    return dx.astype(x.dtype), ds
+
+
 def sample_rows(s2, seeds):
     """(C, n) score rows + (C,) seeds -> (C, n) uint8 Bernoulli masks.
 

@@ -19,8 +19,11 @@ on "pod"; frozen weights have no cohort axis (same seed everywhere).
 
 train_step runs the FUSED masked-execution path by default: the model
 forward consumes `masking.MaskedLeaf` (w, s, seed) bundles and every
-maskable projection runs `ops.masked_dense` — the mask and the masked
-weights never exist in HBM on either pass (docs/DESIGN.md §3).
+maskable leaf runs its fused kernel — `ops.masked_dense` for 2-D
+projections, `ops.masked_dense_grouped` for stacked (E, K, N) MoE
+expert weights, `ops.masked_conv1d` for depthwise conv kernels — so
+the mask and the masked weights never exist in HBM on either pass,
+for ANY maskable leaf shape (docs/DESIGN.md §3).
 `REPRO_EFF_PATH=1` is the escape hatch: identical hash-stream masks,
 but materialized through `masking.hash_effective` (the pre-fusion
 reference semantics, for debugging/bisection).
@@ -169,8 +172,9 @@ def _eff_path() -> bool:
 def make_train_step(api, cfg: StepConfig):
     """One local mini-batch score update on the fused masked-execution
     path: the forward consumes a `masked_forward_tree` whose maskable
-    leaves run `ops.masked_dense` with scores as a first-class grad
-    argument (STE custom-vjp), per-leaf seeds derived from
+    leaves run the fused kernels (dense / grouped-expert / conv) with
+    scores as a first-class grad argument (STE custom-vjp), per-leaf
+    seeds derived from
     (cfg.seed, step, leaf, cohort) by the SAME `mask_stream_seed`
     convention the round uplink samples with."""
     def cohort_loss(scores, floats, weights, batch, tick, cohort):

@@ -6,11 +6,13 @@ accepts a params pytree whose maskable leaves are EITHER plain arrays
 `masking.sample_effective` / `masking.hash_effective` — the reference
 path) OR `masking.MaskedLeaf` (w, s, seed) bundles built by
 `masking.masked_forward_tree` — the fused execution path, where every
-maskable Dense/projection runs `ops.masked_dense` directly and the
+maskable leaf runs its fused kernel directly (`ops.masked_dense` for
+2-D projections, `ops.masked_dense_grouped` for stacked MoE expert
+weights, `ops.masked_conv1d` for depthwise conv kernels) and the
 Bernoulli mask never exists in HBM.  Model code never branches on the
-path: `layers.masked_dense_apply` / `layers.effective_weight` dispatch
-per leaf, so the same forward serves float baselines, masked training,
-and serving.
+path: the `layers.masked_*_apply` dispatchers decide per leaf, so the
+same forward serves float baselines, masked training, and serving
+(which freezes the tree once via `masking.freeze_for_decode`).
 """
 from __future__ import annotations
 

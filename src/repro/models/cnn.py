@@ -60,11 +60,10 @@ def forward(params, cfg: ConvConfig, images):
     """images: (B, H, W, C) -> logits (B, n_classes)."""
     x = images.astype(jnp.float32)
     for i, cp in enumerate(params["convs"]):
-        # (3, 3, cin, cout) conv kernels ride the materializing fallback
-        w_conv = L.effective_weight(cp["w_conv"])
-        x = jax.lax.conv_general_dilated(
-            x, w_conv.astype(jnp.float32), (1, 1), "SAME",
-            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        # (3, 3, cin, cout) kernels: MaskedLeaf -> one fused
+        # masked_dense per tap (off = tap_idx*ci*co slices of the
+        # leaf's hash stream), plain arrays -> lax conv
+        x = L.masked_conv2d_apply(x, cp["w_conv"])
         x = jax.nn.relu(x + cp["bias"])
         if i % 2 == 1:
             x = jax.lax.reduce_window(

@@ -6,14 +6,19 @@ Conventions:
     ("w_*"); norms/biases/routers carry "scale"/"bias"/"router" so the
     paper's technique skips them (docs/DESIGN.md §Arch-applicability).
   * every layer has init(key, cfg...) -> params and apply(params, x, ...).
-  * every maskable projection is consumed through `masked_dense_apply`
-    (2-D dense weights) or `effective_weight` (conv kernels, stacked
-    MoE experts).  A leaf may be a plain array (float training, or
-    effective params materialized by `masking.sample_effective` /
-    `masking.hash_effective`) OR a `masking.MaskedLeaf` (w, s, seed)
-    bundle, in which case the dense path runs the fused Pallas kernels
-    (`ops.masked_dense`) — no mask or masked-weight tensor ever exists
-    in HBM (docs/DESIGN.md §3).
+  * every maskable projection is consumed through a per-leaf dispatch:
+    `masked_dense_apply` (2-D dense weights), `masked_grouped_apply`
+    (stacked (E, K, N) MoE expert weights), `masked_conv1d_apply`
+    (depthwise (W, C) conv kernels) or `masked_conv2d_apply` (CNN
+    (kh, kw, ci, co) kernels).  A leaf may be a plain array (float
+    training, or effective params materialized by
+    `masking.sample_effective` / `masking.hash_effective`) OR a
+    `masking.MaskedLeaf` (w, s, seed) bundle, in which case the fused
+    Pallas kernels run — no mask or masked-weight tensor ever exists
+    in HBM for ANY maskable leaf shape (docs/DESIGN.md §3).
+    `effective_weight` (the materializing fallback) survives only on
+    the per-token decode path (`conv1d_step`), where
+    `masking.freeze_for_decode` materializes once per session anyway.
 """
 from __future__ import annotations
 
@@ -55,11 +60,78 @@ def masked_dense_apply(x: jax.Array, p) -> jax.Array:
     return x @ p
 
 
+def masked_grouped_apply(x: jax.Array, p) -> jax.Array:
+    """y[e] = x[e] @ w_eff[e] for a stacked (E, K, N) weight (MoE
+    expert einsums; x: (E, ..., K)).
+
+    Plain array: the batched einsum (float baselines, materialized
+    effective params).  MaskedLeaf: ONE grouped Pallas launch for all
+    E groups — per-group `seed`/`off` stream coordinates make each
+    expert's mask exactly its slice of the leaf's flat uplink stream,
+    and the stacked m⊙w never exists in HBM on either pass."""
+    if isinstance(p, MaskedLeaf):
+        if p.mode == "threshold":
+            return ops.masked_dense_grouped_threshold(x, p.w, p.s, p.tau)
+        return ops.masked_dense_grouped(x, p.w, p.s, p.seed, p.off)
+    shape = x.shape
+    y = jnp.einsum("ecd,edf->ecf", x.reshape(shape[0], -1, shape[-1]),
+                   p)
+    return y.reshape(shape[:-1] + (p.shape[-1],))
+
+
+def masked_conv1d_apply(x: jax.Array, p) -> jax.Array:
+    """Depthwise causal conv y[b,s,c] = Σ_t x[b,s+t-(W-1),c]·w_eff[t,c]
+    for a (W, C) kernel leaf, f32 output (bias/cast stay with the
+    caller).  Both branches run the SAME Pallas tap loop
+    (`ops.masked_conv1d` / `ops.conv1d_plain`), so fused and
+    materialized-reference convs are bit-identical — and neither
+    builds the old (B, S, W, C) stacked-views tensor."""
+    if isinstance(p, MaskedLeaf):
+        if p.mode == "threshold":
+            return ops.masked_conv1d_threshold(x, p.w, p.s, p.tau)
+        return ops.masked_conv1d(x, p.w, p.s, p.seed, p.off)
+    return ops.conv1d_plain(x, p)
+
+
+def masked_conv2d_apply(x: jax.Array, p) -> jax.Array:
+    """2-D SAME conv for a (kh, kw, ci, co) kernel leaf (the paper's
+    Conv4/6/10 CNNs).  x: (B, H, W, ci) -> (B, H, W, co).
+
+    Plain array: `lax.conv_general_dilated`.  MaskedLeaf: im2col ONCE
+    to (B·H·W, kh·kw·ci) and run ONE fused `ops.masked_dense` launch —
+    the (kh·kw·ci, co) row-major reshape of the leaf is contiguous
+    with its flat hash stream (idx = row·co + col == the leaf's flat
+    index), so the single launch at the leaf's base offset samples the
+    identical mask as the uplink `sample_and_pack` stream, m⊙w never
+    exists in HBM, and the activations are padded/read once rather
+    than once per tap."""
+    if not isinstance(p, MaskedLeaf):
+        return jax.lax.conv_general_dilated(
+            x, p.astype(x.dtype), (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    kh, kw, ci, co = p.w.shape
+    B, H, Wd, _ = x.shape
+    ph, pw = (kh - 1) // 2, (kw - 1) // 2
+    xp = jnp.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw),
+                     (0, 0)))
+    cols = jnp.concatenate(
+        [xp[:, dy:dy + H, dx:dx + Wd, :]
+         for dy in range(kh) for dx in range(kw)],
+        axis=-1).reshape(-1, kh * kw * ci)
+    blk = MaskedLeaf(p.w.reshape(kh * kw * ci, co),
+                     p.s.reshape(kh * kw * ci, co),
+                     p.seed[0, 0], p.off[0, 0], p.mode, p.tau)
+    return masked_dense_apply(cols, blk).reshape(B, H, Wd, co)
+
+
 def effective_weight(p) -> jax.Array:
-    """Effective weight tensor for consumers `masked_dense` cannot
-    express (depthwise convs, stacked MoE expert einsums): materializes
-    m * w from the SAME hash stream as the fused kernels (one
-    weight-sized temporary; see docs/DESIGN.md §3 fallback table)."""
+    """Effective weight tensor m * w from the SAME hash stream as the
+    fused kernels (one weight-sized temporary).
+
+    Since the grouped/conv kernels landed this survives ONLY on the
+    per-token decode path (`conv1d_step`) — decode sessions should
+    materialize once up front via `masking.freeze_for_decode`, making
+    this a no-op pass-through (docs/DESIGN.md §3)."""
     if isinstance(p, MaskedLeaf):
         return masking.materialize_leaf(p)
     return p
@@ -459,17 +531,20 @@ def moe_apply(p, x, n_experts, top_k, capacity_factor=1.25,
         * keep[..., None]                                    # (T,k,C)
     disp = jnp.einsum("tke,tkc->tec", onehot, pos_oh)        # (T,E,C)
     xe = jnp.einsum("tec,td->ecd", disp, xt.astype(jnp.float32))
-    xe = xe.astype(x.dtype)                                  # (E,C,D)
+    # xe stays f32 through the expert stack: the chain then carries NO
+    # intermediate bf16 rounding, so the fused (Pallas) and plain
+    # (einsum) branches of masked_grouped_apply are bit-identical —
+    # XLA's excess-precision pass would elide a bf16 round-trip on the
+    # einsum branch but not on a physical pallas output buffer
 
-    # stacked (E, ., .) expert weights: effective_weight materializes
-    # m*w for MaskedLeaf experts (per-expert blocks of the leaf's hash
-    # stream) — the einsum dispatch can't ride masked_dense directly
-    w_gate, w_up = effective_weight(p["w_gate"]), effective_weight(
-        p["w_up"])
-    w_down = effective_weight(p["w_down"])
-    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w_gate)) \
-        * jnp.einsum("ecd,edf->ecf", xe, w_up)
-    ye = jnp.einsum("ecf,efd->ecd", h, w_down)               # (E,C,D)
+    # stacked (E, ., .) expert weights ride the GROUPED fused kernels:
+    # one pallas_call per projection covers all E experts (per-expert
+    # seed/off = expert's slice of the leaf's hash stream), so the
+    # stacked m⊙w is never materialized — plain arrays (float
+    # baselines, REPRO_EFF_PATH) take the batched einsum
+    h = jax.nn.silu(masked_grouped_apply(xe, p["w_gate"])) \
+        * masked_grouped_apply(xe, p["w_up"])
+    ye = masked_grouped_apply(h, p["w_down"])                # (E,C,D)
 
     comb = jnp.einsum("tke,tkc,tk->tec", onehot, pos_oh,
                       gval.astype(jnp.float32))
@@ -498,19 +573,23 @@ def conv1d_init(key, width, channels, dtype=DEFAULT_DTYPE):
 
 
 def conv1d_causal(p, x):
-    """Depthwise causal conv. x: (B, S, C); kernel (W, C)."""
-    w_conv = effective_weight(p["w_conv"])
-    W = w_conv.shape[0]
-    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
-    # stack shifted views: (B, S, W, C)
-    views = jnp.stack([xp[:, i:i + x.shape[1]] for i in range(W)], axis=2)
-    out = jnp.einsum("bswc,wc->bsc", views.astype(jnp.float32),
-                     w_conv.astype(jnp.float32))
+    """Depthwise causal conv. x: (B, S, C); kernel (W, C).
+
+    Dispatches through `masked_conv1d_apply`: MaskedLeaf kernels run
+    the fused masked tap loop, plain kernels the mask-free twin — both
+    one Pallas pass, with no (B, S, W, C) stacked-views temporary."""
+    out = masked_conv1d_apply(x, p["w_conv"])
     return (out + p["bias_conv"]).astype(x.dtype)
 
 
 def conv1d_step(p, buf, x_t):
-    """Single decode step with rolling buffer. buf: (B, W-1, C)."""
+    """Single decode step with rolling buffer. buf: (B, W-1, C).
+
+    Decode-path note: `effective_weight` re-materializes m⊙w from a
+    MaskedLeaf EVERY step — decode sessions must freeze the mask once
+    at prefill (`masking.freeze_for_decode`, see `launch/serve.py`), so
+    steady-state decode sees a plain array here and does zero mask
+    resampling."""
     w_conv = effective_weight(p["w_conv"])
     W = w_conv.shape[0]
     full = jnp.concatenate([buf, x_t[:, None]], axis=1)  # (B, W, C)

@@ -12,6 +12,9 @@ import pytest
 from repro.kernels import ref, ops
 from repro.kernels.masked_matmul import (masked_matmul, masked_matmul_dx,
                                          masked_matmul_ds,
+                                         masked_matmul_grouped,
+                                         masked_matmul_grouped_dx,
+                                         masked_matmul_grouped_ds,
                                          sample_and_pack)
 from repro.kernels.bitpack import pack_bits, unpack_bits
 
@@ -342,6 +345,232 @@ def test_sample_and_pack_threshold_mode():
     m = jax.vmap(lambda wd: ref.unpack_bits(wd, 500))(wt)
     assert np.array_equal(np.asarray(m),
                           np.asarray(ref.threshold_rows(s2, 0.3)))
+
+
+# ---------------------------------------------------------------------------
+# Grouped kernels: stacked (E, K, N) expert leaves
+# ---------------------------------------------------------------------------
+
+
+def _grouped_operands(E, M, K, N, seed=7, dtype=jnp.float32):
+    key = jax.random.PRNGKey(E + M + K + N)
+    kx, kw, ks, kg = jax.random.split(key, 4)
+    x = jax.random.normal(kx, (E, M, K), jnp.float32).astype(dtype)
+    w = jax.random.normal(kw, (E, K, N), jnp.float32).astype(dtype)
+    s = jax.random.normal(ks, (E, K, N), jnp.float32)
+    g = jax.random.normal(kg, (E, M, N), jnp.float32).astype(dtype)
+    seeds = jnp.full((E,), seed, jnp.uint32)
+    offs = jnp.arange(E, dtype=jnp.uint32) * jnp.uint32(K * N)
+    return x, w, s, g, seeds, offs
+
+
+@pytest.mark.parametrize("shape", [(2, 128, 256, 128), (3, 128, 128, 256)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_masked_matmul_grouped_allclose(shape, dtype):
+    E, M, K, N = shape
+    x, w, s, g, seeds, offs = _grouped_operands(E, M, K, N, dtype=dtype)
+    y = masked_matmul_grouped(x, w, s, seeds, offs, interpret=True)
+    y_ref = ref.masked_matmul_grouped(x, w, s, seeds, offs)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(y_ref, np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+        atol=1e-2 if dtype == jnp.bfloat16 else 1e-4)
+    dx = masked_matmul_grouped_dx(g, w, s, seeds, offs, interpret=True)
+    dx_ref = ref.masked_matmul_grouped_dx(g, w, s, seeds, offs)
+    np.testing.assert_allclose(
+        np.asarray(dx, np.float32), np.asarray(dx_ref, np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+        atol=1e-2 if dtype == jnp.bfloat16 else 1e-4)
+    ds = masked_matmul_grouped_ds(x, g, w, s, interpret=True)
+    ds_ref = ref.masked_matmul_grouped_ds(x, g, w, s)
+    np.testing.assert_allclose(np.asarray(ds), np.asarray(ds_ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("blocks", [(128, 128), (256, 128), (128, 256)])
+def test_grouped_masks_bit_identical_across_tilings(blocks):
+    """Grouped twin of the tiling-invariance property: the forward and
+    dx kernels regenerate every group's mask bit-identically to
+    ref.sample_mask at that group's offset, for any block shape."""
+    bk, bn = blocks
+    E, K, N = 3, 256, 256
+    _, _, s, _, seeds, offs = _grouped_operands(E, K, K, N)
+    w1 = jnp.ones((E, K, N), jnp.float32)
+    eye = jnp.broadcast_to(jnp.eye(K, dtype=jnp.float32), (E, K, K))
+    m_fwd = masked_matmul_grouped(eye, w1, s, seeds, offs, bm=128,
+                                  bn=bn, bk=bk, interpret=True)
+    eyeN = jnp.broadcast_to(jnp.eye(N, dtype=jnp.float32), (E, N, N))
+    m_dx = masked_matmul_grouped_dx(eyeN, w1, s, seeds, offs, bm=128,
+                                    bn=bn, bk=bk, interpret=True)
+    for e in range(E):
+        m_ref = ref.sample_mask(s[e], 7, e * K * N).astype(np.float32)
+        assert np.array_equal(np.asarray(m_fwd[e]), m_ref), (e, blocks)
+        assert np.array_equal(np.asarray(m_dx[e]).T, m_ref), (e, blocks)
+
+
+def test_grouped_offsets_equal_uplink_stream():
+    """THE stacked-leaf identity for experts: under offs[e] = e*K*N and
+    one seed, the E per-expert kernel masks are exactly the bits
+    `sample_and_pack` packs for the flat (E*K*N,) leaf stream."""
+    E, K, N = 4, 24, 56
+    ss = jax.random.normal(jax.random.PRNGKey(3), (E, K, N), jnp.float32)
+    words = ref.sample_and_pack(ss.reshape(1, -1),
+                                jnp.asarray([31], jnp.uint32))
+    flat = ref.unpack_bits(words[0], E * K * N).reshape(E, K, N)
+    eye = jnp.broadcast_to(jnp.eye(K, dtype=jnp.float32), (E, K, K))
+    m = ops.masked_dense_grouped(eye, jnp.ones((E, K, N), jnp.float32),
+                                 ss, 31)
+    assert np.array_equal(np.asarray(m), np.asarray(flat, np.float32))
+
+
+@pytest.mark.parametrize("shape", [(2, 16, 64, 32), (3, 20, 100, 60)])
+def test_masked_dense_grouped_grads_match_ref(shape):
+    """jax.grad through the grouped custom-vjp matches the naive jnp
+    grouped STE backward — including MXU-unaligned shapes via
+    padding."""
+    E, M, K, N = shape
+    x, w, s, g, seeds, offs = _grouped_operands(E, M, K, N, seed=13)
+
+    def loss(x, s):
+        return jnp.sum(ops.masked_dense_grouped(x, w, s, 13, offs) ** 2)
+
+    gx, gs = jax.grad(loss, argnums=(0, 1))(x, s)
+    y_ref = ref.masked_matmul_grouped(x, w, s, seeds, offs)
+    dx_ref, ds_ref = ref.masked_dense_grouped_bwd(x, w, s, seeds, offs,
+                                                  2.0 * y_ref)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(dx_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(ds_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_masked_dense_grouped_threshold_matches_eff():
+    """Grouped FedMask mode: threshold masks through the grouped
+    kernel equal the materialized threshold reference."""
+    E, M, K, N = 2, 12, 40, 24
+    x, w, s, _, _, _ = _grouped_operands(E, M, K, N)
+    tau = 0.4
+    y = ops.masked_dense_grouped_threshold(x, w, s, tau)
+    eff = jax.vmap(lambda se, we: ref.threshold_mask(se, tau).astype(
+        jnp.float32) * we)(s, w)
+    y_ref = jnp.einsum("emk,ekn->emn", x, eff)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+    def loss(s):
+        return jnp.sum(ops.masked_dense_grouped_threshold(x, w, s, tau)
+                       ** 2)
+
+    gs = jax.grad(loss)(s)
+    assert gs.shape == s.shape and bool(jnp.all(jnp.isfinite(gs)))
+
+
+# ---------------------------------------------------------------------------
+# Fused depthwise causal conv: the (W, C) kernel leaf
+# ---------------------------------------------------------------------------
+
+
+def _conv_operands(B, S, C, Wt=4, dtype=jnp.float32):
+    key = jax.random.PRNGKey(B + S + C)
+    kx, kw, ks = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (B, S, C), jnp.float32).astype(dtype)
+    w = jax.random.normal(kw, (Wt, C), jnp.float32).astype(dtype)
+    s = jax.random.normal(ks, (Wt, C), jnp.float32)
+    return x, w, s
+
+
+@pytest.mark.parametrize("C", [128, 96, 70])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_masked_conv1d_matches_ref(C, dtype):
+    """The fused conv kernel equals the jnp tap-loop oracle (aligned
+    and channel-padded launches; the hash stays indexed by the logical
+    channel count).  Tolerance-level only: XLA may fuse the oracle's
+    mul-add chain into FMAs — the BIT-level invariant of the model
+    paths is kernel-vs-kernel (next test)."""
+    x, w, s = _conv_operands(2, 16, C, dtype=dtype)
+    y = ops.masked_conv1d(x, w, s, 31, 5)
+    y_ref = ref.masked_conv1d(x, w, s, 31, 5)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_masked_conv1d_equals_plain_on_materialized_weight():
+    """Fused masked conv == the mask-free plain-conv kernel fed the
+    materialized m⊙w — the instruction-identity that makes the fused
+    and reference model paths bit-equal."""
+    for dtype in DTYPES:
+        x, w, s = _conv_operands(2, 12, 96, dtype=dtype)
+        m = ref.sample_mask(s, 9, 77)
+        weff = m.astype(w.dtype) * w
+        y_fused = ops.masked_conv1d(x, w, s, 9, 77)
+        y_plain = ops.conv1d_plain(x, weff)
+        assert np.array_equal(np.asarray(y_fused), np.asarray(y_plain))
+
+
+def test_masked_conv1d_grads_match_ref():
+    x, w, s = _conv_operands(3, 10, 70)
+
+    def loss(x, s):
+        return jnp.sum(ops.masked_conv1d(x, w, s, 31, 5) ** 2)
+
+    gx, gs = jax.grad(loss, argnums=(0, 1))(x, s)
+    y_ref = ref.masked_conv1d(x, w, s, 31, 5)
+    dx_ref, ds_ref = ref.masked_conv1d_bwd(x, w, s, 31, 2.0 * y_ref, 5)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(dx_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(ds_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_masked_conv1d_stream_matches_sample_and_pack():
+    """The conv leaf's kernel mask is its uplink stream: identity-probe
+    the (W, C) mask via extreme weights and compare against the packed
+    flat stream."""
+    Wt, C = 4, 56
+    s = jax.random.normal(jax.random.PRNGKey(2), (Wt, C), jnp.float32)
+    words = ref.sample_and_pack(s.reshape(1, -1),
+                                jnp.asarray([19], jnp.uint32))
+    flat = ref.unpack_bits(words[0], Wt * C).reshape(Wt, C)
+    # an impulse at position t makes y[·, W-1, c] = (m ⊙ 1)[t, c]:
+    # at output position W-1 the window covers x[0..W-1] tap-aligned
+    x = jnp.zeros((Wt, Wt, C), jnp.float32)
+    for t in range(Wt):
+        x = x.at[t, t].set(1.0)
+    y = ops.masked_conv1d(x, jnp.ones((Wt, C), jnp.float32), s, 19, 0)
+    got = np.stack([np.asarray(y[t, Wt - 1]) for t in range(Wt)])
+    assert np.array_equal(got, np.asarray(flat, np.float32))
+
+
+def test_conv1d_plain_grads_match_views_einsum():
+    """The plain-conv custom-vjp (float baselines) matches autodiff
+    through the old stacked-views einsum formulation."""
+    B, S, C, Wt = 2, 12, 40, 4
+    x, w, _ = _conv_operands(B, S, C, Wt)
+
+    def loss_k(x, w):
+        return jnp.sum(ops.conv1d_plain(x, w) ** 2)
+
+    def loss_ref(x, w):
+        xp = jnp.pad(x, ((0, 0), (Wt - 1, 0), (0, 0)))
+        views = jnp.stack([xp[:, i:i + S] for i in range(Wt)], axis=2)
+        out = jnp.einsum("bswc,wc->bsc", views.astype(jnp.float32),
+                         w.astype(jnp.float32))
+        return jnp.sum(out ** 2)
+
+    g1 = jax.grad(loss_k, argnums=(0, 1))(x, w)
+    g2 = jax.grad(loss_ref, argnums=(0, 1))(x, w)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_masked_conv1d_threshold_mode():
+    x, w, s = _conv_operands(2, 8, 64)
+    tau = 0.35
+    y = ops.masked_conv1d_threshold(x, w, s, tau)
+    weff = ref.threshold_mask(s, tau).astype(jnp.float32) * w
+    y_ref = ops.conv1d_plain(x, weff)
+    assert np.array_equal(np.asarray(y), np.asarray(y_ref))
 
 
 def test_use_interpret_cached_and_forceable(monkeypatch):

@@ -89,3 +89,72 @@ def test_masked_dense_grad_matches_ref_property(seed, shape):
                                rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(np.asarray(gs), np.asarray(ds_ref),
                                rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 2 ** 16),
+       st.sampled_from([128, 256]), st.sampled_from([128, 256]))
+@settings(max_examples=8, deadline=None)
+def test_grouped_masks_bit_identical_across_tilings_property(
+        seed, bk, bn):
+    """Grouped twin of the tiling-invariance property: every group's
+    forward/dx kernel mask equals ref.sample_mask at that group's flat
+    offset for ANY (seed, tiling) pair."""
+    from repro.kernels.masked_matmul import (masked_matmul_grouped,
+                                             masked_matmul_grouped_dx)
+    E, K, N = 2, 256, 256
+    s = jax.random.normal(jax.random.PRNGKey(seed % 9973), (E, K, N),
+                          jnp.float32)
+    seeds = jnp.full((E,), seed, jnp.uint32)
+    offs = jnp.arange(E, dtype=jnp.uint32) * jnp.uint32(K * N)
+    w1 = jnp.ones((E, K, N), jnp.float32)
+    eye = jnp.broadcast_to(jnp.eye(K, dtype=jnp.float32), (E, K, K))
+    m_fwd = masked_matmul_grouped(eye, w1, s, seeds, offs, bm=128,
+                                  bn=bn, bk=bk, interpret=True)
+    m_dx = masked_matmul_grouped_dx(eye, w1, s, seeds, offs, bm=128,
+                                    bn=bn, bk=bk, interpret=True)
+    for e in range(E):
+        m_ref = ref.sample_mask(s[e], seed, e * K * N).astype(
+            np.float32)
+        assert np.array_equal(np.asarray(m_fwd[e]), m_ref)
+        assert np.array_equal(np.asarray(m_dx[e]).T, m_ref)
+
+
+@given(st.integers(0, 2 ** 16), st.integers(1, 4),
+       st.sampled_from([(8, 24), (24, 56), (16, 130)]))
+@settings(max_examples=10, deadline=None)
+def test_grouped_offsets_equal_uplink_stream_property(seed, E, kn):
+    """Per-expert offset identity: the E grouped-kernel masks under
+    offs[e] = e*K*N are exactly the stacked leaf's flat
+    `sample_and_pack` stream, for any (seed, E, K, N)."""
+    K, N = kn
+    s = jax.random.normal(jax.random.PRNGKey(seed % 9973), (E, K, N),
+                          jnp.float32)
+    words = ref.sample_and_pack(s.reshape(1, -1),
+                                jnp.asarray([seed], jnp.uint32))
+    flat = ref.unpack_bits(words[0], E * K * N).reshape(E, K, N)
+    eye = jnp.broadcast_to(jnp.eye(K, dtype=jnp.float32), (E, K, K))
+    m = ops.masked_dense_grouped(eye, jnp.ones((E, K, N), jnp.float32),
+                                 s, seed)
+    assert np.array_equal(np.asarray(m), np.asarray(flat, np.float32))
+
+
+@given(st.integers(0, 2 ** 16), st.sampled_from([40, 70, 128]))
+@settings(max_examples=10, deadline=None)
+def test_masked_conv1d_equals_plain_property(seed, C):
+    """The fused masked conv equals the plain-conv kernel fed the
+    materialized m⊙w bit-exactly (the model-path identity), and its
+    mask is the leaf's flat uplink stream."""
+    Wt = 4
+    key = jax.random.PRNGKey(seed % 9973)
+    kx, kw, ks = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (2, 9, C), jnp.float32)
+    w = jax.random.normal(kw, (Wt, C), jnp.float32)
+    s = jax.random.normal(ks, (Wt, C), jnp.float32)
+    m = ref.sample_mask(s, seed, 0)
+    y_fused = ops.masked_conv1d(x, w, s, seed, 0)
+    y_plain = ops.conv1d_plain(x, m.astype(w.dtype) * w)
+    assert np.array_equal(np.asarray(y_fused), np.asarray(y_plain))
+    words = ref.sample_and_pack(s.reshape(1, -1),
+                                jnp.asarray([seed], jnp.uint32))
+    flat = ref.unpack_bits(words[0], Wt * C).reshape(Wt, C)
+    assert np.array_equal(np.asarray(m), np.asarray(flat))

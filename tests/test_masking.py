@@ -166,3 +166,28 @@ def test_theta_quantization_unbiased(seed, bits):
                     - theta["w"])
     mean_err = float(jnp.mean(jnp.stack(errs)))
     assert abs(mean_err) < step / 4
+
+
+def test_freeze_for_decode_materializes_once_and_exactly():
+    """freeze_for_decode turns every MaskedLeaf of a forward tree into
+    the SAME effective weights the fused kernels execute (bit-identical
+    hash-stream masks), leaves floats untouched, and contains no
+    MaskedLeaf afterwards — so per-token decode (conv1d_step etc.) does
+    zero mask resampling."""
+    key = jax.random.PRNGKey(4)
+    params = {"proj": {"w_a": jax.random.normal(key, (12, 8)),
+                       "bias": jnp.zeros((8,), jnp.float32)},
+              "conv": {"w_conv": jax.random.normal(key, (4, 8)),
+                       "bias_conv": jnp.zeros((8,), jnp.float32)}}
+    mp = masking.init_masked(key, params, masking.MaskSpec())
+    seed_fn = lambda i: masking.mask_stream_seed(0, 0, i, 0, run_seed=3)
+    tree = masking.masked_forward_tree(mp, seed_fn)
+    frozen = masking.freeze_for_decode(tree)
+    leaves = jax.tree_util.tree_leaves(
+        frozen, is_leaf=lambda x: isinstance(x, masking.MaskedLeaf))
+    assert not any(isinstance(l, masking.MaskedLeaf) for l in leaves)
+    eff = masking.hash_effective(mp, seed_fn)
+    for (p, a), (_, b) in zip(masking.leaves_with_paths(frozen),
+                              masking.leaves_with_paths(eff)):
+        assert np.array_equal(np.asarray(a, np.float32),
+                              np.asarray(b, np.float32)), p

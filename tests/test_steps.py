@@ -240,20 +240,25 @@ def _load_kernels_bench():
     return mod
 
 
-def test_train_step_jaxpr_zero_weight_temporaries():
+@pytest.mark.parametrize("family", ["dense", "moe", "hybrid"])
+def test_train_step_jaxpr_zero_weight_temporaries(family):
     """Acceptance invariant (tier-1 twin of the benchmark gate): the
-    jaxpr of a jitted make_train_step for an MXU-aligned transformer
-    config defines ZERO weight-shaped f32 values outside pallas_call —
-    forward AND backward — for every masked block shape, while the
-    materialized REPRO_EFF_PATH reference defines strictly more at
-    every leaf shape."""
+    jaxpr of a jitted make_train_step for an MXU-aligned config of
+    each family — dense transformer, deepseek-style MoE (stacked
+    (E, K, N) expert leaves through the GROUPED kernel), and
+    recurrentgemma-style hybrid ((W, C) conv leaves through the fused
+    conv kernel) — defines ZERO weight-shaped f32 values outside
+    pallas_call, forward AND backward, for every masked block shape,
+    while the materialized REPRO_EFF_PATH reference defines strictly
+    more at every leaf shape."""
     bench = _load_kernels_bench()
-    model = bench.model_step_weight_defs(iters=0)
+    cfg, S = bench.MODEL_CHECK_CFGS[family]
+    model = bench.model_step_weight_defs(cfg, iters=0, S=S)
     assert model["block_shapes"], "no masked blocks found"
     for sh, cts in model["block_shapes"].items():
-        assert cts["fused"] == 0, (sh, cts)
+        assert cts["fused"] == 0, (family, sh, cts)
     for sh, cts in model["leaf_shapes"].items():
-        assert cts["eff"] > cts["fused"], (sh, cts)
+        assert cts["eff"] > cts["fused"], (family, sh, cts)
 
 
 def test_serve_step_runs():

@@ -1,0 +1,171 @@
+#!/usr/bin/env python3
+"""Kernel-benchmark regression gate: compare a freshly written
+``BENCH_kernels.json`` against the committed baseline.
+
+Two kinds of check:
+
+  * STRUCTURAL (always asserted): the fused kernels must define zero
+    weight-shaped f32 temporaries (``weight_f32_defs``) and the
+    whole-model gate (``model_step``) must report fused == 0 on every
+    masked block shape of every checked family — these are jaxpr
+    counts, valid on any backend.
+
+  * TIMING (asserted only on real hardware): the fused-vs-reference
+    ratio ``fused_us / ref_us`` per (shape, op) must not regress by
+    more than ``--max-ratio-regression`` (default 2x) against the
+    baseline's ratio.  Under Pallas interpret mode (CPU CI) the fused
+    kernels are EMULATED, so absolute timings — and their ratios — are
+    meaningless; the timing comparison then prints informationally and
+    never fails (the structural jaxpr counts are the gate there).
+
+Usage:
+    python tools/check_bench.py --fresh BENCH_kernels.json \
+        --baseline /tmp/BENCH_baseline.json [--max-ratio-regression 2.0]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _ratios(results: dict) -> dict:
+    """{(kind, name, op): fused_us / reference_us} for every timed
+    shape AND the whole-model train steps (fused vs the materialized
+    REPRO_EFF_PATH baseline — the headline fused-vs-eff ratio)."""
+    out = {}
+    for kind, ops in (("shapes", ("fwd", "bwd", "sample_pack")),
+                      ("grouped_shapes", ("fwd", "bwd"))):
+        for row in results.get(kind, []):
+            for op in ops:
+                fused = row.get(f"{op}_us")
+                refus = row.get(f"{op}_ref_us")
+                if fused and refus:
+                    out[(kind, row["name"], op)] = fused / refus
+    model = results.get("model_step") or {}
+    fams = (model.items() if "block_shapes" not in model
+            else [("dense", model)])
+    for fam, m in fams:
+        fused = m.get("train_step_us")
+        eff = m.get("train_step_eff_us")
+        if fused and eff:
+            out[("model_step", f"model_step[{fam}]", "train_step")] = \
+                fused / eff
+    return out
+
+
+def check_structural(results: dict, label: str) -> list:
+    """Missing keys are hard failures: the structural gate must never
+    pass vacuously on a truncated or schema-drifted JSON."""
+    errs = []
+    wd = results.get("weight_f32_defs")
+    if not isinstance(wd, dict):
+        errs.append(f"{label}: missing weight_f32_defs section")
+        wd = {}
+    for key in ("fwd_fused", "bwd_fused"):
+        if key not in wd:
+            errs.append(f"{label}: weight_f32_defs[{key}] missing")
+        elif wd[key] != 0:
+            errs.append(f"{label}: weight_f32_defs[{key}] = {wd[key]} "
+                        "(must be 0)")
+    for key in ("fwd_naive", "bwd_naive"):
+        if key not in wd:
+            errs.append(f"{label}: weight_f32_defs[{key}] missing")
+        elif wd[key] <= 0:
+            errs.append(f"{label}: weight_f32_defs[{key}] lost its "
+                        "temporaries")
+    model = results.get("model_step")
+    if not isinstance(model, dict) or not model:
+        errs.append(f"{label}: missing model_step section")
+        model = {}
+    # pre-grouped JSONs had a flat model_step; current ones are
+    # keyed by family
+    fams = (model.items() if "block_shapes" not in model
+            else [("dense", model)])
+    for fam, m in fams:
+        if not m.get("block_shapes") or not m.get("leaf_shapes"):
+            errs.append(f"{label}: model_step[{fam}] has no "
+                        "block/leaf shape counts")
+        for sh, cts in m.get("block_shapes", {}).items():
+            if cts.get("fused", 1) != 0:
+                errs.append(f"{label}: model_step[{fam}] block {sh} "
+                            f"fused = {cts.get('fused')} (must be 0)")
+        for sh, cts in m.get("leaf_shapes", {}).items():
+            if cts.get("eff", 0) <= cts.get("fused", 0):
+                errs.append(f"{label}: model_step[{fam}] leaf {sh} "
+                            f"eff {cts.get('eff')} <= fused "
+                            f"{cts.get('fused')}")
+    return errs
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--fresh", default="BENCH_kernels.json",
+                   help="freshly generated results JSON")
+    p.add_argument("--baseline", required=True,
+                   help="committed baseline JSON to compare against")
+    p.add_argument("--max-ratio-regression", type=float, default=2.0,
+                   help="fail if fresh fused/ref ratio exceeds this "
+                        "multiple of the baseline ratio")
+    args = p.parse_args(argv)
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    errs = check_structural(fresh, "fresh")
+    for e in errs:
+        print(f"FAIL {e}")
+
+    fresh_interp = bool(fresh.get("interpret"))
+    base_interp = bool(base.get("interpret"))
+    interpret = fresh_interp or base_interp
+    if interpret:
+        # say so up front, not only when a regression happens to exist
+        src = ("fresh run" if fresh_interp and base_interp else
+               "fresh run" if fresh_interp else "committed baseline")
+        print(f"# timing gate DISARMED: {src} was recorded under Pallas "
+              "interpret mode (emulated kernels; ratios not "
+              "comparable)" + ("" if fresh_interp else
+                               " — commit a hardware BENCH_kernels.json "
+                               "to arm the 2x gate"))
+    fr, br = _ratios(fresh), _ratios(base)
+    timing_errs = []
+    for key in sorted(fr.keys() & br.keys()):
+        kind, name, op = key
+        ratio, base_ratio = fr[key], br[key]
+        verdict = "ok"
+        if base_ratio > 0 and ratio > args.max_ratio_regression * base_ratio:
+            verdict = "REGRESSED"
+            timing_errs.append(
+                f"{name}:{op} fused/ref ratio {ratio:.2f} > "
+                f"{args.max_ratio_regression:.1f}x baseline "
+                f"{base_ratio:.2f}")
+        print(f"{name}:{op},ratio={ratio:.3f},baseline={base_ratio:.3f},"
+              f"{verdict}")
+    missing = br.keys() - fr.keys()
+    if missing:
+        errs.append(f"fresh JSON lost timed shapes: {sorted(missing)}")
+        print(f"FAIL fresh JSON lost timed shapes: {sorted(missing)}")
+
+    if timing_errs:
+        if interpret:
+            print(f"# interpret mode: {len(timing_errs)} timing "
+                  "regression(s) reported informationally only "
+                  "(emulated kernels; structural jaxpr counts are the "
+                  "gate)")
+        else:
+            errs.extend(timing_errs)
+            for e in timing_errs:
+                print(f"FAIL {e}")
+
+    if errs:
+        print(f"# check_bench: {len(errs)} failure(s)")
+        return 1
+    print("# check_bench: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
