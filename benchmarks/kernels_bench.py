@@ -49,20 +49,17 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import statistics
 import time
 
 import jax
 import jax.numpy as jnp
-from jax import core as jcore
 
+from repro.analysis import count_weight_f32_defs
+from repro.analysis import model_check
 from repro.configs import get_config
-from repro.configs.base import ArchConfig
-from repro.core import masking
 from repro.kernels import ref, ops
 from repro.launch import steps as steplib
-from repro.models import build_model
 
 
 # ---------------------------------------------------------------------------
@@ -148,65 +145,10 @@ def grouped_shape_zoo(max_dim: int = 1536, m: int = 128,
 _CHECK_SHAPE = (256, 1024, 1024)  # MXU-aligned so no pad/slice eqns
 
 
-# pure view/layout primitives: no new value is computed, XLA aliases
-# them to the operand (lax.scan feeds per-layer score slices to the
-# kernels through squeeze) — not weight-sized HBM traffic
-_VIEW_PRIMS = frozenset({"squeeze", "reshape"})
-
-
-def count_weight_f32_defs_jaxpr(jaxpr, weight_shape) -> int:
-    """Number of equations (recursively) in a jaxpr defining an f32
-    value of `weight_shape` outside any `pallas_call`.
-
-    Call-like equations that merely forward inner results (pjit,
-    custom_vjp, scan, ...) are recursed into instead of counted, so a
-    hit is a real weight-sized compute/materialization step; the
-    pallas_call equation itself is never descended into — its innards
-    live in VMEM, which is the entire point.  View-only equations
-    (`_VIEW_PRIMS`) are skipped.
-    """
-    tgt = (tuple(weight_shape), jnp.dtype(jnp.float32))
-    n_hits = 0
-
-    def subjaxprs(params):
-        found = []
-        stack = list(params.values())
-        while stack:
-            p = stack.pop()
-            if isinstance(p, jcore.ClosedJaxpr):
-                found.append(p.jaxpr)
-            elif isinstance(p, jcore.Jaxpr):
-                found.append(p)
-            elif isinstance(p, (tuple, list)):
-                stack.extend(p)
-        return found
-
-    def walk(jaxpr):
-        nonlocal n_hits
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "pallas_call":
-                continue
-            inner = subjaxprs(eqn.params)
-            if inner:
-                for j in inner:
-                    walk(j)
-                continue  # call wrapper: count only the defining eqns
-            if eqn.primitive.name in _VIEW_PRIMS:
-                continue
-            for v in eqn.outvars:
-                aval = getattr(v, "aval", None)
-                if aval is not None and (
-                        tuple(aval.shape), aval.dtype) == tgt:
-                    n_hits += 1
-
-    walk(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
-    return n_hits
-
-
-def count_weight_f32_defs(fn, args, weight_shape) -> int:
-    """`count_weight_f32_defs_jaxpr` of `jax.make_jaxpr(fn)(*args)`."""
-    return count_weight_f32_defs_jaxpr(jax.make_jaxpr(fn)(*args),
-                                       weight_shape)
+# the counter itself — the rule-based jaxpr walker — lives in
+# repro.analysis (jaxpr_lint.count_weight_f32_defs); this harness, the
+# tier-1 twin in tests/test_steps.py and tools/repro_lint.py are thin
+# callers of that ONE traversal, so counts stay comparable everywhere
 
 
 def _check_operands(M, K, N):
@@ -250,110 +192,24 @@ def weight_temporaries_bwd():
 # Whole-model check: the invariant on a full transformer-block train step
 # ---------------------------------------------------------------------------
 
-# MXU-aligned model configs: every masked trailing-2D block — incl.
-# the STACKED MoE expert (E, K, N) and depthwise conv (W, C) leaves —
-# is lane-aligned, so every fused launch is unpadded and the counts
-# below are exact.  vocab=320 keeps the (float) unembed cast from
-# colliding with any masked block shape; activation dims (B, S, cap)
-# are chosen so no 2-D f32 activation collides with a block shape.
-MODEL_CHECK_CFG = ArchConfig(
-    name="bench-aligned", family="dense", n_layers=2, d_model=128,
-    n_heads=2, n_kv_heads=2, d_ff=256, vocab=320, head_dim=64)
-
-# deepseek-style MoE: MLA attention (all factors 128-aligned) + 1 dense
-# + 1 MoE layer of 2 routed experts (stacked (2, 128, 128) leaves ->
-# the GROUPED kernel) + 1 shared expert
-MOE_CHECK_CFG = ArchConfig(
-    name="bench-moe-aligned", family="moe", n_layers=2, d_model=128,
-    n_heads=2, n_kv_heads=2, d_ff=256, vocab=320,
-    kv_lora_rank=128, q_lora_rank=0, qk_nope_dim=128, qk_rope_dim=128,
-    v_head_dim=128, n_experts=2, n_shared_experts=1, top_k=2,
-    moe_d_ff=128, first_dense_layers=1)
-
-# recurrentgemma-style hybrid: RG-LRU blocks with a (4, 128) depthwise
-# conv kernel leaf (-> the fused conv kernel) + local attention
-HYBRID_CHECK_CFG = ArchConfig(
-    name="bench-hybrid-aligned", family="hybrid", n_layers=3,
-    d_model=128, n_heads=2, n_kv_heads=2, d_ff=256, vocab=320,
-    head_dim=64, sliding_window=16, block_pattern=("rec", "rec", "attn"),
-    lru_width=128, conv_width=4)
-
-MODEL_CHECK_CFGS = {"dense": (MODEL_CHECK_CFG, 64),
-                    "moe": (MOE_CHECK_CFG, 48),
-                    "hybrid": (HYBRID_CHECK_CFG, 32)}
+# the aligned check configs and the tracing/counting helpers live in
+# repro.analysis.model_check (shared with the tier-1 twin and
+# tools/repro_lint.py); the bench layers TIMING on top of its counts
+MODEL_CHECK_CFGS = model_check.MODEL_CHECK_CFGS
 
 
-def model_step_setup(cfg: ArchConfig = MODEL_CHECK_CFG, C: int = 1,
-                     B: int = 2, S: int = 64):
-    """(api, fed state, cohort batch) for an aligned check config."""
-    api = build_model(cfg)
-    state = steplib.init_fed_state(jax.random.PRNGKey(0), api,
-                                   masking.MaskSpec(), C=C)
-    tokens = (jnp.arange(B * S, dtype=jnp.int32).reshape(B, S) * 3) \
-        % cfg.vocab
-    batch = {"tokens": jnp.broadcast_to(tokens, (C, B, S))}
-    return api, state, batch
-
-
-def masked_block_shapes(state):
-    """Distinct trailing-2D block shapes of every masked leaf."""
-    return sorted({tuple(l.shape[-2:]) for l in
-                   jax.tree_util.tree_leaves(state["scores"])
-                   if l is not None})
-
-
-def _trace_model_step(api, state, batch, scfg, eff_path: bool):
-    prev = os.environ.get("REPRO_EFF_PATH")
-    os.environ["REPRO_EFF_PATH"] = "1" if eff_path else "0"
-    try:
-        step = steplib.make_train_step(api, scfg)
-        # compile INSIDE the env guard — the path is chosen at trace time
-        compiled = jax.jit(step).lower(state, batch).compile()
-        return jax.make_jaxpr(step)(state, batch), compiled
-    finally:
-        if prev is None:
-            os.environ.pop("REPRO_EFF_PATH", None)
-        else:
-            os.environ["REPRO_EFF_PATH"] = prev
-
-
-def model_step_weight_defs(cfg: ArchConfig = MODEL_CHECK_CFG,
-                           iters: int = 0, warmup: int = 1,
+def model_step_weight_defs(cfg, iters: int = 0, warmup: int = 1,
                            S: int = 64):
-    """The end-to-end invariant on the jitted whole-model train step.
-
-    Two granularities:
-      * block shapes — the trailing-2D tile one fused launch consumes
-        ((K, N) dense blocks, the (K, N) of a stacked (E, K, N) expert
-        leaf, the (W, C) of a conv kernel leaf); the FUSED path must
-        define ZERO f32 values at any of them outside pallas_call
-        (forward and backward).
-      * full leaf shapes (C, L[, E], K, N) — where the materialized
-        REPRO_EFF_PATH reference pays: hash uniforms, sigmoid(theta),
-        the STE mask.  Both paths share the score-sized regularizer /
-        optimizer arithmetic at this scale, so the assertion is
-        RELATIVE: eff must define strictly more than fused on every
-        leaf.
-    """
-    api, state, batch = model_step_setup(cfg, S=S)
-    scfg = steplib.StepConfig(lam=0.1, lr=0.5)
-    fused_jx, fused_fn = _trace_model_step(api, state, batch, scfg,
-                                           eff_path=False)
-    eff_jx, eff_fn = _trace_model_step(api, state, batch, scfg,
-                                       eff_path=True)
-    out = {"block_shapes": {}, "leaf_shapes": {}}
-    for sh in masked_block_shapes(state):
-        out["block_shapes"]["x".join(map(str, sh))] = {
-            "eff": count_weight_f32_defs_jaxpr(eff_jx, sh),
-            "fused": count_weight_f32_defs_jaxpr(fused_jx, sh)}
-    leaf_shapes = sorted({tuple(l.shape) for l in
-                          jax.tree_util.tree_leaves(state["scores"])
-                          if l is not None})
-    for sh in leaf_shapes:
-        out["leaf_shapes"]["x".join(map(str, sh))] = {
-            "eff": count_weight_f32_defs_jaxpr(eff_jx, sh),
-            "fused": count_weight_f32_defs_jaxpr(fused_jx, sh)}
+    """`model_check.model_step_weight_defs` counts, plus (iters > 0)
+    fused-vs-materialized wall time of the compiled train step."""
+    out = model_check.model_step_weight_defs(cfg, S=S)
     if iters:
+        api, state, batch = model_check.model_step_setup(cfg, S=S)
+        scfg = steplib.StepConfig(lam=0.1, lr=0.5)
+        _, fused_fn = model_check.trace_model_step(
+            api, state, batch, scfg, eff_path=False, jit_compile=True)
+        _, eff_fn = model_check.trace_model_step(
+            api, state, batch, scfg, eff_path=True, jit_compile=True)
         out["train_step_us"] = timed(fused_fn, state, batch,
                                      iters=iters, warmup=warmup)
         out["train_step_eff_us"] = timed(eff_fn, state, batch,
@@ -487,6 +343,9 @@ def main(argv=None) -> dict:
                    help="output path for the results JSON")
     args = p.parse_args([] if argv is None else argv)
 
+    # a caller (or test) may have flipped REPRO_FORCE_INTERPRET since
+    # the first kernel dispatch — make this run see the current env
+    ops.reset_backend_cache()
     interpret = ops._use_interpret()
     results = {
         "backend": ops.repro_backend(),

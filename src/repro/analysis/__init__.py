@@ -1,0 +1,27 @@
+"""repro.analysis — static guards for the mask-native invariants.
+
+Three engines (docs/DESIGN.md §Analysis) behind one CLI
+(``tools/repro_lint.py``, the CI ``lint`` job):
+
+  * ``jaxpr_lint``   — rule-based closed-jaxpr walker (weight-shaped
+    f32 temporaries, materialized masks, dtype promotions, donated
+    buffer reuse); ``benchmarks/kernels_bench.py`` and the tier-1 twin
+    in ``tests/test_steps.py`` are thin callers of this traversal.
+  * ``stream_cover`` — the mask-stream coverage checker ("stream race
+    detector"): every `MaskedLeaf`'s (seed, off, size) intervals must
+    tile its flat hash stream exactly, and no two (leaf, shard,
+    cohort) streams may share a seed.  Also the dryrun-mode gate.
+  * ``source_lint``  — AST rules over the ``src/`` tree (bare
+    PRNGKeys, kernel-oracle completeness, env-knob docs, the
+    materializing-call allowlist).
+
+``model_check`` carries the MXU-aligned whole-model configs the jaxpr
+gate runs end-to-end on (import it directly — it pulls the model zoo).
+"""
+from repro.analysis.jaxpr_lint import (count_weight_f32_defs,
+                                       count_weight_f32_defs_jaxpr,
+                                       lint_jaxpr)
+from repro.analysis.report import Finding
+
+__all__ = ["Finding", "count_weight_f32_defs",
+           "count_weight_f32_defs_jaxpr", "lint_jaxpr"]

@@ -1,0 +1,137 @@
+"""MXU-aligned whole-model check configs and jaxpr tracing helpers.
+
+The end-to-end gate behind the "fused train step defines zero
+weight-shaped f32 temporaries" claim lives here, shared by THREE
+consumers — ``benchmarks/kernels_bench.py`` (timing + BENCH JSON), the
+tier-1 twin in ``tests/test_steps.py``, and ``tools/repro_lint.py`` —
+so there is exactly one traversal and one set of check configs, and
+counts stay comparable everywhere.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.jaxpr_lint import count_weight_f32_defs_jaxpr
+from repro.configs import ArchConfig
+from repro.core import masking
+from repro.launch import steps as steplib
+from repro.models import build_model
+
+# MXU-aligned model configs: every masked trailing-2D block — incl.
+# the STACKED MoE expert (E, K, N) and depthwise conv (W, C) leaves —
+# is lane-aligned, so every fused launch is unpadded and the counts
+# below are exact.  vocab=320 keeps the (float) unembed cast from
+# colliding with any masked block shape; activation dims (B, S, cap)
+# are chosen so no 2-D f32 activation collides with a block shape.
+MODEL_CHECK_CFG = ArchConfig(
+    name="bench-aligned", family="dense", n_layers=2, d_model=128,
+    n_heads=2, n_kv_heads=2, d_ff=256, vocab=320, head_dim=64)
+
+# deepseek-style MoE: MLA attention (all factors 128-aligned) + 1 dense
+# + 1 MoE layer of 2 routed experts (stacked (2, 128, 128) leaves ->
+# the GROUPED kernel) + 1 shared expert
+MOE_CHECK_CFG = ArchConfig(
+    name="bench-moe-aligned", family="moe", n_layers=2, d_model=128,
+    n_heads=2, n_kv_heads=2, d_ff=256, vocab=320,
+    kv_lora_rank=128, q_lora_rank=0, qk_nope_dim=128, qk_rope_dim=128,
+    v_head_dim=128, n_experts=2, n_shared_experts=1, top_k=2,
+    moe_d_ff=128, first_dense_layers=1)
+
+# recurrentgemma-style hybrid: RG-LRU blocks with a (4, 128) depthwise
+# conv kernel leaf (-> the fused conv kernel) + local attention
+HYBRID_CHECK_CFG = ArchConfig(
+    name="bench-hybrid-aligned", family="hybrid", n_layers=3,
+    d_model=128, n_heads=2, n_kv_heads=2, d_ff=256, vocab=320,
+    head_dim=64, sliding_window=16, block_pattern=("rec", "rec", "attn"),
+    lru_width=128, conv_width=4)
+
+MODEL_CHECK_CFGS = {"dense": (MODEL_CHECK_CFG, 64),
+                    "moe": (MOE_CHECK_CFG, 48),
+                    "hybrid": (HYBRID_CHECK_CFG, 32)}
+
+
+def model_step_setup(cfg: ArchConfig = MODEL_CHECK_CFG, C: int = 1,
+                     B: int = 2, S: int = 64):
+    """(api, fed state, cohort batch) for an aligned check config."""
+    api = build_model(cfg)
+    state = steplib.init_fed_state(jax.random.PRNGKey(0), api,
+                                   masking.MaskSpec(), C=C)
+    tokens = (jnp.arange(B * S, dtype=jnp.int32).reshape(B, S) * 3) \
+        % cfg.vocab
+    batch = {"tokens": jnp.broadcast_to(tokens, (C, B, S))}
+    return api, state, batch
+
+
+def masked_block_shapes(state):
+    """Distinct trailing-2D block shapes of every masked leaf."""
+    return sorted({tuple(l.shape[-2:]) for l in
+                   jax.tree_util.tree_leaves(state["scores"])
+                   if l is not None})
+
+
+def masked_leaf_shapes(state):
+    """Distinct FULL leaf shapes (C, L[, E], K, N) of the score tree."""
+    return sorted({tuple(l.shape) for l in
+                   jax.tree_util.tree_leaves(state["scores"])
+                   if l is not None})
+
+
+def trace_model_step(api, state, batch, scfg, eff_path: bool,
+                     jit_compile: bool = False):
+    """(jaxpr, jitted-executable-or-None) of the train step under the
+    chosen execution path.  Lowering happens INSIDE the REPRO_EFF_PATH
+    guard — the path is chosen at trace time.  `jit_compile=False`
+    (analysis) skips XLA compilation; the bench passes True to time the
+    executable."""
+    prev = os.environ.get("REPRO_EFF_PATH")
+    os.environ["REPRO_EFF_PATH"] = "1" if eff_path else "0"
+    try:
+        step = steplib.make_train_step(api, scfg)
+        compiled = (jax.jit(step).lower(state, batch).compile()
+                    if jit_compile else None)
+        return jax.make_jaxpr(step)(state, batch), compiled
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_EFF_PATH", None)
+        else:
+            os.environ["REPRO_EFF_PATH"] = prev
+
+
+def model_step_weight_defs(cfg: ArchConfig = MODEL_CHECK_CFG,
+                           S: int = 64):
+    """The end-to-end invariant on the whole-model train step (jaxpr
+    counts only — no XLA compile, no timing; the bench layers those on
+    top via `trace_model_step(..., jit_compile=True)`).
+
+    Two granularities:
+      * block shapes — the trailing-2D tile one fused launch consumes
+        ((K, N) dense blocks, the (K, N) of a stacked (E, K, N) expert
+        leaf, the (W, C) of a conv kernel leaf); the FUSED path must
+        define ZERO f32 values at any of them outside pallas_call
+        (forward and backward).
+      * full leaf shapes (C, L[, E], K, N) — where the materialized
+        REPRO_EFF_PATH reference pays: hash uniforms, sigmoid(theta),
+        the STE mask.  Both paths share the score-sized regularizer /
+        optimizer arithmetic at this scale, so the assertion is
+        RELATIVE: eff must define strictly more than fused on every
+        leaf.
+    """
+    api, state, batch = model_step_setup(cfg, S=S)
+    scfg = steplib.StepConfig(lam=0.1, lr=0.5)
+    fused_jx, _ = trace_model_step(api, state, batch, scfg,
+                                   eff_path=False)
+    eff_jx, _ = trace_model_step(api, state, batch, scfg,
+                                 eff_path=True)
+    out = {"block_shapes": {}, "leaf_shapes": {}}
+    for sh in masked_block_shapes(state):
+        out["block_shapes"]["x".join(map(str, sh))] = {
+            "eff": count_weight_f32_defs_jaxpr(eff_jx, sh),
+            "fused": count_weight_f32_defs_jaxpr(fused_jx, sh)}
+    for sh in masked_leaf_shapes(state):
+        out["leaf_shapes"]["x".join(map(str, sh))] = {
+            "eff": count_weight_f32_defs_jaxpr(eff_jx, sh),
+            "fused": count_weight_f32_defs_jaxpr(fused_jx, sh)}
+    return out

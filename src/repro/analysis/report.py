@@ -1,0 +1,28 @@
+"""Shared finding type for the repro.analysis engines.
+
+Every engine (jaxpr_lint, stream_cover, source_lint) reports rule
+violations as `Finding`s; `tools/repro_lint.py` stringifies them into
+the shared ``FAIL ...`` / ``# repro_lint: ...`` CI convention.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation.
+
+    rule   — kebab-case rule id (e.g. ``weight-f32-temporary``)
+    where  — location: ``file:line``, a jaxpr primitive name, or a
+             masked-leaf path
+    detail — what was actually seen there
+    """
+
+    rule: str
+    where: str
+    detail: str = ""
+
+    def __str__(self) -> str:
+        d = f": {self.detail}" if self.detail else ""
+        return f"[{self.rule}] {self.where}{d}"

@@ -1,0 +1,296 @@
+"""AST source lint: repo-specific rules over the ``src/`` tree.
+
+Every rule takes explicit file paths (so the failing fixtures under
+``tests/analysis_fixtures/`` can prove each rule fires) and returns
+`Finding`s; `run_all` applies the real repo layout.
+
+Rules:
+
+  * ``bare-prngkey`` — no ``jax.random.PRNGKey(<const>)`` under
+    ``launch/``: keys must derive from the run seed via the
+    `mask_stream_seed` convention (the PRNGKey(17) and PRNGKey(29)
+    bug class — a constant key silently decouples a stream from
+    ``--seed``).  Allowlist: shape-only keys that feed
+    ``jax.eval_shape``.
+  * ``missing-oracle`` / ``missing-ref-bwd-hatch`` — every exported
+    Pallas kernel in ``kernels/masked_matmul.py`` has a ``ref.py`` jnp
+    oracle (same name, or `ORACLE_ALIASES`), and every kernel family
+    with a backward has a ``REPRO_REF_BWD`` escape hatch in ``ops.py``.
+  * ``knob-doc`` — every ``REPRO_*`` env knob READ in source appears in
+    the README env-knob table: the table is the machine-checked source
+    of truth.
+  * ``materialize-allowlist`` — ``effective_weight`` /
+    ``materialize_leaf`` call sites only where a weight-sized
+    materialization is the design (the per-token decode residue and
+    the one-time prefill freeze).
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from repro.analysis.report import Finding
+
+_SRC = pathlib.Path(__file__).resolve().parents[2]      # .../src
+REPO_ROOT = _SRC.parent
+
+
+def _rel(path) -> str:
+    p = pathlib.Path(path).resolve()
+    try:
+        return p.relative_to(REPO_ROOT).as_posix()
+    except ValueError:
+        return p.as_posix()
+
+
+def _parse(path):
+    return ast.parse(pathlib.Path(path).read_text(),
+                     filename=str(path))
+
+
+def _call_name(func) -> str:
+    """Trailing name of a call target: jax.random.PRNGKey -> PRNGKey."""
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return ""
+
+
+# ---------------------------------------------------------------------------
+# bare-prngkey
+# ---------------------------------------------------------------------------
+
+# (repo-relative file, constant) pairs where a constant key is fine:
+# shape-only keys whose VALUE never reaches a mask or a quantizer
+PRNGKEY_ALLOWLIST = frozenset({
+    ("src/repro/launch/dryrun.py", 0),   # feeds jax.eval_shape only
+})
+
+
+def check_bare_prngkey(files, allowlist=PRNGKEY_ALLOWLIST) -> list:
+    findings = []
+    for path in files:
+        rel = _rel(path)
+        for node in ast.walk(_parse(path)):
+            if not (isinstance(node, ast.Call)
+                    and _call_name(node.func) == "PRNGKey"
+                    and node.args):
+                continue
+            a = node.args[0]
+            if isinstance(a, ast.Constant) and isinstance(a.value, int):
+                if (rel, a.value) in allowlist:
+                    continue
+                findings.append(Finding(
+                    "bare-prngkey", f"{rel}:{node.lineno}",
+                    f"jax.random.PRNGKey({a.value}) — derive the key "
+                    "from the run seed via the mask_stream_seed "
+                    "convention"))
+    return findings
+
+
+def launch_files():
+    return sorted((_SRC / "repro" / "launch").glob("*.py"))
+
+
+# ---------------------------------------------------------------------------
+# missing-oracle / missing-ref-bwd-hatch
+# ---------------------------------------------------------------------------
+
+ORACLE_ALIASES = {
+    # masked_conv1d_ds's jnp oracle lives inside the combined conv
+    # backward (dx needs the flipped-tap forward, so ref keeps one fn)
+    "masked_conv1d_ds": "masked_conv1d_bwd",
+}
+
+
+def _kernel_family(name: str) -> str:
+    if "grouped" in name or "grp" in name:
+        return "grouped"
+    if "conv" in name:
+        return "conv"
+    return "dense"
+
+
+def _pallas_exports(tree) -> list:
+    """Public top-level defs whose bodies call ``pl.pallas_call``."""
+    out = []
+    for node in tree.body:
+        if (not isinstance(node, ast.FunctionDef)
+                or node.name.startswith("_")):
+            continue
+        for sub in ast.walk(node):
+            if (isinstance(sub, ast.Call)
+                    and _call_name(sub.func) == "pallas_call"):
+                out.append(node.name)
+                break
+    return out
+
+
+def check_kernel_oracles(kernels_path, ref_path, ops_path,
+                         aliases=ORACLE_ALIASES) -> list:
+    findings = []
+    exports = _pallas_exports(_parse(kernels_path))
+    ref_names = {n.name for n in _parse(ref_path).body
+                 if isinstance(n, ast.FunctionDef)}
+    for name in exports:
+        oracle = aliases.get(name, name)
+        if oracle not in ref_names:
+            findings.append(Finding(
+                "missing-oracle", f"{_rel(kernels_path)}:{name}",
+                f"exported Pallas kernel has no ref.py oracle "
+                f"(expected `{oracle}`)"))
+    # every kernel family with a backward kernel needs a REPRO_REF_BWD
+    # escape hatch in ops.py (route grads through the jnp oracle)
+    hatch_fams = set()
+    for node in ast.walk(_parse(ops_path)):
+        if isinstance(node, ast.FunctionDef):
+            for sub in ast.walk(node):
+                if (isinstance(sub, ast.Constant)
+                        and sub.value == "REPRO_REF_BWD"):
+                    hatch_fams.add(_kernel_family(node.name))
+                    break
+    bwd_fams = {_kernel_family(n) for n in exports
+                if n.endswith(("_dx", "_ds"))}
+    for fam in sorted(bwd_fams - hatch_fams):
+        findings.append(Finding(
+            "missing-ref-bwd-hatch", _rel(ops_path),
+            f"no REPRO_REF_BWD escape hatch for the `{fam}` backward"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# knob-doc
+# ---------------------------------------------------------------------------
+
+
+def env_knob_reads(files) -> list:
+    """[(knob, "file:line")] for every ``os.environ.get`` /
+    ``os.getenv`` / ``os.environ[...]`` READ of a ``REPRO_*`` name."""
+    reads = []
+    for path in files:
+        rel = _rel(path)
+        for node in ast.walk(_parse(path)):
+            knob = None
+            if isinstance(node, ast.Call) and node.args:
+                name = _call_name(node.func)
+                a = node.args[0]
+                named = (isinstance(a, ast.Constant)
+                         and isinstance(a.value, str)
+                         and a.value.startswith("REPRO_"))
+                if named and name == "getenv":
+                    knob = a.value
+                elif (named and name == "get"
+                      and isinstance(node.func, ast.Attribute)):
+                    v = node.func.value
+                    if ((isinstance(v, ast.Attribute)
+                         and v.attr == "environ")
+                            or (isinstance(v, ast.Name)
+                                and v.id == "environ")):
+                        knob = a.value
+            elif (isinstance(node, ast.Subscript)
+                  and isinstance(node.ctx, ast.Load)
+                  and isinstance(node.value, ast.Attribute)
+                  and node.value.attr == "environ"
+                  and isinstance(node.slice, ast.Constant)
+                  and isinstance(node.slice.value, str)
+                  and node.slice.value.startswith("REPRO_")):
+                knob = node.slice.value
+            if knob:
+                reads.append((knob, f"{rel}:{node.lineno}"))
+    return reads
+
+
+def readme_knobs(readme_path) -> set:
+    """``REPRO_*`` names with a row in the README env-knob table."""
+    import re
+    row = re.compile(r"^\|\s*`(REPRO_[A-Z0-9_]+)`")
+    out = set()
+    for line in pathlib.Path(readme_path).read_text().splitlines():
+        m = row.match(line.strip())
+        if m:
+            out.add(m.group(1))
+    return out
+
+
+def check_knob_docs(files, readme_path) -> list:
+    documented = readme_knobs(readme_path)
+    return [Finding(
+        "knob-doc", where,
+        f"`{knob}` is read here but has no row in the README "
+        "env-knob table (the machine-checked source of truth)")
+        for knob, where in env_knob_reads(files)
+        if knob not in documented]
+
+
+# ---------------------------------------------------------------------------
+# materialize-allowlist
+# ---------------------------------------------------------------------------
+
+MATERIALIZE_CALLS = frozenset({"effective_weight", "materialize_leaf"})
+
+# (repo-relative file, enclosing function, callee): the ONLY places a
+# weight-sized materialization is the design (docs/DESIGN.md §3)
+MATERIALIZE_ALLOWLIST = frozenset({
+    # per-token decode residue: one (W, C) conv tap per step
+    ("src/repro/models/layers.py", "conv1d_step", "effective_weight"),
+    # the wrapper itself delegates to the core builder
+    ("src/repro/models/layers.py", "effective_weight",
+     "materialize_leaf"),
+    # one-time prefill materialization for serving
+    ("src/repro/core/masking.py", "freeze_for_decode",
+     "materialize_leaf"),
+})
+
+
+def check_materialize_allowlist(files,
+                                allowlist=MATERIALIZE_ALLOWLIST) -> list:
+    findings = []
+    for path in files:
+        rel = _rel(path)
+
+        def visit(node, fname):
+            for child in ast.iter_child_nodes(node):
+                cf = fname
+                if isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                    cf = child.name
+                if isinstance(child, ast.Call):
+                    callee = _call_name(child.func)
+                    if (callee in MATERIALIZE_CALLS
+                            and (rel, fname, callee) not in allowlist):
+                        findings.append(Finding(
+                            "materialize-allowlist",
+                            f"{rel}:{child.lineno}",
+                            f"`{callee}` called outside the allowlist "
+                            f"(in `{fname or '<module>'}`) — a "
+                            "weight-sized HBM materialization"))
+                visit(child, cf)
+
+        visit(_parse(path), "")
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# the real repo layout
+# ---------------------------------------------------------------------------
+
+
+def run_all(repo_root=REPO_ROOT) -> list:
+    """All rules over the repo: ``launch/`` for bare keys, the kernel
+    triple for oracles/hatches, ``src/ + benchmarks/`` for knob reads,
+    ``src/`` for materializing calls."""
+    repo_root = pathlib.Path(repo_root)
+    src = repo_root / "src" / "repro"
+    findings = []
+    findings += check_bare_prngkey(
+        sorted((src / "launch").glob("*.py")))
+    findings += check_kernel_oracles(
+        src / "kernels" / "masked_matmul.py",
+        src / "kernels" / "ref.py",
+        src / "kernels" / "ops.py")
+    knob_files = (sorted(src.rglob("*.py"))
+                  + sorted((repo_root / "benchmarks").glob("*.py")))
+    findings += check_knob_docs(knob_files, repo_root / "README.md")
+    findings += check_materialize_allowlist(sorted(src.rglob("*.py")))
+    return findings

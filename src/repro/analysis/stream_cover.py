@@ -1,0 +1,210 @@
+"""Mask-stream coverage checker — the "stream race detector".
+
+Given any registry model's federated state (real arrays or
+``jax.eval_shape`` structs — only shapes are read), rebuild the exact
+hash-stream coordinates the fused forward uses, through the REAL
+production builder (`masking.masked_forward_tree`, so this checker
+cannot drift from the code it guards), and statically prove:
+
+  * per leaf — every trailing-2D block samples ONE seed and the block
+    `off` intervals tile ``[0, flat_size)`` with zero gaps and zero
+    overlaps.  A gap means the forward masks are not the flat stream
+    `sample_and_pack` packs for the uplink; an overlap means two blocks
+    draw correlated masks;
+  * globally — no two (leaf, shard, cohort) streams share a seed.
+    Every stream's interval set starts at flat index 0, so two equal
+    seeds ALWAYS overlap: two sub-networks silently drawing correlated
+    masks.  `mask_stream_seed` is a pure function, so the full
+    (shard, cohort) grid is enumerated without any devices.
+
+Exposed as the ROADMAP's dryrun-mode gate (`launch/dryrun.py` runs
+`state_stream_report` over the forced multi-device mesh) and as the
+``stream`` engine of ``tools/repro_lint.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.report import Finding
+from repro.core import masking
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamInterval:
+    """One trailing-2D block's slice of its owner's flat hash stream."""
+
+    owner: str       # masked-leaf path
+    seed: int        # uint32 stream id
+    lo: int          # flat start index (the block's `off`)
+    hi: int          # flat end index   (off + K*N)
+    flat_size: int   # the owning leaf's total flat size
+
+
+def _path_str(path) -> str:
+    return jax.tree_util.keystr(path) or "<root>"
+
+
+def collect_intervals(tree, owner_prefix: str = "") -> list:
+    """Every `MaskedLeaf`'s concrete (seed, off, flat_size) intervals
+    from a forward tree built by `masking.masked_forward_tree`.
+    Grouped (E, K, N) expert leaves and layer-stacked (L, K, N) leaves
+    contribute one interval per trailing-2D block."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: x is None
+        or isinstance(x, masking.MaskedLeaf))
+    out = []
+    for path, leaf in flat:
+        if not isinstance(leaf, masking.MaskedLeaf):
+            continue
+        K, N = leaf.w.shape[-2:]
+        blk = int(K) * int(N)
+        seeds = np.asarray(leaf.seed, np.uint32).reshape(-1)
+        offs = np.asarray(leaf.off, np.uint32).reshape(-1)
+        flat_size = blk * seeds.size
+        owner = owner_prefix + _path_str(path)
+        for sd, off in zip(seeds.tolist(), offs.tolist()):
+            out.append(StreamInterval(owner, int(sd), int(off),
+                                      int(off) + blk, flat_size))
+    return out
+
+
+def check_intervals(intervals: Sequence[StreamInterval]) -> list:
+    """``stream-gap`` / ``stream-overlap`` findings over a set of
+    intervals: per-owner tiling of ``[0, flat_size)`` plus cross-owner
+    seed collisions."""
+    findings = []
+    by_owner: dict = {}
+    for iv in intervals:
+        by_owner.setdefault(iv.owner, []).append(iv)
+    for owner, ivs in sorted(by_owner.items()):
+        if len({iv.seed for iv in ivs}) > 1:
+            findings.append(Finding(
+                "stream-gap", owner,
+                f"blocks sample {len({iv.seed for iv in ivs})} distinct "
+                "seeds — the leaf's flat uplink stream is not covered "
+                "by one stream"))
+            continue
+        cur = 0
+        for iv in sorted(ivs, key=lambda i: (i.lo, i.hi)):
+            if iv.lo < cur:
+                findings.append(Finding(
+                    "stream-overlap", owner,
+                    f"block [{iv.lo}, {iv.hi}) overlaps the already "
+                    f"covered [0, {cur})"))
+            elif iv.lo > cur:
+                findings.append(Finding(
+                    "stream-gap", owner,
+                    f"hole [{cur}, {iv.lo}) before the block at "
+                    f"{iv.lo}"))
+            cur = max(cur, iv.hi)
+        if cur != ivs[0].flat_size:
+            findings.append(Finding(
+                "stream-gap", owner,
+                f"blocks cover [0, {cur}) of flat size "
+                f"{ivs[0].flat_size}"))
+    seed_owners: dict = {}
+    for iv in intervals:
+        seed_owners.setdefault(iv.seed, set()).add(iv.owner)
+    for sd, owners in sorted(seed_owners.items()):
+        if len(owners) > 1:
+            who = " + ".join(sorted(owners)[:4])
+            if len(owners) > 4:
+                who += f" + {len(owners) - 4} more"
+            findings.append(Finding(
+                "stream-overlap", who,
+                f"{len(owners)} streams share seed {sd:#010x} — "
+                "correlated masks (all streams start at flat index 0)"))
+    return findings
+
+
+def _drop_cohort(tree):
+    return jax.tree_util.tree_map(
+        lambda l: None if l is None
+        else jax.ShapeDtypeStruct(l.shape[1:], l.dtype),
+        tree, is_leaf=lambda x: x is None)
+
+
+def state_stream_report(state, *, step=0, devs=(0,), cohorts=None,
+                        run_seed=17, mask_mode: str = "sample",
+                        tau: float = 0.5) -> dict:
+    """The coverage gate over one federated state (from
+    `launch.steps.init_fed_state`, real or `jax.eval_shape`'d).
+
+    Builds the forward tree once through the production
+    `masked_forward_tree` (representative shard `devs[0]`, cohort
+    `cohorts[0]`) and checks its interval tiling, then sweeps the FULL
+    (shard, cohort) grid through `mask_stream_seed` looking for seed
+    collisions across distinct (leaf, shard, cohort) streams.
+
+    Returns ``{"n_leaves", "n_intervals", "n_streams", "findings"}``.
+    """
+    scores = state["scores"]
+    C = next(int(l.shape[0]) for l in
+             jax.tree_util.tree_leaves(scores) if l is not None)
+    if cohorts is None:
+        cohorts = range(C)
+    devs = [int(d) for d in devs]
+    cohorts = [int(c) for c in cohorts]
+
+    mp = masking.MaskedParams(state["weights"], _drop_cohort(scores),
+                              _drop_cohort(state["floats"]))
+    leaf_ids: list = []
+
+    def seed_fn(i):
+        leaf_ids.append(i)
+        return masking.mask_stream_seed(step, devs[0], i, cohorts[0],
+                                        run_seed=run_seed)
+
+    tree = masking.masked_forward_tree(mp, seed_fn, mode=mask_mode,
+                                       tau=tau)
+    intervals = collect_intervals(tree)
+    findings = check_intervals(intervals)
+
+    # full (shard, cohort) sweep — one broadcasted seed matrix per leaf
+    dv = np.asarray(devs, np.uint32)[:, None]
+    ch = np.asarray(cohorts, np.uint32)[None, :]
+    mats = [np.asarray(masking.mask_stream_seed(step, dv, i, ch,
+                                                run_seed=run_seed),
+                       np.uint32)
+            for i in leaf_ids]
+    seeds_all = (np.stack(mats) if mats
+                 else np.zeros((0, 1, 1), np.uint32))  # (L, D, C)
+    uniq, counts = np.unique(seeds_all.reshape(-1), return_counts=True)
+    for sd in uniq[counts > 1].tolist():
+        locs = np.argwhere(seeds_all == sd)
+        who = ", ".join(
+            f"leaf{leaf_ids[l]}/dev{devs[d]}/cohort{cohorts[c]}"
+            for l, d, c in locs[:4].tolist())
+        findings.append(Finding(
+            "stream-overlap", who,
+            f"{len(locs)} (leaf, shard, cohort) streams share seed "
+            f"{sd:#010x}"))
+
+    return {"n_leaves": len(leaf_ids),
+            "n_intervals": len(intervals),
+            "n_streams": int(seeds_all.size),
+            "findings": findings}
+
+
+def arch_stream_report(arch: str, *, smoke: bool = True, C: int = 2,
+                       devs=(0,), step=0, run_seed=17) -> dict:
+    """`state_stream_report` for a registry config by name — the state
+    comes from `jax.eval_shape` of the real `init_fed_state`, so no
+    parameters are allocated."""
+    from repro.configs import get_config
+    from repro.launch import steps as steplib
+    from repro.models import build_model
+
+    cfg = get_config(arch, smoke=smoke)
+    api = build_model(cfg)
+    state = jax.eval_shape(
+        lambda k: steplib.init_fed_state(k, api, masking.MaskSpec(),
+                                         C=C),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return state_stream_report(state, step=step, devs=devs,
+                               run_seed=run_seed)

@@ -76,6 +76,16 @@ def _use_interpret() -> bool:
     return repro_backend() != "tpu"
 
 
+def reset_backend_cache() -> None:
+    """Drop the cached `_use_interpret()` decision so a mid-process
+    flip of `REPRO_FORCE_INTERPRET` (or a swapped backend) takes
+    effect — without this the flip is silently ignored for the rest of
+    the process.  Call it from any test/bench fixture that toggles the
+    knob (tests/conftest.py `kernel_backend_reset`,
+    benchmarks/kernels_bench.py main)."""
+    _use_interpret.cache_clear()
+
+
 def pack_bits(mask_flat: jax.Array) -> jax.Array:
     if mask_flat.size % 32:
         pad = 32 - mask_flat.size % 32

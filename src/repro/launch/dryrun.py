@@ -15,6 +15,7 @@ import traceback    # noqa: E402
 import jax          # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
+from repro.analysis import stream_cover  # noqa: E402
 from repro.configs import get_config, ARCH_NAMES, SHAPES, LONG_CONTEXT_OK  # noqa: E402
 from repro.core import masking  # noqa: E402
 from repro.models import build_model  # noqa: E402
@@ -189,6 +190,23 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         if shape_cfg.kind == "train":
             state_shapes = jax.eval_shape(
                 lambda k: steplib.init_fed_state(k, api, spec, C), key)
+            # ROADMAP gate: the per-shard mask streams must tile the
+            # global hash stream exactly — zero overlaps, zero gaps,
+            # no (leaf, shard, cohort) seed collisions across the
+            # whole forced mesh
+            n_dev = 1
+            for a in mesh.axis_names:
+                n_dev *= mesh.shape[a]
+            cover = stream_cover.state_stream_report(
+                state_shapes, devs=range(n_dev), cohorts=range(C),
+                run_seed=scfg.seed)
+            if cover["findings"]:
+                raise AssertionError(
+                    "mask-stream coverage violated: "
+                    + "; ".join(str(f) for f in cover["findings"][:5]))
+            results["stream_cover"] = {
+                "ok": True, "n_leaves": cover["n_leaves"],
+                "n_streams": cover["n_streams"]}
             state_sh = steplib.fed_state_shardings(state_shapes, mesh)
             batch_shapes, batch_sh = train_batch_specs(cfg, shape_cfg,
                                                        mesh, C)

@@ -89,6 +89,12 @@ class StepConfig:
     tau: float = 0.5                 # threshold for mask_mode="threshold"
 
 
+# sentinel "leaf index" for the downlink-quantizer key stream: far above
+# any real leaf index, so `mask_stream_seed` cannot hand the quantizer a
+# mask stream of the same (step, dev=0, cohort) coordinates
+_DOWNLINK_STREAM_LEAF = 1 << 20
+
+
 # ---------------------------------------------------------------------------
 # State construction (shape-only friendly: works under jax.eval_shape)
 # ---------------------------------------------------------------------------
@@ -410,9 +416,13 @@ def make_round_step(api, cfg: StepConfig, mesh=None, state_sh=None,
         theta = jax.tree_util.tree_unflatten(tdef, theta_flat)
         if cfg.downlink_bits:
             # the orphaned k-bit downlink, live: theta crosses the wire
-            # stochastically quantized; every shard uses the same key so
-            # cohorts keep receiving identical broadcasts
-            qkey = jax.random.fold_in(jax.random.PRNGKey(29), step)
+            # stochastically quantized; the key derives from the run's
+            # mask_stream_seed convention at the sentinel downlink slot
+            # with dev=0 — every shard uses the same key, so cohorts
+            # keep receiving identical broadcasts, and distinct
+            # (run_seed, step) pairs quantize under distinct keys
+            qkey = jax.random.PRNGKey(masking.mask_stream_seed(
+                step, 0, _DOWNLINK_STREAM_LEAF, 0, run_seed=cfg.seed))
             theta = aggregation.dequantize_theta(
                 aggregation.quantize_theta(theta, qkey,
                                            bits=cfg.downlink_bits),

@@ -67,7 +67,7 @@ def main(argv=None):
 
     cfg = get_config(args.arch, smoke=args.smoke)
     api = build_model(cfg)
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(args.seed)
     scfg = steplib.StepConfig(lam=args.lam, lr=args.lr,
                               optimizer=args.score_opt,
                               downlink_bits=args.downlink_bits,

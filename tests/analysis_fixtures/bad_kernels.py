@@ -1,0 +1,13 @@
+"""Fixture kernels module: exports a Pallas kernel (and its backward)
+with no matching oracle in bad_ref.py and no REPRO_REF_BWD hatch in
+bad_ops.py.  The missing-oracle and missing-ref-bwd-hatch rules must
+flag both."""
+from jax.experimental import pallas as pl
+
+
+def masked_matmul_new(x, w, s):
+    return pl.pallas_call(lambda *refs: None)(x, w, s)
+
+
+def masked_matmul_new_ds(x, w, s, g):
+    return pl.pallas_call(lambda *refs: None)(x, w, s, g)

@@ -1,0 +1,7 @@
+"""Fixture: reads a REPRO_* env knob that has no row in the README
+env-knob table.  The knob-doc rule must flag the read."""
+import os
+
+
+def undocumented_knob() -> bool:
+    return os.environ.get("REPRO_BOGUS_KNOB", "") == "1"

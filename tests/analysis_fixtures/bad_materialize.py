@@ -1,0 +1,10 @@
+"""Fixture: a weight-sized materialization outside the allowlist — a
+training-path helper quietly materializing every MaskedLeaf.  The
+materialize-allowlist rule must flag both calls."""
+from repro.core import masking
+from repro.models import layers
+
+
+def sneaky_forward(tree, leaf):
+    w = layers.effective_weight(leaf)
+    return w, masking.materialize_leaf(tree)

@@ -1,0 +1,8 @@
+"""Fixture: the pre-fix launch/steps.py downlink-quantizer key — a
+hard-coded constant PRNGKey folded only with the step counter, so the
+stream silently ignores --seed.  The bare-prngkey rule must flag it."""
+import jax
+
+
+def quantizer_key(step):
+    return jax.random.fold_in(jax.random.PRNGKey(29), step)

@@ -1,0 +1,6 @@
+"""Fixture ref module for bad_kernels.py: holds no oracle for the
+exported kernels."""
+
+
+def unrelated_helper(x):
+    return x

@@ -1,5 +1,19 @@
 import os
 import sys
 
+import pytest
+
 # src-layout import path (tests run without install)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture
+def kernel_backend_reset():
+    """Reset the kernels' memoized backend decision around a test that
+    toggles REPRO_FORCE_INTERPRET or monkeypatches the backend probe
+    (`kernels/ops.py` caches `_use_interpret` per process — a stale
+    entry would leak the toggle into every later test)."""
+    from repro.kernels import ops
+    ops.reset_backend_cache()
+    yield
+    ops.reset_backend_cache()

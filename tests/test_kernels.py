@@ -573,17 +573,21 @@ def test_masked_conv1d_threshold_mode():
     assert np.array_equal(np.asarray(y), np.asarray(y_ref))
 
 
-def test_use_interpret_cached_and_forceable(monkeypatch):
-    ops._use_interpret.cache_clear()
-    try:
-        monkeypatch.setenv("REPRO_FORCE_INTERPRET", "1")
-        assert ops._use_interpret() is True
-        # cached: changing the env after the first call has no effect
-        monkeypatch.delenv("REPRO_FORCE_INTERPRET")
-        assert ops._use_interpret() is True
-        assert ops._use_interpret.cache_info().hits >= 1
-    finally:
-        ops._use_interpret.cache_clear()
+def test_use_interpret_cached_and_forceable(monkeypatch,
+                                            kernel_backend_reset):
+    monkeypatch.setenv("REPRO_FORCE_INTERPRET", "1")
+    assert ops._use_interpret() is True
+    # cached: changing the env after the first call has no effect...
+    monkeypatch.delenv("REPRO_FORCE_INTERPRET")
+    assert ops._use_interpret() is True
+    assert ops._use_interpret.cache_info().hits >= 1
+    # ...until the public reset makes the flip take effect (on any
+    # non-TPU test backend the uncached answer is interpret=True, so
+    # flip via the backend probe instead)
+    monkeypatch.setattr(ops, "repro_backend", lambda: "tpu")
+    assert ops._use_interpret() is True      # still the stale cache
+    ops.reset_backend_cache()
+    assert ops._use_interpret() is False     # fresh decision
 
 
 def test_hash_uniform_distribution():

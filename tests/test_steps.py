@@ -229,17 +229,6 @@ def test_fedmask_launch_plan_runs():
     assert 0.0 <= float(rm["bpp"]) <= 1.0
 
 
-def _load_kernels_bench():
-    import importlib.util
-    import pathlib
-    p = (pathlib.Path(__file__).resolve().parents[1] / "benchmarks"
-         / "kernels_bench.py")
-    spec = importlib.util.spec_from_file_location("kernels_bench", p)
-    mod = importlib.util.module_from_spec(spec)
-    spec.loader.exec_module(mod)
-    return mod
-
-
 @pytest.mark.parametrize("family", ["dense", "moe", "hybrid"])
 def test_train_step_jaxpr_zero_weight_temporaries(family):
     """Acceptance invariant (tier-1 twin of the benchmark gate): the
@@ -250,10 +239,11 @@ def test_train_step_jaxpr_zero_weight_temporaries(family):
     conv kernel) — defines ZERO weight-shaped f32 values outside
     pallas_call, forward AND backward, for every masked block shape,
     while the materialized REPRO_EFF_PATH reference defines strictly
-    more at every leaf shape."""
-    bench = _load_kernels_bench()
-    cfg, S = bench.MODEL_CHECK_CFGS[family]
-    model = bench.model_step_weight_defs(cfg, iters=0, S=S)
+    more at every leaf shape.  Twin and bench import the SAME
+    traversal from repro.analysis (no duplicated walker)."""
+    from repro.analysis import model_check
+    cfg, S = model_check.MODEL_CHECK_CFGS[family]
+    model = model_check.model_step_weight_defs(cfg, S=S)
     assert model["block_shapes"], "no masked blocks found"
     for sh, cts in model["block_shapes"].items():
         assert cts["fused"] == 0, (family, sh, cts)

@@ -1,0 +1,23 @@
+"""Shared reporting convention for the tools/ CI gates.
+
+Every gate (``check_bench.py``, ``check_docs.py``, ``repro_lint.py``)
+reports the same way, so job logs are scannable:
+
+  * each violation prints as a line starting with ``FAIL ``;
+  * the LAST line is ``# <tool>: ok`` or ``# <tool>: N failure(s)``;
+  * the process exits 0 iff there are no failures.
+"""
+from __future__ import annotations
+
+
+def finish(tool: str, errors) -> int:
+    """Print the FAIL lines and the summary line; return the exit
+    code for ``sys.exit``."""
+    errors = list(errors)
+    for e in errors:
+        print(f"FAIL {e}")
+    if errors:
+        print(f"# {tool}: {len(errors)} failure(s)")
+        return 1
+    print(f"# {tool}: ok")
+    return 0

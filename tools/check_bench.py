@@ -26,7 +26,12 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from _ci import finish  # noqa: E402
 
 
 def _ratios(results: dict) -> dict:
@@ -115,8 +120,6 @@ def main(argv=None) -> int:
         base = json.load(f)
 
     errs = check_structural(fresh, "fresh")
-    for e in errs:
-        print(f"FAIL {e}")
 
     fresh_interp = bool(fresh.get("interpret"))
     base_interp = bool(base.get("interpret"))
@@ -147,7 +150,6 @@ def main(argv=None) -> int:
     missing = br.keys() - fr.keys()
     if missing:
         errs.append(f"fresh JSON lost timed shapes: {sorted(missing)}")
-        print(f"FAIL fresh JSON lost timed shapes: {sorted(missing)}")
 
     if timing_errs:
         if interpret:
@@ -157,14 +159,8 @@ def main(argv=None) -> int:
                   "gate)")
         else:
             errs.extend(timing_errs)
-            for e in timing_errs:
-                print(f"FAIL {e}")
 
-    if errs:
-        print(f"# check_bench: {len(errs)} failure(s)")
-        return 1
-    print("# check_bench: ok")
-    return 0
+    return finish("check_bench", errs)
 
 
 if __name__ == "__main__":

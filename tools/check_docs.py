@@ -11,13 +11,20 @@ Checks, over README.md and every markdown file under docs/:
     a `§N` / `§Name` section reference must match a heading in it.
 
 Run from the repo root:  python tools/check_docs.py
-Exit code 0 = clean, 1 = dangling references (listed on stderr).
+Shares the tools/ convention: violations print as ``FAIL ...`` lines,
+the last line is ``# check_docs: ok`` / ``# check_docs: N
+failure(s)``, exit 0 iff clean.
 """
 from __future__ import annotations
 
+import os
 import pathlib
 import re
 import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from _ci import finish  # noqa: E402
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
@@ -98,16 +105,11 @@ def main() -> int:
     errors = []
     check_md_links(errors)
     check_section_refs(errors)
-    if errors:
-        for e in errors:
-            print(e, file=sys.stderr)
-        print(f"{len(errors)} dangling doc reference(s)",
-              file=sys.stderr)
-        return 1
-    n = len(md_files())
-    print(f"docs OK: {n} markdown file(s), all intra-repo links and "
-          "DESIGN.md section references resolve")
-    return 0
+    if not errors:
+        n = len(md_files())
+        print(f"docs OK: {n} markdown file(s), all intra-repo links "
+              "and DESIGN.md section references resolve")
+    return finish("check_docs", errors)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,150 @@
+#!/usr/bin/env python
+"""Static-analysis gate: the three `repro.analysis` engines over the
+repo (docs/DESIGN.md §Analysis).
+
+  * source — AST rules over ``src/``: bare ``PRNGKey(<const>)`` under
+    ``launch/``, kernel-oracle / ``REPRO_REF_BWD``-hatch completeness,
+    README env-knob-table completeness, the materializing-call
+    allowlist.
+  * stream — mask-stream coverage over the registry config zoo: every
+    `MaskedLeaf`'s intervals tile its flat hash stream exactly (zero
+    overlaps / zero gaps, grouped (E, K, N) expert slices included)
+    and no two (leaf, shard, cohort) streams share a seed.
+  * jaxpr  — the rule-based walker on the MXU-aligned whole-model
+    check configs AND the kernel-level fused fwd/bwd: zero
+    weight-shaped f32 temporaries outside pallas_call, zero
+    materialized masks, no f64 / weight-sized bf16→f32 promotion, no
+    use-after-donate.
+
+Usage:
+    PYTHONPATH=src python tools/repro_lint.py \
+        [--engines source,stream,jaxpr] [--archs all|a,b,...] \
+        [--devices 8] [--cohorts 2] [--seed 17]
+
+Shares the tools/ convention: ``FAIL ...`` lines, then a final
+``# repro_lint: ok`` / ``# repro_lint: N failure(s)``; exit 0 iff ok.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "tools"))
+sys.path.insert(0, str(ROOT / "src"))
+
+from _ci import finish  # noqa: E402
+
+
+def run_source(errors) -> None:
+    from repro.analysis import source_lint
+    found = source_lint.run_all(ROOT)
+    errors.extend(f"source {f}" for f in found)
+    print(f"# repro_lint[source]: {len(found)} finding(s)")
+
+
+def run_stream(errors, archs, devices, cohorts, seed) -> None:
+    from repro.analysis import stream_cover
+    for arch in archs:
+        rep = stream_cover.arch_stream_report(
+            arch, smoke=True, C=cohorts, devs=range(devices),
+            run_seed=seed)
+        errors.extend(f"stream[{arch}] {f}" for f in rep["findings"])
+        print(f"# repro_lint[stream] {arch}: {rep['n_leaves']} leaves, "
+              f"{rep['n_intervals']} intervals, {rep['n_streams']} "
+              f"streams, {len(rep['findings'])} finding(s)")
+
+
+def run_jaxpr(errors) -> None:
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis import jaxpr_lint, model_check
+    from repro.kernels import ops
+    from repro.launch import steps as steplib
+
+    # kernel level: the fused dense fwd+bwd jaxprs stay clean under
+    # EVERY rule (aligned shape -> no pad/slice equations)
+    M, K, N = 256, 512, 512
+    x = jnp.zeros((M, K), jnp.bfloat16)
+    w = jnp.zeros((K, N), jnp.bfloat16)
+    s = jnp.zeros((K, N), jnp.float32)
+    g = jnp.zeros((M, N), jnp.bfloat16)
+
+    def fwd_bwd(x, w, s, g):
+        y, vjp = jax.vjp(lambda x_, s_: ops.masked_dense(x_, w, s_, 0),
+                         x, s)
+        return y, vjp(g)
+
+    jx = jax.make_jaxpr(fwd_bwd)(x, w, s, g)
+    rules = [jaxpr_lint.weight_f32_temporaries((K, N)),
+             jaxpr_lint.mask_materialization((K, N)),
+             jaxpr_lint.DtypePromotionRule([(K, N)]),
+             jaxpr_lint.DonationAliasRule()]
+    found = jaxpr_lint.lint_jaxpr(jx, rules)
+    errors.extend(f"jaxpr[kernel] {f}" for f in found)
+    print(f"# repro_lint[jaxpr] kernel fwd+bwd: {len(found)} "
+          "finding(s)")
+
+    # whole-model level: fused train step of each aligned family; the
+    # bf16→f32 shape check stays off here (a (128, 128) activation can
+    # legitimately share a block shape at model scale — the kernel-
+    # level pass above is the precise home for that rule)
+    for fam, (cfg, S) in model_check.MODEL_CHECK_CFGS.items():
+        api, state, batch = model_check.model_step_setup(cfg, S=S)
+        scfg = steplib.StepConfig(lam=0.1, lr=0.5)
+        jx, _ = model_check.trace_model_step(api, state, batch, scfg,
+                                             eff_path=False)
+        shapes = model_check.masked_block_shapes(state)
+        rules = [jaxpr_lint.weight_f32_temporaries(sh)
+                 for sh in shapes]
+        rules += [jaxpr_lint.mask_materialization(sh)
+                  for sh in shapes]
+        rules.append(jaxpr_lint.DtypePromotionRule())
+        rules.append(jaxpr_lint.DonationAliasRule())
+        found = jaxpr_lint.lint_jaxpr(jx, rules)
+        errors.extend(f"jaxpr[{fam}] {f}" for f in found)
+        print(f"# repro_lint[jaxpr] {fam}: {len(shapes)} block "
+              f"shapes, {len(found)} finding(s)")
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--engines", default="source,stream,jaxpr",
+                   help="comma-separated subset of source,stream,jaxpr")
+    p.add_argument("--archs", default="all",
+                   help="'all' (full registry zoo) or comma-separated "
+                        "names, for the stream engine")
+    p.add_argument("--devices", type=int, default=8,
+                   help="simulated shard ids swept by the stream "
+                        "engine (mask_stream_seed is pure: no real "
+                        "devices needed)")
+    p.add_argument("--cohorts", type=int, default=2)
+    p.add_argument("--seed", type=int, default=17)
+    args = p.parse_args(argv)
+
+    engines = {e.strip() for e in args.engines.split(",") if e.strip()}
+    unknown = engines - {"source", "stream", "jaxpr"}
+    if unknown:
+        print(f"unknown engine(s): {sorted(unknown)}", file=sys.stderr)
+        return 2
+
+    errors: list = []
+    if "source" in engines:
+        run_source(errors)
+    if "stream" in engines:
+        if args.archs == "all":
+            from repro.configs import ARCH_NAMES
+            archs = list(ARCH_NAMES)
+        else:
+            archs = [a.strip() for a in args.archs.split(",")
+                     if a.strip()]
+        run_stream(errors, archs, args.devices, args.cohorts,
+                   args.seed)
+    if "jaxpr" in engines:
+        run_jaxpr(errors)
+    return finish("repro_lint", errors)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
