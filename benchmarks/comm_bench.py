@@ -1,0 +1,189 @@
+#!/usr/bin/env python
+"""Static per-round communication tables -> BENCH_comm.json.
+
+For every mask-round algorithm in the launch registry, trace the pod
+round step on the forced 8-device debug pod mesh ((2, 2, 2) x
+("pod", "data", "model")), lint its collectives for wire purity
+(`repro.analysis.collective_lint` — any finding fails the run), and
+serialize the static cost model (`repro.analysis.comm_model`): bytes
+per collective per mesh axis, accounting uplink/downlink bits, and the
+derived ``bpp_wire``.  A bf16-psum "unpacked" contrast row rides along
+(it MUST trip the purity rule — that is recorded, not fatal).
+
+``--validate`` additionally executes one real `fedpm_reg` round under
+the bitpack codec and cross-checks the static uplink prediction
+against the CommLedger-style ``bits_measured`` metric (tolerance 2% —
+the only slack is per-leaf word padding vs pooled alignment), plus the
+analytic downlink formula exactly.
+
+CI (the ``lint`` job) regenerates the JSON and diffs it against the
+committed baseline via ``tools/check_comm.py``.
+
+Usage:
+    PYTHONPATH=src python benchmarks/comm_bench.py \
+        [--arch internlm2-1.8b] [--cohorts 2] [--codec bitpack] \
+        [--json BENCH_comm.json] [--validate] [--md]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import sys        # noqa: E402
+
+import jax        # noqa: E402
+
+from repro.analysis import collective_lint, comm_model  # noqa: E402
+from repro.configs import get_config                     # noqa: E402
+from repro.core import masking                           # noqa: E402
+from repro.launch import mesh as meshlib                 # noqa: E402
+from repro.launch import plans                           # noqa: E402
+from repro.launch import sharding as shd                 # noqa: E402
+from repro.launch import steps as steplib                # noqa: E402
+from repro.models import build_model                     # noqa: E402
+
+TOLERANCE = 0.02
+
+
+def run_validation(arch: str, mesh, C: int, codec: str) -> dict:
+    """One REAL fedpm_reg round: measured wire bits vs the static
+    prediction from the same trace."""
+    api = build_model(get_config(arch, smoke=True))
+    scfg = steplib.StepConfig(packed_masks=True,
+                              **plans.MASK_ALGOS["fedpm_reg"])
+    jxp, state_shapes, state_sh = comm_model.trace_round_jaxpr(
+        api, scfg, mesh, C, codec=codec)
+    model = comm_model.round_comm_model(jxp, state_shapes, state_sh,
+                                        mesh, scfg)
+    state = steplib.init_fed_state(jax.random.PRNGKey(scfg.seed), api,
+                                   masking.MaskSpec(), C)
+    step = jax.jit(
+        steplib.make_round_step(api, scfg, mesh=mesh,
+                                state_sh=state_sh, codec=codec),
+        in_shardings=(state_sh,),
+        out_shardings=(state_sh, shd.replicated(mesh)))
+    _, metrics = step(state)
+    measured = float(metrics["bits_measured"])
+    static = float(model["uplink_bits"])
+    rel = abs(static - measured) / max(measured, 1.0)
+    dl_static = float(model["downlink_bits"])
+    dl_measured = float(metrics["downlink_bits"])
+    return {
+        "arch": arch, "codec": codec,
+        "static_uplink_bits": int(static),
+        "measured_uplink_bits": int(measured),
+        "rel_err": round(rel, 6),
+        "tolerance": TOLERANCE,
+        "static_downlink_bits": dl_static,
+        "measured_downlink_bits": dl_measured,
+        "ok": bool(rel <= TOLERANCE and dl_static == dl_measured),
+    }
+
+
+def to_markdown(doc: dict) -> str:
+    """The DESIGN.md §2 wire-cost table: collective -> mesh axis ->
+    bytes/round, per algorithm (sites aggregated by kind)."""
+    lines = [
+        "| algorithm | collective | axes | sites | payload bits/shard "
+        "| ring send B/device | role |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    tables = dict(doc["algos"])
+    tables["fedpm_reg (unpacked bf16)"] = doc["unpacked_contrast"]
+    for algo, tab in tables.items():
+        agg = {}
+        for r in tab["sites"]:
+            key = (r["prim"], "x".join(r["axes"]) or "-", r["role"])
+            n, pb, rb = agg.get(key, (0, 0, 0.0))
+            agg[key] = (n + 1, pb + r["payload_bits_per_shard"],
+                        rb + r["ring_send_bytes_per_device"])
+        for (prim, axes, role), (n, pb, rb) in sorted(agg.items()):
+            lines.append(f"| {algo} | {prim} | {axes} | {n} | {pb} "
+                         f"| {rb:.0f} | {role} |")
+        lines.append(f"| {algo} | **total** |  | {tab['n_sites']} "
+                     f"| bpp_wire={tab['bpp_wire']} "
+                     f"| uplink={tab['uplink_bits']}b | |")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--cohorts", type=int, default=2)
+    ap.add_argument("--codec", default="bitpack")
+    ap.add_argument("--json", default=None,
+                    help="write the tables to this path")
+    ap.add_argument("--validate", action="store_true",
+                    help="execute a real round and cross-check the "
+                         "static prediction against measured bits")
+    ap.add_argument("--md", action="store_true",
+                    help="print the DESIGN.md wire-cost table")
+    args = ap.parse_args(argv)
+
+    mesh = meshlib.make_debug_pod_mesh()
+    errors = []
+    doc = {
+        "meta": {
+            "arch": args.arch, "smoke": True, "codec": args.codec,
+            "cohorts": args.cohorts,
+            "mesh": {"shape": [int(mesh.shape[a])
+                               for a in mesh.axis_names],
+                     "axes": list(mesh.axis_names)},
+            "jax": jax.__version__,
+        },
+        "algos": {},
+    }
+
+    for algo in sorted(plans.MASK_ALGOS):
+        rep = collective_lint.arch_collective_report(
+            args.arch, algo, mesh=mesh, C=args.cohorts,
+            codec=args.codec)
+        for f in rep["findings"]:
+            errors.append(f"{algo}: {f}")
+        doc["algos"][algo] = rep["model"]
+        print(f"# comm_bench {algo}: {rep['n_sites']} sites, "
+              f"bpp_wire={rep['model']['bpp_wire']}, "
+              f"{len(rep['findings'])} purity finding(s)")
+
+    contrast = collective_lint.arch_collective_report(
+        args.arch, "fedpm_reg", mesh=mesh, C=args.cohorts,
+        codec=args.codec, packed=False)
+    doc["unpacked_contrast"] = dict(
+        contrast["model"],
+        purity_findings=len(contrast["findings"]))
+    print(f"# comm_bench fedpm_reg(unpacked): "
+          f"bpp_wire={contrast['model']['bpp_wire']}, "
+          f"{len(contrast['findings'])} purity finding(s) "
+          "(impure by construction)")
+    if not contrast["findings"]:
+        errors.append("unpacked contrast fired zero purity findings "
+                      "(rule went dead)")
+
+    if args.validate:
+        v = run_validation(args.arch, mesh, args.cohorts, args.codec)
+        doc["validation"] = v
+        print(f"# comm_bench validate: static={v['static_uplink_bits']}"
+              f"b measured={v['measured_uplink_bits']}b "
+              f"rel_err={v['rel_err']} (tol {v['tolerance']})")
+        if not v["ok"]:
+            errors.append(f"static-vs-measured drift: {v}")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"# comm_bench: wrote {args.json}")
+    if args.md:
+        print(to_markdown(doc))
+
+    for e in errors:
+        print(f"FAIL {e}")
+    print(f"# comm_bench: {len(errors) or 'ok'}"
+          + ("" if not errors else " failure(s)"))
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,6 @@
 """repro.analysis — static guards for the mask-native invariants.
 
-Three engines (docs/DESIGN.md §Analysis) behind one CLI
+Five engines (docs/DESIGN.md §Analysis) behind one CLI
 (``tools/repro_lint.py``, the CI ``lint`` job):
 
   * ``jaxpr_lint``   — rule-based closed-jaxpr walker (weight-shaped
@@ -14,14 +14,27 @@ Three engines (docs/DESIGN.md §Analysis) behind one CLI
   * ``source_lint``  — AST rules over the ``src/`` tree (bare
     PRNGKeys, kernel-oracle completeness, env-knob docs, the
     materializing-call allowlist).
+  * ``collective_lint`` + ``comm_model`` — wire purity of the round
+    step's collectives (only packed uint32 words, float-sidecar
+    leaves, and scalar metrics may cross) and the static per-round
+    cost model (bytes per collective per mesh axis per algorithm,
+    cross-validated against the CommLedger on a real mesh; the
+    committed ``BENCH_comm.json`` tables).
+  * ``shard_lint``   — `launch/sharding.py` annotations vs reality:
+    big leaves the divisibility heuristic silently replicated
+    (`sharding.explain_spec` traces), and declared NamedShardings vs
+    the compiled executable's actual input shardings.
 
 ``model_check`` carries the MXU-aligned whole-model configs the jaxpr
 gate runs end-to-end on (import it directly — it pulls the model zoo).
 """
+from repro.analysis.comm_model import (CollectiveSite,
+                                       collect_collective_sites)
 from repro.analysis.jaxpr_lint import (count_weight_f32_defs,
                                        count_weight_f32_defs_jaxpr,
                                        lint_jaxpr)
 from repro.analysis.report import Finding
 
-__all__ = ["Finding", "count_weight_f32_defs",
-           "count_weight_f32_defs_jaxpr", "lint_jaxpr"]
+__all__ = ["CollectiveSite", "Finding", "collect_collective_sites",
+           "count_weight_f32_defs", "count_weight_f32_defs_jaxpr",
+           "lint_jaxpr"]

@@ -1,0 +1,115 @@
+"""Wire-purity rules over the round step's collectives.
+
+The packed uplink's contract (docs/DESIGN.md §2): the ONLY values that
+may cross a collective in the mask round are
+
+  * bit-packed uint32 word streams (the 1 Bpp uplink itself),
+  * the float sidecar leaves' FedAvg pmean — per-shard float-tree
+    shapes, cohort axis included — and
+  * O(1) scalar metrics (the pooled bits_total psum).
+
+Everything else is a leak: an f32 score/weight tree in an `all_gather`
+inflates real traffic 32x over the measured codec number; an unpacked
+bool/uint8 mask inflates it 8x.  `CollectivePurityRule` enforces the
+contract as a strict allowlist over every collective operand the
+shared `jaxpr_lint` walker can reach (shard_map bodies and
+scan/cond/pjit sub-jaxprs included), so the CommLedger's measured
+bits and the wire's actual payload cannot drift apart silently.
+
+Findings carry two rule names:
+  * ``collective-f32-weight``   — a non-allowlisted float operand;
+  * ``collective-unpacked-mask`` — a mask-sized bool/uint8/int8 (or
+    other non-u32 integer) operand.
+
+Demonstrated by `tests/analysis_fixtures/bad_collective.py`; the
+clean-at-HEAD twin lives in `tests/test_collective.py` and the dryrun
+gate (`launch/dryrun.py` raises on any finding when lowering a round
+cell).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.analysis import comm_model
+from repro.analysis.jaxpr_lint import JaxprRule, lint_jaxpr
+from repro.analysis.report import Finding
+
+# collective operands with at most this many non-u32 integer elements
+# are treated as O(1) bookkeeping, not a mask stream
+_SCALAR_SLACK_ELEMS = 32
+
+
+class CollectivePurityRule(JaxprRule):
+    """Strict allowlist over collective operands (see module doc)."""
+
+    name = "collective-wire-purity"
+
+    def __init__(self, allowed_float_shapes=frozenset(), *,
+                 max_small_elems: int = _SCALAR_SLACK_ELEMS):
+        self._allowed = frozenset(tuple(s) for s in allowed_float_shapes)
+        self._max_small = max_small_elems
+
+    def check_eqn(self, eqn):
+        if eqn.primitive.name not in comm_model.COLLECTIVE_PRIMS:
+            return ()
+        axes = eqn.params.get("axes") or eqn.params.get("axis_name") \
+            or ()
+        out = []
+        for v in eqn.invars:
+            aval = getattr(v, "aval", None)
+            if aval is None or not hasattr(aval, "dtype"):
+                continue
+            shape = tuple(int(s) for s in aval.shape)
+            if shape == ():          # O(1) scalar metrics
+                continue
+            dt = jnp.dtype(aval.dtype)
+            elems = int(math.prod(shape))
+            where = f"{eqn.primitive.name}[{','.join(map(str, axes))}]"
+            if dt == jnp.dtype(jnp.uint32):
+                continue             # packed words
+            if jnp.issubdtype(dt, jnp.floating):
+                if shape in self._allowed:
+                    continue         # float-sidecar pmean
+                out.append(Finding(
+                    "collective-f32-weight", where,
+                    f"{dt}{list(shape)} operand is not a packed word "
+                    f"stream, a float-sidecar leaf, or a scalar"))
+            elif elems > self._max_small:
+                out.append(Finding(
+                    "collective-unpacked-mask", where,
+                    f"{dt}{list(shape)} operand: unpacked mask-sized "
+                    f"integer data on the wire"))
+        return out
+
+
+def purity_findings(jaxpr, allowed_float_shapes=frozenset()) -> list:
+    """Run the purity rule over one traced function."""
+    return lint_jaxpr(jaxpr,
+                      [CollectivePurityRule(allowed_float_shapes)])
+
+
+def round_purity_findings(jaxpr, state_shapes, state_sh, mesh) -> list:
+    """Purity findings for a traced round step: the float allowlist is
+    derived from the state's own per-shard float-sidecar shapes."""
+    allowed = comm_model.float_shard_shapes(state_shapes, state_sh,
+                                            mesh)
+    return purity_findings(jaxpr, allowed)
+
+
+def arch_collective_report(arch: str, algo: str = "fedpm_reg", *,
+                           mesh=None, C: Optional[int] = None,
+                           smoke: bool = True, codec: str = "bitpack",
+                           packed: bool = True) -> dict:
+    """Trace one (arch, algorithm) round cell, lint its collectives,
+    and return the findings together with the static cost model."""
+    model = comm_model.arch_round_comm_model(
+        arch, algo, mesh=mesh, C=C, smoke=smoke, codec=codec,
+        packed=packed)
+    jxp, state_shapes, state_sh, _scfg, mesh_used = model.pop("_trace")
+    findings = round_purity_findings(jxp, state_shapes, state_sh,
+                                     mesh_used)
+    return {"findings": findings, "model": model,
+            "n_sites": model["n_sites"]}

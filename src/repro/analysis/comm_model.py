@@ -1,0 +1,311 @@
+"""Static per-round communication model from the round-step jaxpr.
+
+The CommLedger measures what the codec says a round costs; nothing in
+that number proves the COLLECTIVES move the same amount.  This module
+closes the gap from the static side: walk the traced round step with
+the shared `jaxpr_lint` walker (descending `scan`/`cond`/`pjit`
+sub-jaxprs and the `shard_map` body), record every collective operand
+as a `CollectiveSite`, classify each site against the state's per-shard
+shapes, and sum a predicted per-round wire cost — per collective, per
+mesh axis, per algorithm (docs/DESIGN.md §2, §Analysis).
+
+Two cost views per site:
+
+  * accounting bits — operand bits x the number of executing shards;
+    for the packed uint32 `all_gather` sites this is EXACTLY the number
+    the CommLedger meters under the bitpack codec (every shard's pooled
+    word stream, counted once), so the static and dynamic accounting
+    can be cross-validated on a real mesh (`benchmarks/comm_bench.py
+    --validate`, tolerance 2%);
+  * ring bytes — what a ring implementation of the collective sends
+    per device along its axis group (all_gather S*(A-1); psum
+    2*S*(A-1)/A; reduce_scatter / all_to_all S*(A-1)/A; ppermute S).
+
+The headline derived quantity is ``bpp_wire`` = uplink accounting bits
+/ (cohorts x global mask params): the packed round step's masks cross
+the pod axis at 1 bit per parameter per cohort plus word-padding slack
+(<= 32 bits per leaf per cohort per shard); the bf16-psum baseline
+crosses at 16.  That is the paper's <= 1 Bpp claim, read off the jaxpr
+instead of asserted.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.jaxpr_lint import JaxprRule, lint_jaxpr
+
+# every cross-device data-moving primitive jax can put in a jaxpr (the
+# *_invariant names are defensive: newer jax versions split the
+# replication-checked variants out)
+COLLECTIVE_PRIMS = frozenset({
+    "all_gather", "all_gather_invariant",
+    "psum", "psum_invariant", "psum2",
+    "ppermute", "pbroadcast",
+    "all_to_all", "reduce_scatter",
+    "pmax", "pmin", "pgather",
+})
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveSite:
+    """One operand of one collective equation in the round jaxpr."""
+    prim: str
+    axes: tuple          # mesh axis names the collective runs over
+    shape: tuple         # per-shard operand shape
+    dtype: str
+    bits: int            # per-shard operand bits
+
+    @property
+    def elems(self) -> int:
+        return int(math.prod(self.shape)) if self.shape else 1
+
+
+class _CollectSites(JaxprRule):
+    """Walker rule that records collective operands instead of failing."""
+
+    name = "collect-collectives"
+
+    def __init__(self):
+        self.sites: list = []
+
+    def check_eqn(self, eqn):
+        if eqn.primitive.name not in COLLECTIVE_PRIMS:
+            return ()
+        axes = eqn.params.get("axes") or eqn.params.get("axis_name") or ()
+        if not isinstance(axes, (tuple, list)):
+            axes = (axes,)
+        axes = tuple(str(a) for a in axes)
+        for v in eqn.invars:
+            aval = getattr(v, "aval", None)
+            if aval is None or not hasattr(aval, "dtype"):
+                continue
+            shape = tuple(int(s) for s in aval.shape)
+            nbits = jnp.dtype(aval.dtype).itemsize * 8
+            self.sites.append(CollectiveSite(
+                prim=eqn.primitive.name, axes=axes, shape=shape,
+                dtype=str(aval.dtype),
+                bits=int(math.prod(shape)) * nbits if shape else nbits))
+        return ()
+
+
+def collect_collective_sites(jaxpr) -> list:
+    """Every `CollectiveSite` in `jaxpr`, sub-jaxprs included."""
+    rule = _CollectSites()
+    lint_jaxpr(jaxpr, [rule])
+    return rule.sites
+
+
+# ---------------------------------------------------------------------------
+# per-shard shape arithmetic (PartitionSpec -> local shapes)
+# ---------------------------------------------------------------------------
+
+
+def shard_shape(shape, spec, mesh) -> tuple:
+    """Local (per-device) shape of a global `shape` under `spec`."""
+    out = list(int(s) for s in shape)
+    for d, entry in enumerate(tuple(spec)):
+        if entry is None:
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        k = 1
+        for a in names:
+            k *= int(mesh.shape[a])
+        out[d] //= k
+    return tuple(out)
+
+
+def _leaves_with_specs(tree_shapes, tree_sh):
+    nn = lambda x: x is None
+    shapes = jax.tree_util.tree_leaves(tree_shapes, is_leaf=nn)
+    shs = jax.tree_util.tree_leaves(tree_sh, is_leaf=nn)
+    return [(l, s.spec) for l, s in zip(shapes, shs)
+            if l is not None and s is not None]
+
+
+def float_shard_shapes(state_shapes, state_sh, mesh) -> frozenset:
+    """Per-shard shapes of the float-sidecar leaves (cohort axis
+    included) — the ONLY non-scalar float shapes allowed to cross a
+    collective on the packed round path (their FedAvg pmean)."""
+    return frozenset(shard_shape(l.shape, spec, mesh)
+                     for l, spec in _leaves_with_specs(
+                         state_shapes["floats"], state_sh["floats"]))
+
+
+def mask_shard_sizes(state_shapes, state_sh, mesh) -> frozenset:
+    """Per-shard flat mask-stream sizes (cohort axis stripped, and with
+    it) for every score leaf — the shapes an unpacked mask or raw score
+    tree would have if it crossed a collective."""
+    sizes = set()
+    for l, spec in _leaves_with_specs(state_shapes["scores"],
+                                      state_sh["scores"]):
+        sh = shard_shape(l.shape, spec, mesh)
+        body = int(math.prod(sh[1:])) if len(sh) > 1 else 1
+        sizes.add(body)            # one cohort's stream
+        sizes.add(body * sh[0])    # all local cohorts pooled
+    return frozenset(sizes)
+
+
+def mask_totals(state_shapes) -> tuple:
+    """(cohorts, global mask params) — mirrors the round step's
+    `_comm_totals` on the static shapes."""
+    C, n = 1, 0
+    for s in jax.tree_util.tree_leaves(state_shapes["scores"],
+                                       is_leaf=lambda x: x is None):
+        if s is None:
+            continue
+        C = s.shape[0]
+        n += int(math.prod(s.shape[1:]))
+    return C, n
+
+
+# ---------------------------------------------------------------------------
+# tracing the round step (shape-only: eval_shape state, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def trace_round_jaxpr(api, scfg, mesh, C: int, codec=None,
+                      optimizer: str = "momentum"):
+    """(jaxpr, state_shapes, state_sh) of the mesh round step."""
+    from repro.core import masking
+    from repro.launch import steps as steplib
+
+    state_shapes = jax.eval_shape(
+        lambda k: steplib.init_fed_state(k, api, masking.MaskSpec(), C,
+                                         optimizer=optimizer),
+        jax.random.PRNGKey(0))
+    state_sh = steplib.fed_state_shardings(state_shapes, mesh)
+    fn = steplib.make_round_step(api, scfg, mesh=mesh, state_sh=state_sh,
+                                 codec=codec)
+    return jax.make_jaxpr(fn)(state_shapes), state_shapes, state_sh
+
+
+# ---------------------------------------------------------------------------
+# the static cost model
+# ---------------------------------------------------------------------------
+
+# ring-algorithm send volume per device for a per-shard payload of S
+# bytes over an axis group of size A
+def _ring_send_bytes(prim: str, S: float, A: int) -> float:
+    if A <= 1:
+        return 0.0
+    if prim.startswith("all_gather"):
+        return S * (A - 1)
+    if prim.startswith("psum") or prim in ("pmax", "pmin"):
+        return 2.0 * S * (A - 1) / A
+    if prim in ("reduce_scatter", "all_to_all"):
+        return S * (A - 1) / A
+    if prim in ("ppermute", "pbroadcast", "pgather"):
+        return float(S)
+    return float(S)
+
+
+def classify_site(site: CollectiveSite, *, float_shapes=frozenset(),
+                  mask_sizes=frozenset()) -> str:
+    """uplink | metric | sidecar | mask-unpacked | other."""
+    if site.shape == ():
+        return "metric"
+    if site.dtype == "uint32" and site.prim.startswith("all_gather"):
+        return "uplink"
+    if site.dtype.startswith(("float", "bfloat")):
+        if site.shape in float_shapes:
+            return "sidecar"
+        if site.elems in mask_sizes:
+            return "mask-unpacked"   # the bf16-psum baseline's crossing
+    return "other"
+
+
+def round_comm_model(jaxpr, state_shapes, state_sh, mesh, scfg) -> dict:
+    """Static per-round cost table for one traced round step.
+
+    ``uplink_bits`` counts every shard's uplink payload once (the
+    FL-accounting view the CommLedger meters); for the unpacked
+    baseline the bf16 mask psums are counted as the uplink.  Downlink
+    mirrors the round step's analytic `_comm_metrics` formula (theta
+    broadcast is not a collective in the jaxpr: the post-round state
+    carries it)."""
+    sites = collect_collective_sites(jaxpr)
+    fshapes = float_shard_shapes(state_shapes, state_sh, mesh)
+    msizes = mask_shard_sizes(state_shapes, state_sh, mesh)
+    n_dev = int(mesh.size)
+    C, n_glob = mask_totals(state_shapes)
+
+    rows, uplink_bits = [], 0
+    per_axis: dict = {}
+    per_kind: dict = {}
+    for s in sites:
+        A = 1
+        for a in s.axes:
+            if a in mesh.axis_names:
+                A *= int(mesh.shape[a])
+        role = classify_site(s, float_shapes=fshapes, mask_sizes=msizes)
+        ring = _ring_send_bytes(s.prim, s.bits / 8.0, A)
+        rows.append({
+            "prim": s.prim, "axes": list(s.axes), "axis_size": A,
+            "dtype": s.dtype, "shape": list(s.shape), "role": role,
+            "payload_bits_per_shard": s.bits,
+            "ring_send_bytes_per_device": round(ring, 1),
+        })
+        if role in ("uplink", "mask-unpacked"):
+            uplink_bits += s.bits * n_dev
+        ax = "x".join(s.axes) or "-"
+        per_axis[ax] = per_axis.get(ax, 0.0) + ring * n_dev
+        per_kind[s.prim] = per_kind.get(s.prim, 0.0) + ring * n_dev
+
+    dl_bpp = float(scfg.downlink_bits) if scfg.downlink_bits else 32.0
+    return {
+        "mesh": {"shape": [int(mesh.shape[a]) for a in mesh.axis_names],
+                 "axes": list(mesh.axis_names), "n_devices": n_dev},
+        "cohorts": C,
+        "mask_params": n_glob,
+        "n_sites": len(rows),
+        "sites": rows,
+        "uplink_bits": int(uplink_bits),
+        "bpp_wire": round(uplink_bits / float(C * n_glob), 4)
+        if n_glob else 0.0,
+        "downlink_bpp": dl_bpp,
+        "downlink_bits": float(dl_bpp * n_glob * C),
+        "ring_bytes_per_axis": {k: round(v, 1)
+                                for k, v in sorted(per_axis.items())},
+        "ring_bytes_per_prim": {k: round(v, 1)
+                                for k, v in sorted(per_kind.items())},
+    }
+
+
+def arch_round_comm_model(arch: str, algo: str = "fedpm_reg", *,
+                          mesh=None, C: Optional[int] = None,
+                          smoke: bool = True, codec: str = "bitpack",
+                          packed: bool = True,
+                          downlink_bits: int = 0) -> dict:
+    """Cost model for one (arch, algorithm) registry cell.  Returns the
+    `round_comm_model` dict plus the traced artifacts under "_trace"
+    (stripped before serialization by the bench)."""
+    from repro.configs import get_config
+    from repro.launch import mesh as meshlib
+    from repro.launch import plans, steps as steplib
+    from repro.models import build_model
+
+    if algo not in plans.MASK_ALGOS:
+        raise ValueError(f"algorithm {algo!r} has no mask round step "
+                         f"(known: {sorted(plans.MASK_ALGOS)})")
+    if mesh is None:
+        mesh = meshlib.make_debug_pod_mesh()
+    if C is None:
+        C = max(steplib.n_cohorts(mesh), 1)
+    api = build_model(get_config(arch, smoke=smoke))
+    scfg = steplib.StepConfig(packed_masks=packed,
+                              downlink_bits=downlink_bits,
+                              **plans.MASK_ALGOS[algo])
+    jxp, state_shapes, state_sh = trace_round_jaxpr(api, scfg, mesh, C,
+                                                    codec=codec)
+    model = round_comm_model(jxp, state_shapes, state_sh, mesh, scfg)
+    model["arch"] = arch
+    model["algo"] = algo
+    model["codec"] = codec
+    model["packed"] = packed
+    model["_trace"] = (jxp, state_shapes, state_sh, scfg, mesh)
+    return model

@@ -1,0 +1,157 @@
+"""Declared-vs-actual sharding lint for the launch layer.
+
+Two independent checks (docs/DESIGN.md §Analysis):
+
+  * silent replication — `launch/sharding.py`'s heuristics only shard
+    a dim when the mesh axis size divides it; when nothing divides, the
+    leaf silently replicates and every device stores (and, with
+    optimizer state, updates) the full tensor.  `explain_spec` now
+    records each skipped dim; this engine flags leaves whose spec came
+    out fully replicated WITH at least one recorded skip and a body
+    big enough to matter (deliberately replicated norms/scalars record
+    no skips and never fire).  Rule name: ``shard-silent-replication``
+    (fixture: `tests/analysis_fixtures/bad_sharding.py`).
+
+  * declared vs lowered — the NamedShardings the launch layer declares
+    must be the shardings the compiled executable actually ingests;
+    `compiled.input_shardings` is compared leaf-by-leaf (rule name:
+    ``shard-spec-mismatch``).  A mismatch means jit resharded (or XLA
+    overrode) an input behind the launcher's back — an extra
+    all-to-all on every step that no ledger meters.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+
+from repro.analysis.report import Finding
+from repro.launch import sharding as shd
+
+# replicated bodies smaller than this are noise, not a capacity problem
+_MIN_ELEMS = 1024
+
+
+def silent_replication_report(tree_shapes, mesh, *, scan_dims_fn=None,
+                              min_elems: int = _MIN_ELEMS,
+                              label: str = "") -> dict:
+    """Explain every leaf's spec; flag big fully-replicated leaves
+    whose replication came from divisibility skips, not policy."""
+    nn = lambda x: x is None
+    findings, explanations = [], []
+
+    def one(path, leaf):
+        if leaf is None:
+            return
+        p = shd._path_str(path)
+        sd = (scan_dims_fn(p, leaf) if scan_dims_fn
+              else shd._default_scan_dims(p))
+        sd = min(sd, max(len(leaf.shape) - 1, 0))
+        ex = shd.explain_spec(p, leaf.shape, mesh, scan_dims=sd)
+        explanations.append(ex)
+        body = leaf.shape[sd:]
+        if (ex.skipped and all(e is None for e in tuple(ex.spec))
+                and int(math.prod(body)) >= min_elems):
+            findings.append(Finding(
+                "shard-silent-replication",
+                f"{label}{p}",
+                f"{list(leaf.shape)} fully replicated by fallback: "
+                + "; ".join(ex.skipped)))
+
+    jax.tree_util.tree_map_with_path(
+        lambda path, leaf: one(path, leaf), tree_shapes, is_leaf=nn)
+    return {"findings": findings, "explanations": explanations}
+
+
+def input_sharding_mismatches(compiled, declared, shapes_tree,
+                              label: str = "") -> list:
+    """Compare `compiled.input_shardings` against the declared
+    NamedSharding tree for the SAME (single-argument) pytree.  jit
+    prunes arguments the step never reads (the round step's opt_m is
+    zeroed, not read), so the declared list is aligned through the
+    executable's kept-variable indices before comparing."""
+    nn = lambda x: x is None
+    decl = [x for x in jax.tree_util.tree_leaves(declared, is_leaf=nn)
+            if x is not None]
+    shapes = [x for x in
+              jax.tree_util.tree_leaves(shapes_tree, is_leaf=nn)
+              if x is not None]
+    paths = [shd._path_str(p) for p, x in
+             jax.tree_util.tree_flatten_with_path(
+                 shapes_tree, is_leaf=nn)[0]
+             if x is not None]
+    actual = list(jax.tree_util.tree_leaves(compiled.input_shardings[0]))
+    kept = getattr(getattr(compiled, "_executable", None),
+                   "_kept_var_idx", None)
+    if kept is not None and len(actual) != len(decl):
+        idxs = sorted(kept)
+        if len(idxs) == len(actual) and (not idxs
+                                         or idxs[-1] < len(decl)):
+            decl = [decl[i] for i in idxs]
+            shapes = [shapes[i] for i in idxs]
+            paths = [paths[i] for i in idxs]
+    if len(actual) != len(decl):
+        return [Finding(
+            "shard-spec-mismatch", label or "<args>",
+            f"flattened arity drift: {len(decl)} declared vs "
+            f"{len(actual)} lowered input shardings")]
+    out = []
+    for p, d, a, s in zip(paths, decl, actual, shapes):
+        if not a.is_equivalent_to(d, len(s.shape)):
+            out.append(Finding(
+                "shard-spec-mismatch", f"{label}{p}",
+                f"declared {d.spec} but the executable ingests {a}"))
+    return out
+
+
+def round_shard_report(api, scfg, mesh, C: int, codec=None) -> dict:
+    """Both checks over one round cell: silent replication across the
+    federated state, and declared-vs-lowered on the COMPILED round
+    step."""
+    from repro.core import masking
+    from repro.launch import steps as steplib
+
+    state_shapes = jax.eval_shape(
+        lambda k: steplib.init_fed_state(k, api, masking.MaskSpec(), C),
+        jax.random.PRNGKey(0))
+    state_sh = steplib.fed_state_shardings(state_shapes, mesh)
+    rep = silent_replication_report(state_shapes["weights"], mesh,
+                                    label="weights/")
+    fn = steplib.make_round_step(api, scfg, mesh=mesh,
+                                 state_sh=state_sh, codec=codec)
+    compiled = jax.jit(
+        fn, in_shardings=(state_sh,),
+        out_shardings=(state_sh, shd.replicated(mesh)),
+    ).lower(state_shapes).compile()
+    mism = input_sharding_mismatches(compiled, state_sh, state_shapes,
+                                     label="state/")
+    return {"findings": rep["findings"] + mism,
+            "explanations": rep["explanations"],
+            "n_leaves": len(rep["explanations"])}
+
+
+def arch_shard_report(arch: str, algo: str = "fedpm_reg", *,
+                      mesh=None, C: Optional[int] = None,
+                      smoke: bool = True, codec: str = "bitpack",
+                      compile_step: bool = False) -> dict:
+    """Registry-level entry: silent-replication over the arch's param
+    tree (always) and, with ``compile_step``, the full round-cell
+    declared-vs-lowered check."""
+    from repro.configs import get_config
+    from repro.launch import mesh as meshlib
+    from repro.launch import plans, steps as steplib
+    from repro.models import build_model
+
+    if mesh is None:
+        mesh = meshlib.make_debug_pod_mesh()
+    if C is None:
+        C = max(steplib.n_cohorts(mesh), 1)
+    api = build_model(get_config(arch, smoke=smoke))
+    if compile_step:
+        scfg = steplib.StepConfig(**plans.MASK_ALGOS[algo])
+        return round_shard_report(api, scfg, mesh, C, codec=codec)
+    params_shapes = jax.eval_shape(api.init_params,
+                                   jax.random.PRNGKey(0))
+    return silent_replication_report(params_shapes, mesh,
+                                     label=f"{arch}/")

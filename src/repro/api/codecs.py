@@ -479,6 +479,43 @@ class GolombRice(_PackedCodec):
         per = jnp.where(bits == 1, (gaps >> k) + 1 + k, 0)
         return _word_align(jnp.int32(32) + jnp.sum(per))
 
+    def measure_pooled_words(self, words: jax.Array,
+                             n: int) -> jax.Array:
+        """Bit-exact `measure_pooled_bits`, straight off the packed
+        uint32 words: a `lax.scan` carries the zero-run between words
+        while a 32-lane prev-one scan recovers each gap inside one —
+        the n-length mask is never materialized, so the metrics path
+        honors the same no-unpacked-mask rule the wire does (padding
+        bits beyond n are zero and only ever extend the final, unused
+        run)."""
+        if n == 0:
+            return jnp.int32(WORD_BITS)
+        ones = jnp.sum(
+            jax.lax.population_count(words).astype(jnp.int32))
+        k = _rice_k(jnp.int32(n), ones)
+        lanes = jnp.arange(WORD_BITS, dtype=jnp.int32)
+        ulanes = lanes.astype(jnp.uint32)
+
+        def word_body(carry, w):
+            run, acc = carry     # zeros since the previous one, bits
+            bit = ((w.astype(jnp.uint32) >> ulanes)
+                   & jnp.uint32(1)).astype(jnp.int32)
+            marked = jnp.where(bit == 1, lanes, -1)
+            last = jax.lax.associative_scan(jnp.maximum, marked)
+            prev = jnp.concatenate(
+                [jnp.full((1,), -1, jnp.int32), last[:-1]])
+            gap = jnp.where(prev < 0, lanes + run, lanes - prev - 1)
+            acc = acc + jnp.sum(
+                jnp.where(bit == 1, (gap >> k) + 1 + k, 0))
+            run = jnp.where(last[-1] < 0, run + WORD_BITS,
+                            WORD_BITS - 1 - last[-1])
+            return (run, acc), None
+
+        (_, total), _ = jax.lax.scan(
+            word_body, (jnp.int32(0), jnp.int32(0)),
+            words.reshape(-1))
+        return _word_align(jnp.int32(32) + total)
+
 
 class ArithmeticBernoulli(_PackedCodec):
     """Bernoulli-prior binary arithmetic coding of the pooled bits —

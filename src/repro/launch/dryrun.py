@@ -15,7 +15,10 @@ import traceback    # noqa: E402
 import jax          # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
-from repro.analysis import stream_cover  # noqa: E402
+from repro.analysis import collective_lint  # noqa: E402
+from repro.analysis import comm_model       # noqa: E402
+from repro.analysis import shard_lint       # noqa: E402
+from repro.analysis import stream_cover     # noqa: E402
 from repro.configs import get_config, ARCH_NAMES, SHAPES, LONG_CONTEXT_OK  # noqa: E402
 from repro.core import masking  # noqa: E402
 from repro.models import build_model  # noqa: E402
@@ -186,7 +189,10 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 
     t0 = time.time()
     results = {}
-    with jax.set_mesh(mesh):
+    # jax>=0.6 spells the context manager jax.set_mesh; on older
+    # wheels Mesh is itself a context manager
+    set_mesh = getattr(jax, "set_mesh", lambda m: m)
+    with set_mesh(mesh):
         if shape_cfg.kind == "train":
             state_shapes = jax.eval_shape(
                 lambda k: steplib.init_fed_state(k, api, spec, C), key)
@@ -220,11 +226,39 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
             if step_kind in ("auto", "round"):
                 fn = steplib.make_round_step(api, scfg, mesh=mesh,
                                              state_sh=state_sh)
-                lowered = jax.jit(
+                # ROADMAP gate: wire purity — on the packed uplink,
+                # nothing but uint32 mask words, the float-sidecar
+                # pmean, and O(1) scalar metrics may cross a round
+                # collective (repro.analysis.collective_lint)
+                jxp = jax.make_jaxpr(fn)(state_shapes)
+                purity = collective_lint.round_purity_findings(
+                    jxp, state_shapes, state_sh, mesh)
+                if packed and purity:
+                    raise AssertionError(
+                        "collective wire purity violated: "
+                        + "; ".join(str(f) for f in purity[:5]))
+                compiled = jax.jit(
                     fn, in_shardings=(state_sh,),
                     out_shardings=(state_sh, shd.replicated(mesh)),
-                ).lower(state_shapes)
-                results["round_step"] = _analyze(lowered, keep_hlo)
+                ).lower(state_shapes).compile()
+                results["round_step"] = _analyze_compiled(compiled,
+                                                          keep_hlo)
+                model = comm_model.round_comm_model(
+                    jxp, state_shapes, state_sh, mesh, scfg)
+                results["round_step"]["comm_model"] = {
+                    k: model[k] for k in
+                    ("bpp_wire", "uplink_bits", "downlink_bits",
+                     "n_sites", "ring_bytes_per_axis")}
+                # ROADMAP gate: the shardings the launcher declares
+                # must be the shardings the executable ingests — a
+                # drift is an unmetered per-step reshard
+                mism = shard_lint.input_sharding_mismatches(
+                    compiled, state_sh, state_shapes, label="state/")
+                if mism:
+                    raise AssertionError(
+                        "declared-vs-lowered sharding drift: "
+                        + "; ".join(str(f) for f in mism[:5]))
+                results["round_step"]["shard_lint"] = {"ok": True}
         elif shape_cfg.kind == "prefill":
             params_shapes = jax.eval_shape(api.init_params, key)
             params_sh = shd.tree_param_shardings(params_shapes, mesh,
@@ -258,9 +292,14 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 
 
 def _analyze(lowered, keep_hlo=False):
-    compiled = lowered.compile()
+    return _analyze_compiled(lowered.compile(), keep_hlo)
+
+
+def _analyze_compiled(compiled, keep_hlo=False):
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):        # older jax: one dict per program
+        cost = cost[0] if cost else None
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
     out = {

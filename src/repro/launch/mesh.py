@@ -25,6 +25,24 @@ def make_debug_mesh(n_data: int = 1, n_model: int = 1):
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_debug_pod_mesh(n_pod: int = 0, n_data: int = 0,
+                        n_model: int = 0):
+    """Smallest mesh with ALL THREE production axes — the pod axis is
+    what makes the round step's cross-cohort collectives appear, so the
+    comm-model/collective-lint gates trace on this mesh (a "data",
+    "model" debug mesh has no uplink at all).  With no arguments, picks
+    the largest of (2,2,2) / (2,2,1) / (2,1,1) / (1,1,1) that fits the
+    available devices (CI forces 8 via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)."""
+    if not (n_pod and n_data and n_model):
+        n = len(jax.devices())
+        n_pod, n_data, n_model = ((2, 2, 2) if n >= 8 else
+                                  (2, 2, 1) if n >= 4 else
+                                  (2, 1, 1) if n >= 2 else (1, 1, 1))
+    return jax.make_mesh((n_pod, n_data, n_model),
+                         ("pod", "data", "model"))
+
+
 def client_axes(mesh) -> tuple:
     """Mesh axes that carry federated clients (the 'uplink' axes)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -81,8 +81,19 @@ def _fedavg_plan(model_api, scfg: steplib.StepConfig, *, key, cohorts,
         round_fn=None, make_batch=_flat_batch)
 
 
-api.register_launch("fedpm_reg", _mask_plan("fedpm_reg"))
-api.register_launch("fedpm", _mask_plan("fedpm", force_lam=0.0))
-api.register_launch("fedmask", _mask_plan("fedmask", force_lam=0.0,
-                                          mask_mode="threshold"))
+# per-algorithm StepConfig overrides for the mask-round algorithms —
+# the single source both the launch registrations below and the
+# analysis engines (repro.analysis.comm_model / collective_lint) build
+# their round-step configs from, so the linted jaxpr is the launched
+# jaxpr
+MASK_ALGOS = {
+    "fedpm_reg": {},
+    "fedpm": {"lam": 0.0},
+    "fedmask": {"lam": 0.0, "mask_mode": "threshold"},
+}
+
+for _name, _kw in MASK_ALGOS.items():
+    api.register_launch(_name, _mask_plan(
+        _name, force_lam=_kw.get("lam"),
+        mask_mode=_kw.get("mask_mode")))
 api.register_launch("fedavg", _fedavg_plan)

@@ -16,6 +16,7 @@ candidate dim is tried — so every (arch x mesh) lowers cleanly.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any
 
 import jax
@@ -29,56 +30,85 @@ def _axis_size(mesh, name) -> int:
     return mesh.shape[name] if name in mesh.axis_names else 1
 
 
-def param_spec(path: str, shape, mesh, *, scan_dims: int = 1) -> P:
-    """PartitionSpec for a parameter-like leaf.
+@dataclasses.dataclass(frozen=True)
+class SpecExplanation:
+    """Why `param_spec` chose (or declined) a sharding for one leaf.
 
-    scan_dims: number of leading stacked axes (layers/groups) to skip.
-    """
+    ``rule`` names the decision branch that produced the spec;
+    ``skipped`` records every dim a branch TRIED to shard but could not
+    (divisibility / size), so a fully-replicated big leaf is
+    distinguishable from a deliberately replicated norm — the
+    silent-replication fallback used to be invisible, now
+    `repro.analysis.shard_lint` reports it."""
+    path: str
+    shape: tuple
+    spec: P
+    rule: str            # replicate-small | embed | moe-expert |
+    #                      generic | scalar
+    skipped: tuple       # human-readable per-dim skip reasons
+
+
+def explain_spec(path: str, shape, mesh, *,
+                 scan_dims: int = 1) -> SpecExplanation:
+    """`param_spec` with its decision trace (same spec, bit for bit)."""
     nd = len(shape)
     dmodel = _axis_size(mesh, "model")
     ddata = _axis_size(mesh, "data")
     spec = [None] * nd
+    skipped: list = []
+
+    def done(rule):
+        return SpecExplanation(path, tuple(shape), P(*spec), rule,
+                               tuple(skipped))
+
+    def try_dim(dim, axis, size):
+        if shape[dim] % size == 0:
+            spec[dim] = axis
+            return True
+        skipped.append(f"dim {dim % nd - nd} ({shape[dim]}) % "
+                       f"{axis} ({size}) != 0")
+        return False
+
     if nd == 0:
-        return P()
+        return done("scalar")
     lp = path.lower()
     # scalars / 1D / norms / small: replicate
     if nd <= scan_dims or all(s == 1 for s in shape):
-        return P(*spec)
-
-    body = list(range(scan_dims, nd)) if nd > scan_dims else []
-    if not body:
-        return P(*spec)
+        return done("replicate-small")
 
     # embeddings: (V, D) with no scan dim
     if "embed" in lp or "lm_head" in lp:
-        if shape[-2] % ddata == 0:
-            spec[-2] = "data"
-        if shape[-1] % dmodel == 0:
-            spec[-1] = "model"
-        return P(*spec)
+        try_dim(-2, "data", ddata)
+        try_dim(-1, "model", dmodel)
+        return done("embed")
 
     # MoE stacked experts: (..., E, d_in, d_out) — expert axis -> model.
     # (Tried F-on-data co-sharding for the block-dispatch einsum chain:
     # REFUTED — bytes +18%, collective +31%; see §Perf-log. Kept d_in.)
     if ("w_up" in lp or "w_gate" in lp or "w_down" in lp) and \
             nd - scan_dims == 3:
-        e_ax = nd - 3
-        if shape[e_ax] % dmodel == 0:
-            spec[e_ax] = "model"
-            if shape[-2] % ddata == 0:
-                spec[-2] = "data"
-            return P(*spec)
+        if try_dim(nd - 3, "model", dmodel):
+            try_dim(-2, "data", ddata)
+            return done("moe-expert")
+        # expert axis indivisible: fall through to the generic rule
 
     # generic 2D body: last -> model, second-to-last -> data
-    if shape[-1] % dmodel == 0:
-        spec[-1] = "model"
-    if nd - scan_dims >= 2 and shape[-2] % ddata == 0:
-        spec[-2] = "data"
+    try_dim(-1, "model", dmodel)
+    if nd - scan_dims >= 2:
+        try_dim(-2, "data", ddata)
     # 1D body (biases): shard on model if large & divisible
     if nd - scan_dims == 1 and shape[-1] % dmodel == 0 \
             and shape[-1] >= 4 * dmodel:
         spec[-1] = "model"
-    return P(*spec)
+    return done("generic")
+
+
+def param_spec(path: str, shape, mesh, *, scan_dims: int = 1) -> P:
+    """PartitionSpec for a parameter-like leaf.
+
+    scan_dims: number of leading stacked axes (layers/groups) to skip.
+    """
+    return explain_spec(path, shape, mesh, scan_dims=scan_dims).spec
 
 
 def _path_str(path) -> str:

@@ -1,0 +1,21 @@
+"""Fixture param trees that trip `repro.analysis.shard_lint`'s
+``shard-silent-replication`` rule: every dim of the big leaf is
+indivisible by every mesh axis size on the debug pod mesh, so
+`launch/sharding.py` falls back to full replication — silently, before
+`explain_spec` started recording the skipped dims.
+
+`tests/test_collective.py` asserts the rule fires here and stays quiet
+on the real registry trees.
+"""
+import jax
+
+# all dims odd/prime -> no axis of a (2, 2, 2) or (2, 2, 1) debug mesh
+# divides them; body is >> the 1024-element noise floor
+BAD_TREE_SHAPES = {
+    "blocks": {
+        # scan dim 3 is fine; (129, 257) replicates with skips
+        "w_odd": jax.ShapeDtypeStruct((3, 129, 257), "float32"),
+    },
+    # deliberately-replicated small leaf: must NOT fire
+    "norm": {"scale": jax.ShapeDtypeStruct((3, 7), "float32")},
+}

@@ -305,3 +305,46 @@ def test_degenerate_measure_matches_wire(name, kind):
         assert msg.wire_bits < 677
     else:
         assert msg.wire_bits <= 2 * 677
+
+
+# ---------------------------------------------------------------------------
+# packed-domain meters: measure_pooled_words == measure_pooled_bits
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ("bitpack", "golomb"))
+@pytest.mark.parametrize("n,p", ((1000, 0.03), (1024, 0.5), (64, 0.0),
+                                 (33, 1.0), (7, 0.3), (4096, 0.001)))
+def test_measure_pooled_words_matches_unpacked_meter(name, n, p):
+    """The packed-domain meter the round step uses (no unpack_bits on
+    the hot path) must agree bit-for-bit with the unpacked meter AND
+    with the serialized wire size."""
+    from repro.core import aggregation
+    codec = codecs.get_codec(name)
+    bits = (jax.random.uniform(jax.random.PRNGKey(n), (n,))
+            < p).astype(jnp.uint8)
+    pad = (-n) % 32                      # zero padding, as packed
+    words = aggregation.pack_bits(
+        jnp.concatenate([bits, jnp.zeros((pad,), jnp.uint8)]))
+    via_words = int(codec.measure_pooled_words(words, n))
+    via_bits = int(codec.measure_pooled_bits(bits))
+    assert via_words == via_bits
+    payload = api.BitpackedMasks.from_masks({"m": bits}, {"m": None})
+    assert via_words == codec.encode(payload).wire_bits
+
+
+@pytest.mark.parametrize("name", ("bitpack", "golomb"))
+def test_measure_pooled_words_empty_and_vmap(name):
+    from repro.core import aggregation
+    codec = codecs.get_codec(name)
+    assert int(codec.measure_pooled_words(
+        jnp.zeros((0,), jnp.uint32), 0)) == \
+        int(codec.measure_pooled_bits(jnp.zeros((0,), jnp.uint8)))
+    # cohort-batched, jit-traced — the shape the round step vmaps
+    n = 96
+    bits = (jax.random.uniform(KEY, (4, n)) < 0.2).astype(jnp.uint8)
+    words = jax.vmap(aggregation.pack_bits)(bits)
+    batched = jax.jit(jax.vmap(
+        lambda w: codec.measure_pooled_words(w, n)))(words)
+    expect = [int(codec.measure_pooled_bits(b)) for b in bits]
+    assert [int(x) for x in batched] == expect

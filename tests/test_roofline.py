@@ -1,0 +1,75 @@
+"""Tier-1 smoke for benchmarks/roofline.py: analyze + to_markdown over
+a canned dryrun-style results dict (real registry arch/shape/mesh
+keys), so the CI bench job catches schema drift between the dryrun
+artifacts and the roofline reader."""
+import pathlib
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO))
+
+from benchmarks import roofline  # noqa: E402
+
+
+def _canned_results():
+    """Two cells in the exact shape lower_cell writes: one healthy
+    train cell with both steps, one failed cell to skip."""
+    step = lambda f, b, cb: {
+        "flops": f, "bytes_accessed": b,
+        "collective_bytes": {"all-gather": cb, "total": cb},
+        "memory": {"argument_size": 1 << 30, "output_size": 1 << 28,
+                   "temp_size": 1 << 29, "generated_code_size": 1 << 20},
+    }
+    return {
+        "internlm2-1.8b|train_4k|pod16x16": {
+            "ok": True,
+            "stream_cover": {"ok": True, "n_leaves": 7, "n_streams": 14},
+            "train_step": step(2.5e12, 1.0e11, 2.0e9),
+            "round_step": step(1.0e9, 5.0e9, 3.0e8),
+        },
+        "qwen2-7b|prefill_32k|pod2x16x16": {
+            "ok": False, "error": "OOM",
+        },
+    }
+
+
+def test_analyze_rows_and_terms():
+    rows = roofline.analyze(_canned_results())
+    # the failed cell is skipped; the ok cell yields one row per step
+    assert {(r["arch"], r["step"]) for r in rows} == {
+        ("internlm2-1.8b", "train_step"),
+        ("internlm2-1.8b", "round_step")}
+    by_step = {r["step"]: r for r in rows}
+    tr = by_step["train_step"]
+    assert tr["chips"] == roofline.CHIPS["pod16x16"]
+    assert tr["t_compute"] == pytest.approx(2.5e12 / roofline.PEAK_FLOPS)
+    assert tr["t_memory"] == pytest.approx(1.0e11 / roofline.HBM_BW)
+    assert tr["t_collective"] == pytest.approx(2.0e9 / roofline.LINK_BW)
+    assert tr["dominant"] in ("compute", "memory", "collective")
+    # 6*N*T model FLOPs anchor is positive for train, zero for round
+    assert tr["model_flops"] > 0
+    assert by_step["round_step"]["model_flops"] == 0.0
+
+
+def test_to_markdown_renders_every_row():
+    rows = roofline.analyze(_canned_results())
+    md = roofline.to_markdown(rows)
+    lines = md.splitlines()
+    assert lines[0].startswith("| arch |")
+    assert len(lines) == 2 + len(rows)
+    assert all("**" in ln for ln in lines[2:])   # dominant term marked
+    for r in rows:
+        assert r["arch"] in md and r["step"] in md
+
+
+def test_model_flops_formulas():
+    f_train = roofline.model_flops("internlm2-1.8b", "train_4k",
+                                   "train_step")
+    f_pref = roofline.model_flops("internlm2-1.8b", "prefill_32k",
+                                  "prefill_step")
+    assert f_train > 0 and f_pref > 0
+    assert roofline.model_flops("internlm2-1.8b", "train_4k",
+                                "round_step") == 0.0
+    assert roofline.scan_trip_count("internlm2-1.8b") >= 1

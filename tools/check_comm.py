@@ -1,0 +1,100 @@
+#!/usr/bin/env python
+"""Diff a freshly generated BENCH_comm.json against the committed
+baseline.
+
+The static communication model is DETERMINISTIC given the registry,
+the round-step code, and the mesh shape — so the static fields must
+match the baseline EXACTLY (no tolerance band like the kernel
+latency diff).  A drift means a collective was added, removed, or
+re-shaped in the round step; if intentional, regenerate the baseline:
+
+    PYTHONPATH=src python benchmarks/comm_bench.py \
+        --validate --json BENCH_comm.json
+
+Also enforced on the FRESH run: the measured-vs-static validation
+block (when present) must be ok, and the unpacked contrast row must
+still trip the purity rule (liveness).
+
+Usage:
+    python tools/check_comm.py --fresh /tmp/BENCH_comm.json \
+        [--baseline BENCH_comm.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "tools"))
+
+from _ci import finish  # noqa: E402
+
+# per-algorithm scalars that must not drift
+STATIC_KEYS = ("uplink_bits", "downlink_bits", "bpp_wire", "n_sites",
+               "cohorts", "mask_params", "ring_bytes_per_axis",
+               "ring_bytes_per_prim")
+
+
+def _site_set(tab: dict):
+    return sorted(
+        (r["prim"], tuple(r["axes"]), r["dtype"], tuple(r["shape"]),
+         r["role"], r["payload_bits_per_shard"])
+        for r in tab["sites"])
+
+
+def diff(fresh: dict, base: dict) -> list:
+    errors = []
+    if fresh["meta"].get("mesh") != base["meta"].get("mesh"):
+        errors.append(
+            f"mesh drift: baseline {base['meta'].get('mesh')} vs "
+            f"fresh {fresh['meta'].get('mesh')} — comm model is only "
+            "comparable on the same mesh")
+    for algo, btab in sorted(base["algos"].items()):
+        ftab = fresh["algos"].get(algo)
+        if ftab is None:
+            errors.append(f"{algo}: missing from fresh run")
+            continue
+        for k in STATIC_KEYS:
+            if ftab.get(k) != btab.get(k):
+                errors.append(f"{algo}.{k}: baseline {btab.get(k)} "
+                              f"vs fresh {ftab.get(k)}")
+        if _site_set(ftab) != _site_set(btab):
+            errors.append(f"{algo}: collective site set drifted "
+                          f"({btab['n_sites']} baseline vs "
+                          f"{ftab['n_sites']} fresh sites)")
+    for algo in sorted(fresh["algos"]):
+        if algo not in base["algos"]:
+            errors.append(f"{algo}: new algorithm not in baseline — "
+                          "regenerate and commit BENCH_comm.json")
+    v = fresh.get("validation")
+    if v is not None and not v.get("ok"):
+        errors.append(f"static-vs-measured validation failed: "
+                      f"rel_err={v.get('rel_err')} "
+                      f"(tol {v.get('tolerance')})")
+    contrast = fresh.get("unpacked_contrast", {})
+    if contrast.get("purity_findings", 0) <= 0:
+        errors.append("unpacked contrast fired zero purity findings "
+                      "(rule went dead)")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh", required=True,
+                    help="BENCH_comm.json from this run")
+    ap.add_argument("--baseline", default=str(ROOT / "BENCH_comm.json"))
+    args = ap.parse_args(argv)
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    errors = diff(fresh, base)
+    print(f"# check_comm: {len(base['algos'])} algo table(s) compared")
+    return finish("check_comm", errors)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

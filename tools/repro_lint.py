@@ -1,5 +1,5 @@
 #!/usr/bin/env python
-"""Static-analysis gate: the three `repro.analysis` engines over the
+"""Static-analysis gate: the five `repro.analysis` engines over the
 repo (docs/DESIGN.md §Analysis).
 
   * source — AST rules over ``src/``: bare ``PRNGKey(<const>)`` under
@@ -15,10 +15,21 @@ repo (docs/DESIGN.md §Analysis).
     weight-shaped f32 temporaries outside pallas_call, zero
     materialized masks, no f64 / weight-sized bf16→f32 promotion, no
     use-after-donate.
+  * collective — wire purity of every (arch x algorithm) round cell's
+    collectives on the debug pod mesh: only packed uint32 words, the
+    float-sidecar pmean, and scalar metrics may cross
+    (`repro.analysis.collective_lint`); the static cost tables the
+    same traces yield are committed as ``BENCH_comm.json`` by
+    ``benchmarks/comm_bench.py`` and diffed by ``tools/check_comm.py``.
+  * shard — `launch/sharding.py` annotations vs reality: big leaves
+    the divisibility heuristic silently replicated across the registry
+    param trees, plus declared-vs-lowered input shardings on the
+    reference arch's compiled round step.
 
 Usage:
     PYTHONPATH=src python tools/repro_lint.py \
-        [--engines source,stream,jaxpr] [--archs all|a,b,...] \
+        [--engines source,stream,jaxpr,collective,shard] \
+        [--archs all|a,b,...] \
         [--devices 8] [--cohorts 2] [--seed 17]
 
 Shares the tools/ convention: ``FAIL ...`` lines, then a final
@@ -108,10 +119,62 @@ def run_jaxpr(errors) -> None:
               f"shapes, {len(found)} finding(s)")
 
 
+def run_collective(errors, archs, cohorts) -> None:
+    from repro.analysis import collective_lint
+    from repro.launch import mesh as meshlib
+    from repro.launch import plans
+
+    mesh = meshlib.make_debug_pod_mesh()
+    ref = "internlm2-1.8b"
+    cells = [(a, "fedpm_reg") for a in archs]
+    cells += [(ref, algo) for algo in sorted(plans.MASK_ALGOS)
+              if algo != "fedpm_reg" or ref not in archs]
+    for arch, algo in cells:
+        rep = collective_lint.arch_collective_report(
+            arch, algo, mesh=mesh, C=cohorts)
+        errors.extend(f"collective[{arch}|{algo}] {f}"
+                      for f in rep["findings"])
+        m = rep["model"]
+        print(f"# repro_lint[collective] {arch}|{algo}: "
+              f"{rep['n_sites']} sites, bpp_wire={m['bpp_wire']}, "
+              f"{len(rep['findings'])} finding(s)")
+    # liveness: the bf16-psum baseline MUST trip the float rule — a
+    # rule that stops firing on the known-impure path is a dead gate
+    rep = collective_lint.arch_collective_report(
+        ref, "fedpm_reg", mesh=mesh, C=cohorts, packed=False)
+    if not rep["findings"]:
+        errors.append("collective[liveness] unpacked bf16-psum round "
+                      "produced zero purity findings (rule went dead)")
+    print(f"# repro_lint[collective] liveness(unpacked): "
+          f"{len(rep['findings'])} finding(s) (expected > 0)")
+
+
+def run_shard(errors, archs, cohorts) -> None:
+    from repro.analysis import shard_lint
+    from repro.launch import mesh as meshlib
+
+    mesh = meshlib.make_debug_pod_mesh()
+    for arch in archs:
+        rep = shard_lint.arch_shard_report(arch, mesh=mesh)
+        errors.extend(f"shard[{arch}] {f}" for f in rep["findings"])
+        print(f"# repro_lint[shard] {arch}: "
+              f"{len(rep['explanations'])} leaves explained, "
+              f"{len(rep['findings'])} finding(s)")
+    # declared-vs-lowered on the reference arch's compiled round step
+    rep = shard_lint.arch_shard_report("internlm2-1.8b", mesh=mesh,
+                                       C=cohorts, compile_step=True)
+    errors.extend(f"shard[round-step] {f}" for f in rep["findings"])
+    print(f"# repro_lint[shard] round-step(internlm2-1.8b): "
+          f"{rep['n_leaves']} leaves, {len(rep['findings'])} "
+          "finding(s)")
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
-    p.add_argument("--engines", default="source,stream,jaxpr",
-                   help="comma-separated subset of source,stream,jaxpr")
+    p.add_argument("--engines",
+                   default="source,stream,jaxpr,collective,shard",
+                   help="comma-separated subset of "
+                        "source,stream,jaxpr,collective,shard")
     p.add_argument("--archs", default="all",
                    help="'all' (full registry zoo) or comma-separated "
                         "names, for the stream engine")
@@ -124,25 +187,30 @@ def main(argv=None) -> int:
     args = p.parse_args(argv)
 
     engines = {e.strip() for e in args.engines.split(",") if e.strip()}
-    unknown = engines - {"source", "stream", "jaxpr"}
+    unknown = engines - {"source", "stream", "jaxpr", "collective",
+                         "shard"}
     if unknown:
         print(f"unknown engine(s): {sorted(unknown)}", file=sys.stderr)
         return 2
+
+    if args.archs == "all":
+        from repro.configs import ARCH_NAMES
+        archs = list(ARCH_NAMES)
+    else:
+        archs = [a.strip() for a in args.archs.split(",") if a.strip()]
 
     errors: list = []
     if "source" in engines:
         run_source(errors)
     if "stream" in engines:
-        if args.archs == "all":
-            from repro.configs import ARCH_NAMES
-            archs = list(ARCH_NAMES)
-        else:
-            archs = [a.strip() for a in args.archs.split(",")
-                     if a.strip()]
         run_stream(errors, archs, args.devices, args.cohorts,
                    args.seed)
     if "jaxpr" in engines:
         run_jaxpr(errors)
+    if "collective" in engines:
+        run_collective(errors, archs, args.cohorts)
+    if "shard" in engines:
+        run_shard(errors, archs, args.cohorts)
     return finish("repro_lint", errors)
 
 
