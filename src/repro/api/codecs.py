@@ -150,17 +150,39 @@ def _np_pack(bits: np.ndarray) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
+# per-message integrity header: one uint32 CRC32 over words + sidecar.
+# Metered SEPARATELY from the mask payload (`header_bits`, like the
+# float sidecar) so `wire_bits` — and with it the measured mask Bpp,
+# the CommLedger feed, and `analysis.comm_model`'s static collective
+# tables — stay exactly what the codec puts on the mask stream.
+HEADER_BITS = WORD_BITS
+
+
+class ChecksumError(ValueError):
+    """A WireMessage failed its integrity check (corrupted in transit).
+
+    The async engine (`repro.runtime.async_engine`) catches this at the
+    transport seam and schedules a bounded retransmit instead of
+    folding garbage into the round buffer."""
+
+
 @dataclasses.dataclass
 class WireMessage:
     """One client's serialized transmission.
 
-    words:   the coded streams (np.uint32 arrays) — the paper's metered
-             payload (masks / signs / floats).
-    sidecar: raw float side-channel (norm/bias leaves FedAvg'd alongside
-             bitpacked masks), serialized as uint32 views.  Counted in
-             the ledger, excluded from the mask Bpp metric — matching
-             the paper's reporting.
-    meta:    static decode metadata (treedefs, shapes, dtypes, headers).
+    words:    the coded streams (np.uint32 arrays) — the paper's metered
+              payload (masks / signs / floats).
+    sidecar:  raw float side-channel (norm/bias leaves FedAvg'd alongside
+              bitpacked masks), serialized as uint32 views.  Counted in
+              the ledger, excluded from the mask Bpp metric — matching
+              the paper's reporting.
+    meta:     static decode metadata (treedefs, shapes, dtypes, headers).
+    checksum: CRC32 over words + sidecar, stamped at encode time
+              (`aggregation.words_checksum`).  `verify()` recomputes it
+              on arrival; a mismatch means in-transit corruption and the
+              receiver must reject the message (`ChecksumError` from
+              `decode`).  Costs `HEADER_BITS` on the wire, reported via
+              `header_bits` next to — never inside — `wire_bits`.
     """
     codec: str
     payload_cls: type
@@ -168,6 +190,26 @@ class WireMessage:
     sidecar: List[np.ndarray]
     meta: Dict[str, Any]
     word_bits: int = WORD_BITS
+    checksum: Optional[int] = None
+
+    def __post_init__(self):
+        if self.checksum is None:
+            self.checksum = self.compute_checksum()
+
+    def compute_checksum(self) -> int:
+        return aggregation.words_checksum(
+            list(self.words) + list(self.sidecar))
+
+    def verify(self) -> bool:
+        """True iff the streams still match the stamped checksum."""
+        return self.checksum == self.compute_checksum()
+
+    def verify_or_raise(self) -> None:
+        if not self.verify():
+            raise ChecksumError(
+                f"WireMessage({self.codec}) checksum mismatch: "
+                f"header {self.checksum:#010x} != stream "
+                f"{self.compute_checksum():#010x}")
 
     @property
     def wire_bits(self) -> int:
@@ -178,8 +220,12 @@ class WireMessage:
         return sum(int(w.size) for w in self.sidecar) * self.word_bits
 
     @property
+    def header_bits(self) -> int:
+        return HEADER_BITS
+
+    @property
     def total_bits(self) -> int:
-        return self.wire_bits + self.sidecar_bits
+        return self.wire_bits + self.sidecar_bits + self.header_bits
 
 
 # ---------------------------------------------------------------------------
@@ -375,6 +421,7 @@ class Bitpack32(_PackedCodec):
                            side, meta)
 
     def decode(self, msg: WireMessage):
+        msg.verify_or_raise()
         n = sum(_prod(sh) for sh in msg.meta["shapes"])
         bits = _np_unpack(msg.words[0], n)
         return _rebuild_packed(msg.payload_cls, bits, msg)
@@ -448,6 +495,7 @@ class GolombRice(_PackedCodec):
                            [wr.to_array(_word_align(wr.pos))], side, meta)
 
     def decode(self, msg: WireMessage):
+        msg.verify_or_raise()
         n = sum(_prod(sh) for sh in msg.meta["shapes"])
         rd = _BitReader(msg.words[0])
         header = rd.read(32)
@@ -585,6 +633,7 @@ class ArithmeticBernoulli(_PackedCodec):
                            [wr.to_array(target)], side, meta)
 
     def decode(self, msg: WireMessage):
+        msg.verify_or_raise()
         n = sum(_prod(sh) for sh in msg.meta["shapes"])
         if n == 0:
             return _rebuild_packed(msg.payload_cls,
@@ -722,6 +771,7 @@ class Float32Raw(Codec):
         return WireMessage(self.name, type(payload), arrays, [], meta)
 
     def decode(self, msg: WireMessage):
+        msg.verify_or_raise()
         values = _decode_float_tree(msg.words, msg.meta["floats_meta"])
         return msg.payload_cls(values, msg.meta["shapes"],
                                msg.meta["bits"])

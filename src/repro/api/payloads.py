@@ -383,3 +383,25 @@ def batched_float_mean(tree: Pytree, weights: jax.Array) -> Pytree:
         lambda f: None if f is None else jnp.tensordot(
             weights, f.astype(jnp.float32), axes=(0, 0)).astype(f.dtype),
         tree, is_leaf=_NONE)
+
+
+def stack_payloads(payloads):
+    """Stack unbatched same-structure payloads into one engine-batched
+    payload (every leaf gains a leading B axis) — the inverse of slicing
+    a vmapped `client_update` output per client.
+
+    This is how the buffered-async engine's commit turns its arrival
+    buffer (decoded `WireMessage`s accumulated across the quorum window)
+    back into the batched form `FedAlgorithm.aggregate` consumes, so
+    buffered commits reduce through the SAME `batched_packed_mean` /
+    `mean_from_words` code path as the synchronous barrier round.
+    """
+    if not payloads:
+        raise ValueError("stack_payloads needs at least one payload")
+    return jax.tree_util.tree_map(
+        lambda *ls: jnp.stack([jnp.asarray(l) for l in ls]), *payloads)
+
+
+def slice_payload(payload, i: int):
+    """Client i's unbatched payload out of an engine-batched one."""
+    return jax.tree_util.tree_map(lambda l: l[i], payload)

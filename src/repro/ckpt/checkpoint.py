@@ -82,10 +82,14 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
         return int(f.read().strip())
 
 
-def restore_checkpoint(ckpt_dir: str, tree_like: Pytree,
-                       step: Optional[int] = None) -> tuple[Pytree, int]:
-    """Restore into the structure of `tree_like` (shapes may be loaded
-    onto a different mesh by the caller via device_put + shardings)."""
+def load_raw(ckpt_dir: str, step: Optional[int] = None
+             ) -> tuple[dict, dict]:
+    """Load one checkpoint's arrays WITHOUT a structure template.
+
+    Returns ``({path_key: np.ndarray | None}, manifest)`` — the raw
+    host-side view `runtime/elastic.py` needs for shape-tolerant
+    partial restores (the caller matches keys against its own state and
+    decides what to do with mismatched cohort/mesh axes)."""
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -95,12 +99,9 @@ def restore_checkpoint(ckpt_dir: str, tree_like: Pytree,
     with open(os.path.join(ckpt_dir, f"manifest_{step}.json")) as f:
         manifest = json.load(f)
     bf16_keys = set(manifest.get("dtypes", {}))
-    flat_like = _flatten(tree_like)
     out = {}
-    for k, like in flat_like.items():
-        nk = k.replace("/", "|")
-        if nk not in data.files:
-            raise KeyError(f"checkpoint missing leaf {k}")
+    for nk in data.files:
+        k = nk.replace("|", "/")
         arr = data[nk]
         if arr.dtype.kind in ("U", "V") and k not in bf16_keys:
             out[k] = None
@@ -110,6 +111,28 @@ def restore_checkpoint(ckpt_dir: str, tree_like: Pytree,
                 arr = arr.view(np.uint16).astype(np.uint16).view(
                     ml_dtypes.bfloat16)
             out[k] = arr
+    return out, manifest
+
+
+def restore_checkpoint(ckpt_dir: str, tree_like: Pytree,
+                       step: Optional[int] = None) -> tuple[Pytree, int]:
+    """Restore into the structure of `tree_like` (shapes may be loaded
+    onto a different mesh by the caller via device_put + shardings)."""
+    out, manifest = load_raw(ckpt_dir, step)
+    step = int(manifest["step"])
+    flat_like = _flatten(tree_like)
+    for k, leaf in flat_like.items():
+        if k not in out:
+            raise KeyError(f"checkpoint missing leaf {k}")
+        got = out[k]
+        if (leaf is not None and got is not None
+                and hasattr(leaf, "shape")
+                and tuple(got.shape) != tuple(leaf.shape)):
+            # elastic resize / different arch: let the caller fall
+            # back to a partial restore (runtime.elastic)
+            raise ValueError(
+                f"checkpoint leaf {k} has shape {tuple(got.shape)}, "
+                f"expected {tuple(leaf.shape)}")
     # rebuild pytree in tree_like's structure
     paths_leaves = jax.tree_util.tree_flatten_with_path(
         tree_like, is_leaf=lambda x: x is None)
@@ -176,6 +199,68 @@ class AsyncCheckpointer:
         self.wait()
         self._q.put(None)
         self._t.join()
+
+
+# ---------------------------------------------------------------------------
+# Atomic state bundles — flat {key: array} + JSON extra, one file pair.
+# The buffered-async round engine checkpoints its aggregation buffer,
+# in-flight messages, and fault-RNG cursor through these, so a
+# coordinator crash mid-buffer resumes byte-identically (the same
+# tmp-file + os.replace discipline as step checkpoints).
+# ---------------------------------------------------------------------------
+
+
+def save_bundle(path: str, arrays: dict, extra: Optional[dict] = None
+                ) -> str:
+    """Atomically write a flat ``{key: np.ndarray | None}`` dict plus a
+    JSON-serializable ``extra`` manifest to ``path``(.npz/.json)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    out, dtypes = {}, {}
+    for k, v in arrays.items():
+        nk = k.replace("/", "|")
+        if v is None:
+            out[nk] = np.asarray(_SENTINEL)
+            continue
+        a = np.asarray(jax.device_get(v))
+        if a.dtype.name == "bfloat16":
+            dtypes[k] = "bfloat16"
+            a = a.view(np.uint16)
+        out[nk] = a
+    tmp = path + ".tmp.npz"
+    with open(tmp, "wb") as f:
+        np.savez(f, **out)
+    os.replace(tmp, path + ".npz")
+    # manifest LAST: readers only trust bundles with a manifest
+    mtmp = path + ".tmp.json"
+    with open(mtmp, "w") as f:
+        json.dump({"extra": extra or {}, "dtypes": dtypes}, f)
+    os.replace(mtmp, path + ".json")
+    return path + ".npz"
+
+
+def load_bundle(path: str) -> tuple[dict, dict]:
+    """Inverse of `save_bundle`: ``({key: array | None}, extra)``."""
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    data = np.load(path + ".npz", allow_pickle=False)
+    bf16_keys = set(manifest.get("dtypes", {}))
+    out = {}
+    for nk in data.files:
+        k = nk.replace("|", "/")
+        arr = data[nk]
+        if arr.dtype.kind in ("U", "V") and k not in bf16_keys:
+            out[k] = None
+        else:
+            if k in bf16_keys:
+                import ml_dtypes
+                arr = arr.view(np.uint16).view(ml_dtypes.bfloat16)
+            out[k] = arr
+    return out, manifest.get("extra", {})
+
+
+def bundle_exists(path: str) -> bool:
+    return os.path.exists(path + ".json") and os.path.exists(
+        path + ".npz")
 
 
 # ---------------------------------------------------------------------------

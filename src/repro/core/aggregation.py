@@ -18,6 +18,7 @@ from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Pytree = Any
 
@@ -161,6 +162,70 @@ def sample_and_pack_rows(flat_scores: jax.Array, seeds: jax.Array,
                                      tau=tau)
     from repro.kernels import ref as _kref
     return _kref.sample_and_pack(flat_scores, seeds, mode=mode, tau=tau)
+
+
+# ---------------------------------------------------------------------------
+# Buffered-async aggregation support (repro.runtime.async_engine):
+# staleness-discounted survivor weights + the wire-integrity checksum
+# ---------------------------------------------------------------------------
+
+
+def staleness_weight(staleness, alpha: float = 1.0):
+    """FedBuff-style polynomial staleness discount ``(1 + s)^-alpha``.
+
+    ``staleness`` counts COMMITS between the theta a client trained
+    against and the round its mask is folded into; s = 0 (in-time)
+    gives weight 1.0 exactly, so the zero-fault async engine reduces to
+    the synchronous weighted mean bit-for-bit.  Works on Python floats
+    and np/jnp arrays alike.
+    """
+    if hasattr(staleness, "dtype"):
+        one = np.float32(1.0) if isinstance(staleness, np.ndarray) \
+            else jnp.float32(1.0)
+        return (one + staleness) ** (-alpha)
+    return float((1.0 + staleness) ** (-alpha))
+
+
+def staleness_weights(sizes, staleness, alpha: float = 1.0):
+    """Normalized fold weights for a commit buffer: |D_i| discounted by
+    per-entry staleness, renormalized over the buffer — the SAME
+    formula `repro.api.protocol.run_round` applies to its participation
+    vector (`w = sizes * pf; wn = w / max(sum(w), 1e-9)`), so a buffer
+    of all-fresh arrivals aggregates identically to a synchronous
+    round."""
+    sizes = jnp.asarray(sizes, jnp.float32)
+    disc = jnp.asarray(staleness_weight(
+        jnp.asarray(staleness, jnp.float32), alpha), jnp.float32)
+    # s == 0 must contribute exactly `sizes` (discount is exactly 1.0)
+    w = jnp.where(disc == 1.0, sizes, sizes * disc)
+    return w / jnp.maximum(jnp.sum(w), 1e-9)
+
+
+def fold_popcount(acc_ones, words) -> int:
+    """Running popcount fold: add one arrival's packed-word one-counts
+    to a host accumulator (the async engine's live buffer statistic).
+    The device does the popcount; the running sum lives in an unbounded
+    Python int so the fold is exact at any scale — bits are integers,
+    no float accumulation order issues."""
+    ones = jnp.sum(jax.lax.population_count(
+        jnp.asarray(words, jnp.uint32)).astype(jnp.int32))
+    return int(acc_ones) + int(ones)
+
+
+def words_checksum(arrays) -> int:
+    """CRC32 checksum over serialized uint32 word streams — the
+    per-message integrity header `repro.api.codecs.WireMessage` carries
+    (host-side: the wire is host bytes).  `arrays` is a sequence of
+    uint32 numpy arrays; the checksum covers their concatenated
+    little-endian bytes, so any single bit flip in transit changes it.
+    """
+    import zlib
+    h = 0
+    for a in arrays:
+        b = np.ascontiguousarray(
+            np.asarray(a, np.uint32).astype("<u4")).tobytes()
+        h = zlib.crc32(b, h)
+    return int(h & 0xFFFFFFFF)
 
 
 # ---------------------------------------------------------------------------

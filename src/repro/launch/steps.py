@@ -338,8 +338,16 @@ def make_round_step(api, cfg: StepConfig, mesh=None, state_sh=None,
     if isinstance(codec, str):
         codec = codecs_lib.get_codec(codec)
 
-    def _round_local(scores, floats, weights, opt_m, step):
+    def _round_local(scores, floats, weights, opt_m, step, part=None):
         """Runs per-shard under shard_map (or globally w/o mesh).
+
+        ``part`` is the round's participation vector (f32[C_global],
+        1.0 = the cohort's uplink arrived, 0.0 = crashed/cut): the
+        aggregation renormalizes the weighted mean over SURVIVORS
+        (eq. 8 with dropped nodes renormalized out), and the metering
+        only counts bits survivors actually put on the wire.  ``None``
+        (a trace-time constant) keeps the original all-cohorts path
+        bit-for-bit.
 
         Per-leaf uplink: the FUSED sample+pack kernel turns each
         cohort's score row straight into bit-packed uint32 words
@@ -364,6 +372,20 @@ def make_round_step(api, cfg: StepConfig, mesh=None, state_sh=None,
 
         flat_s, tdef = jax.tree_util.tree_flatten(
             scores, is_leaf=lambda x: x is None)
+        # survivor weights: normalized over the GLOBAL participation
+        # vector; each shard also needs its local slice (its own
+        # cohorts' alive flags) for float folds and metering
+        Cl_loc = next((l.shape[0] for l in flat_s if l is not None), 1)
+        if part is not None:
+            wn_g = part / jnp.maximum(jnp.sum(part), 1.0)
+            if pod_axis:
+                off = jax.lax.axis_index(pod_axis) * Cl_loc
+                alive_l = jax.lax.dynamic_slice(part, (off,), (Cl_loc,))
+                wn_l = jax.lax.dynamic_slice(wn_g, (off,), (Cl_loc,))
+            else:
+                alive_l, wn_l = part, wn_g
+        else:
+            wn_g = alive_l = wn_l = None
         # metering accumulators: per-cohort one-counts via popcount of
         # the packed words (the uint8 masks where they exist anyway),
         # plus the pooled per-cohort streams for the codec meter
@@ -399,7 +421,11 @@ def make_round_step(api, cfg: StepConfig, mesh=None, state_sh=None,
                     words_all = words_all.reshape(-1, words.shape[-1])
                 else:
                     words_all = words
-                theta = plds.mean_from_words(words_all, n)
+                # wn_g rows follow the gather's pod-major cohort order,
+                # so the survivor-renormalized weighted mean drops in
+                # where the uniform mean was
+                theta = plds.mean_from_words(words_all, n,
+                                             weights=wn_g)
             else:
                 masks2 = (kref.threshold_rows(flat, cfg.tau)
                           if cfg.mask_mode == "threshold"
@@ -407,10 +433,17 @@ def make_round_step(api, cfg: StepConfig, mesh=None, state_sh=None,
                 ones_parts.append(jnp.sum(
                     masks2.astype(jnp.float32), axis=1))
                 bit_parts.append(masks2)
-                b = jnp.mean(masks2.astype(jnp.bfloat16), axis=0)
-                if pod_axis:
-                    b = jax.lax.pmean(b, pod_axis)
-                theta = b.astype(jnp.float32)
+                if part is None:
+                    b = jnp.mean(masks2.astype(jnp.bfloat16), axis=0)
+                    if pod_axis:
+                        b = jax.lax.pmean(b, pod_axis)
+                    theta = b.astype(jnp.float32)
+                else:
+                    b = jnp.tensordot(
+                        wn_l, masks2.astype(jnp.float32), axes=(0, 0))
+                    if pod_axis:
+                        b = jax.lax.psum(b, pod_axis)
+                    theta = b
             n_pool += n
             theta_flat.append(theta.reshape(body))
         theta = jax.tree_util.tree_unflatten(tdef, theta_flat)
@@ -431,7 +464,21 @@ def make_round_step(api, cfg: StepConfig, mesh=None, state_sh=None,
             lambda t, s: None if t is None else jnp.broadcast_to(
                 masking.logit(t)[None], s.shape).astype(cfg.score_dtype),
             theta, scores, is_leaf=lambda x: x is None)
-        if has_pod:
+        if part is not None:
+            # survivor-weighted float fold: dead cohorts' local floats
+            # contribute zero weight, the psum renormalizes globally
+            def _wavg(f):
+                if f is None:
+                    return None
+                s = jnp.tensordot(wn_l, f.astype(jnp.float32),
+                                  axes=(0, 0))
+                if has_pod:
+                    s = jax.lax.psum(s, "pod")
+                return jnp.broadcast_to(s[None],
+                                        f.shape).astype(f.dtype)
+            new_floats = jax.tree_util.tree_map(
+                _wavg, floats, is_leaf=lambda x: x is None)
+        elif has_pod:
             new_floats = jax.tree_util.tree_map(
                 lambda f: None if f is None else
                 (jax.lax.pmean(f.astype(jnp.float32), "pod")
@@ -452,7 +499,12 @@ def make_round_step(api, cfg: StepConfig, mesh=None, state_sh=None,
         # re-materializes the uint8 mask the fused kernel avoided
         if n_pool:
             ones_c = sum(ones_parts)                       # (Cl,)
-            p1 = jnp.sum(ones_c) / jnp.float32(n_pool * Cl_any)
+            if part is None:
+                p1 = jnp.sum(ones_c) / jnp.float32(n_pool * Cl_any)
+            else:  # survivors only: dead cohorts sent nothing
+                p1 = (jnp.sum(ones_c * alive_l)
+                      / (jnp.float32(n_pool)
+                         * jnp.maximum(jnp.sum(alive_l), 1.0)))
             bpp = regularizer.binary_entropy(p1)
         else:
             bpp = jnp.float32(0.0)
@@ -474,7 +526,10 @@ def make_round_step(api, cfg: StepConfig, mesh=None, state_sh=None,
             per_cohort = jax.vmap(codec.measure_pooled_bits)(pooled)
         else:
             per_cohort = jnp.zeros((1,), jnp.int32)
-        bits_total = jnp.sum(per_cohort.astype(jnp.float32))
+        per_cohort = per_cohort.astype(jnp.float32)
+        if part is not None and per_cohort.shape[0] == Cl_loc:
+            per_cohort = per_cohort * alive_l   # dead uplinks: 0 bits
+        bits_total = jnp.sum(per_cohort)
         if mesh is not None:
             bits_total = jax.lax.psum(bits_total,
                                       tuple(mesh.axis_names))
@@ -498,24 +553,34 @@ def make_round_step(api, cfg: StepConfig, mesh=None, state_sh=None,
             n += s.size // s.shape[0]
         return C, n
 
-    def _comm_metrics(state, bpp, bits_total):
+    def _comm_metrics(state, bpp, bits_total, n_alive=None):
+        """``n_alive`` (traced survivor count) rescales the per-cohort
+        denominators; None keeps the full-participation accounting."""
         C, n_glob = _comm_totals(state)
         dl_bpp = float(cfg.downlink_bits) if cfg.downlink_bits else 32.0
+        eff = (jnp.float32(C) if n_alive is None
+               else jnp.maximum(n_alive, 1.0))
         return {"bpp": bpp,
-                "bpp_measured": bits_total / jnp.float32(n_glob * C),
+                "bpp_measured": bits_total / (jnp.float32(n_glob) * eff),
                 "bits_measured": bits_total,
                 "downlink_bpp": jnp.float32(dl_bpp),
-                "downlink_bits": jnp.float32(dl_bpp * n_glob * C)}
+                "downlink_bits": jnp.float32(dl_bpp * n_glob) * eff}
+
+    def _as_part(participation):
+        return (None if participation is None
+                else jnp.asarray(participation).astype(jnp.float32))
 
     if mesh is None:
-        def round_step(state):
+        def round_step(state, participation=None):
+            part = _as_part(participation)
             sc, fl, om, bpp, bits_total = _round_local(
                 state["scores"], state["floats"], state["weights"],
-                state["opt_m"], state["step"])
+                state["opt_m"], state["step"], part)
             out = dict(state, scores=sc, floats=fl, opt_m=om,
                        step=state["step"] + 1)
-            return _zero_v(state, out), _comm_metrics(state, bpp,
-                                                      bits_total)
+            return _zero_v(state, out), _comm_metrics(
+                state, bpp, bits_total,
+                None if part is None else jnp.sum(part))
         return round_step
 
     def specs_of(tree):
@@ -533,15 +598,31 @@ def make_round_step(api, cfg: StepConfig, mesh=None, state_sh=None,
                  jax.sharding.PartitionSpec())
     mapped = _shard_map(_round_local, mesh=mesh, in_specs=in_specs,
                         out_specs=out_specs)
+    # participation variant: the vector is replicated (every shard
+    # slices out its own cohorts); traced separately so the no-fault
+    # path stays byte-identical to the original lowering
+    mapped_part = _shard_map(
+        lambda sc, fl, w, om, st, pt: _round_local(sc, fl, w, om, st,
+                                                   pt),
+        mesh=mesh, in_specs=in_specs + (jax.sharding.PartitionSpec(),),
+        out_specs=out_specs)
 
-    def round_step(state):
-        sc, fl, om, bpp, bits_total = mapped(
-            state["scores"], state["floats"], state["weights"],
-            state["opt_m"], state["step"])
+    def round_step(state, participation=None):
+        part = _as_part(participation)
+        if part is None:
+            sc, fl, om, bpp, bits_total = mapped(
+                state["scores"], state["floats"], state["weights"],
+                state["opt_m"], state["step"])
+            n_alive = None
+        else:
+            sc, fl, om, bpp, bits_total = mapped_part(
+                state["scores"], state["floats"], state["weights"],
+                state["opt_m"], state["step"], part)
+            n_alive = jnp.sum(part)
         out = dict(state, scores=sc, floats=fl, opt_m=om,
                    step=state["step"] + 1)
         return _zero_v(state, out), _comm_metrics(state, bpp,
-                                                  bits_total)
+                                                  bits_total, n_alive)
 
     return round_step
 

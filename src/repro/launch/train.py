@@ -31,7 +31,7 @@ from repro.data import synthetic
 from repro.launch import steps as steplib
 from repro.launch import plans as planlib  # noqa: F401  (registers plans)
 from repro.launch import mesh as meshlib
-from repro.runtime import fault
+from repro.runtime import elastic, fault
 from repro import ckpt as ckptlib
 
 
@@ -62,7 +62,19 @@ def main(argv=None):
     ap.add_argument("--score-opt", default="momentum",
                     choices=["momentum", "adam"])
     ap.add_argument("--ckpt-dir", default="")
-    ap.add_argument("--fail-prob", type=float, default=0.0)
+    ap.add_argument("--fail-prob", type=float, default=0.0,
+                    help="per-round iid cohort failure probability; "
+                         "the round aggregation renormalizes over "
+                         "survivors")
+    ap.add_argument("--pod-size", type=int, default=0,
+                    help="cohorts per failure domain (0 = independent "
+                         "failures); whole pods drop together")
+    ap.add_argument("--pod-outage-prob", type=float, default=0.0,
+                    help="per-round correlated pod outage probability")
+    ap.add_argument("--quorum-frac", type=float, default=1.0,
+                    help="straggler cut: keep the fastest fraction of "
+                         "surviving cohorts each round (1.0 = wait "
+                         "for everyone)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -87,14 +99,25 @@ def main(argv=None):
                 state, start = ckptlib.restore_checkpoint(args.ckpt_dir,
                                                           state)
                 print(f"resumed at step {start}")
-            except KeyError:
-                print("checkpoint incompatible (elastic resize); "
-                      "restarting from theta is not available in this "
-                      "demo path — fresh start")
+            except (KeyError, ValueError):
+                # structure mismatch (elastic resize / optimizer
+                # switch): carry the learned theta/float signal over,
+                # rebuild the rest (runtime/elastic.py)
+                state, start = elastic.restore_theta_only(
+                    args.ckpt_dir, state)
+                print(f"structure mismatch: theta-only partial "
+                      f"restore at step {start}")
 
     toks = synthetic.make_lm_stream(key, 500_000, cfg.vocab)
-    sim = (fault.FaultSimulator(args.cohorts, fail_prob=args.fail_prob)
-           if args.fail_prob > 0 else None)
+    faulty = (args.fail_prob > 0 or args.pod_outage_prob > 0
+              or args.quorum_frac < 1.0)
+    sim = (fault.FaultSimulator(args.cohorts, fail_prob=args.fail_prob,
+                                pod_size=args.pod_size,
+                                pod_outage_prob=args.pod_outage_prob,
+                                seed=args.seed)
+           if faulty else None)
+    policy = (fault.StragglerPolicy(quorum_frac=args.quorum_frac)
+              if args.quorum_frac < 1.0 else None)
     # the ledger must survive restarts or cumulative MB under-reports;
     # it rides next to the checkpoints as a tiny json sidecar
     ledger = fedapi.CommLedger()
@@ -112,8 +135,16 @@ def main(argv=None):
         batch = plan.make_batch(kd, toks, args.batch, args.seq)
         state, m = step_fn(state, batch)
         if round_fn is not None and (step + 1) % args.round_every == 0:
-            alive = sim.sample_round() if sim is not None else None
-            state, rm = round_fn(state)
+            # draws are keyed by (seed, round index), NOT a mutable
+            # generator cursor: a resumed run replays the identical
+            # fault sequence from any restart point
+            round_idx = (step + 1) // args.round_every
+            alive = (sim.sample_round(policy, round_idx=round_idx)
+                     if sim is not None else None)
+            # survivor-renormalized aggregation: the participation
+            # vector gates which cohorts' masks the round folds
+            state, rm = (round_fn(state) if alive is None
+                         else round_fn(state, jnp.asarray(alive)))
             ledger.update({"uplink_bits_measured": rm["bits_measured"],
                            "downlink_bits": rm["downlink_bits"]})
             msg = (f"step {step+1}: loss={float(m['loss']):.3f} "

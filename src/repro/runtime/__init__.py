@@ -1,4 +1,10 @@
 from repro.runtime.fault import (  # noqa: F401
-    FaultSimulator, StragglerPolicy, participation_vector,
+    FaultSimulator, StragglerPolicy, FaultInjector,
+    participation_vector, counter_uniform, counter_normal,
 )
-from repro.runtime.elastic import reshard_server, cohort_plan  # noqa
+from repro.runtime.elastic import (  # noqa: F401
+    reshard_server, cohort_plan, restore_theta_only,
+)
+from repro.runtime.async_engine import (  # noqa: F401
+    AsyncConfig, AsyncRoundEngine,
+)

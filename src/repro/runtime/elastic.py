@@ -14,6 +14,8 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.ckpt import checkpoint as _ckpt
+
 Pytree = Any
 
 
@@ -34,6 +36,67 @@ def cohort_plan(n_clients: int, n_slices: int) -> list[np.ndarray]:
     (n_slices changes) the plan is recomputed; no state migrates because
     clients are stateless between rounds."""
     return [np.arange(i, n_clients, n_slices) for i in range(n_slices)]
+
+
+def _path_key(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def _fit_cohort(arr: np.ndarray, like) -> np.ndarray:
+    """Fit a checkpointed ``(C_old, ...)`` leaf onto a ``(C_new, ...)``
+    slot: average over the old cohort axis, broadcast to the new one.
+    Valid because theta/float leaves are cohort-replicated right after a
+    round commit (every cohort holds the aggregated value), and mid-round
+    divergence is exactly what the next round's mean would fold anyway."""
+    arr = np.asarray(arr)
+    like_shape = tuple(like.shape)
+    if arr.shape == like_shape:
+        return arr
+    if arr.ndim >= 1 and arr.shape[1:] == like_shape[1:]:
+        m = np.mean(arr.astype(np.float32), axis=0, keepdims=True)
+        return np.broadcast_to(m, like_shape).astype(arr.dtype).copy()
+    raise ValueError(
+        f"cannot fit checkpoint leaf {arr.shape} onto {like_shape}")
+
+
+def restore_theta_only(ckpt_dir: str, state_like: Pytree,
+                       step: Optional[int] = None) -> tuple[Pytree, int]:
+    """Partial restore when the full structure no longer matches (cohort
+    resize, optimizer switch, algorithm variant): carry over ONLY the
+    learned signal — score/float leaves, which are mesh/cohort-agnostic
+    (see module docstring) — and rebuild everything else from
+    `state_like`:
+
+      * scores/floats   <- checkpoint, cohort axis refit via `_fit_cohort`
+      * opt_m / opt_v   <- zeros (optimizer restarts cleanly)
+      * weights         <- kept from `state_like` (seed-regenerated,
+                           identical across restarts by construction)
+      * step            <- the checkpoint manifest's step
+
+    Returns ``(state, step)`` like `ckpt.restore_checkpoint`."""
+    raw, manifest = _ckpt.load_raw(ckpt_dir, step)
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(
+        state_like, is_leaf=lambda x: x is None)
+    leaves = []
+    for path, leaf in paths_leaves:
+        key = _path_key(path)
+        if leaf is None:
+            leaves.append(None)
+            continue
+        top = key.split("/", 1)[0]
+        if top in ("scores", "floats") and raw.get(key) is not None:
+            leaves.append(_fit_cohort(raw[key], leaf))
+        elif top in ("opt_m", "opt_v"):
+            leaves.append(np.zeros(tuple(leaf.shape),
+                                   np.asarray(leaf).dtype))
+        elif key == "step":
+            leaves.append(np.asarray(manifest["step"],
+                                     np.asarray(leaf).dtype))
+        else:
+            leaves.append(leaf)
+    return (jax.tree_util.tree_unflatten(treedef, leaves),
+            int(manifest["step"]))
 
 
 def scale_event_log():

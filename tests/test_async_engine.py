@@ -1,0 +1,250 @@
+"""Buffered-async round engine gates (repro.runtime.async_engine).
+
+Two hard invariants from docs/DESIGN.md §5:
+
+  * EQUIVALENCE: with zero faults and quorum_frac=1 every committed
+    round is bit-identical to the synchronous barrier path
+    (`protocol.run_round`) — theta AND the measured wire bits.
+  * CHAOS: under crash + straggler + corrupt injection plus a
+    mid-buffer coordinator kill/restore, training completes, the
+    restored engine replays the identical fault sequence, and
+    corrupted uplinks are excluded without aborting the round.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import masking
+from repro.models import cnn
+from repro.data import synthetic, partition
+from repro.runtime.async_engine import AsyncConfig, AsyncRoundEngine
+from repro.runtime.fault import FaultInjector
+
+KEY = jax.random.PRNGKey(0)
+CFG = cnn.ConvConfig("t", (8, 8), (16,), n_classes=4, img_size=8)
+SPEC = masking.MaskSpec()
+K, H, B = 3, 2, 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    task = synthetic.make_image_task(KEY, n=192, img=8, n_classes=4,
+                                     noise=0.3)
+    params = cnn.init_params(KEY, CFG)
+    apply_fn = lambda p, b: cnn.forward(p, CFG, b["images"])
+    loss_fn = lambda out, b: cnn.ce_loss(out, b)
+    rng = np.random.default_rng(0)
+    cidx = partition.partition_iid(rng, np.asarray(task.y), K)
+    data = synthetic.federated_batches(KEY, task, cidx, K, H, B)
+    sizes = jnp.asarray([len(c) for c in cidx], jnp.float32)
+    algo = api.get_algorithm("fedpm_reg", apply_fn, loss_fn, spec=SPEC,
+                             local_steps=H)
+    return dict(algo=algo, params=params, data=data, sizes=sizes)
+
+
+def _leaves(tree):
+    return jax.tree_util.tree_leaves(tree, is_leaf=lambda x: x is None)
+
+
+def _assert_states_equal(a, b):
+    for la, lb in zip(_leaves(a), _leaves(b)):
+        if la is None:
+            assert lb is None
+            continue
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_quorum_count_bounds():
+    assert AsyncConfig(quorum_frac=0.0).quorum_count(5) == 1
+    assert AsyncConfig(quorum_frac=1.0).quorum_count(5) == 5
+    assert AsyncConfig(quorum_frac=0.5).quorum_count(5) == 3
+    assert AsyncConfig(quorum_frac=2.0).quorum_count(5) == 5
+
+
+def test_zero_faults_bit_identical_to_sync_barrier(setup):
+    """The equivalence gate: no injector, quorum=1.0 — every engine
+    commit must reproduce `algo.round` EXACTLY (theta, the weighted
+    loss, the entropy-bound Bpp, and the measured wire bits)."""
+    algo, data, sizes = setup["algo"], setup["data"], setup["sizes"]
+    st_sync = algo.init(KEY, setup["params"])
+    eng = AsyncRoundEngine(algo, algo.init(KEY, setup["params"]),
+                           data, sizes, KEY,
+                           config=AsyncConfig(quorum_frac=1.0))
+    part = jnp.ones((K,), bool)
+    for t in range(3):
+        kt = jax.random.fold_in(KEY, t)
+        st_sync, m = algo.round(st_sync, data, part, sizes, kt)
+        commits = eng.tick(data)
+        assert len(commits) == 1, "full buffer must commit every tick"
+        c = commits[0]
+        assert c["n_folded"] == K and not c["forced"]
+        assert c["staleness_max"] == 0
+        assert float(c["uplink_bpp"]) == float(m["uplink_bpp"])
+        assert float(c["loss"]) == float(m["loss"])
+        # measured WIRE bits: codec stream + sidecar, per delivery
+        assert float(c["uplink_bits_measured"]) == float(
+            m["uplink_bits_measured"])
+        _assert_states_equal(eng.state, st_sync)
+    # zero faults: no drops/cuts/corruptions ever surfaced
+    kinds = {e["kind"] for e in eng.events}
+    assert kinds == {"fold", "commit"}
+
+
+def test_header_bits_metered_separately(setup):
+    """The CRC32 header rides outside the mask stream: commits meter it
+    as uplink_header_bits (32 bits per delivered message), never inside
+    uplink_bits_measured — Bpp accounting keeps its codec meaning."""
+    algo, data, sizes = setup["algo"], setup["data"], setup["sizes"]
+    eng = AsyncRoundEngine(algo, algo.init(KEY, setup["params"]),
+                           data, sizes, KEY)
+    (c,) = eng.tick(data)
+    assert float(c["uplink_header_bits"]) == 32.0 * K
+    assert float(c["uplink_bits_measured"]) > 0
+
+
+def test_stragglers_deadline_and_flush(setup):
+    """All uplinks 1-2 rounds late: the deadline force-commits rather
+    than starving, and flush() drains the tail without new launches."""
+    algo, data, sizes = setup["algo"], setup["data"], setup["sizes"]
+    inj = FaultInjector(K, seed=3, straggler_prob=1.0,
+                        straggler_rounds_max=2)
+    eng = AsyncRoundEngine(algo, algo.init(KEY, setup["params"]),
+                           data, sizes, KEY,
+                           config=AsyncConfig(quorum_frac=1.0,
+                                              deadline_rounds=2),
+                           injector=inj)
+    commits = []
+    for t in range(4):
+        commits += eng.tick(data)
+    commits += eng.flush()
+    assert not eng.pending and not eng.buffer
+    folded = sum(c["n_folded"] for c in commits)
+    launched = 4 * K
+    stale = sum(1 for e in eng.events if e["kind"] == "stale_drop")
+    assert folded + stale == launched
+    assert any(e["kind"] == "straggle" for e in eng.events)
+
+
+def test_corrupt_uplinks_rejected_then_cut_without_abort(setup):
+    """corrupt_prob=1: every attempt fails the checksum; after
+    max_retries the client is cut. No exception, no commit from
+    garbage — and the wasted attempts still count as wire bits."""
+    algo, data, sizes = setup["algo"], setup["data"], setup["sizes"]
+    inj = FaultInjector(K, seed=5, corrupt_prob=1.0, max_retries=1)
+    eng = AsyncRoundEngine(algo, algo.init(KEY, setup["params"]),
+                           data, sizes, KEY, injector=inj)
+    commits = eng.tick(data) + eng.flush()
+    assert commits == []
+    cuts = [e for e in eng.events if e["kind"] == "cut"]
+    rejects = [e for e in eng.events if e["kind"] == "corrupt_reject"]
+    assert {e["client"] for e in cuts} == set(range(K))
+    assert len(rejects) == K            # one retry each before the cut
+    assert all(e["attempts"] == 2 for e in cuts)
+    # both failed attempts consumed the wire
+    assert eng.totals["uplink_bits_measured"] > 0
+    assert eng.totals["commits"] == 0
+
+
+def _chaos_engine(setup, state):
+    inj = FaultInjector(K, seed=7, crash_prob=0.3, straggler_prob=0.3,
+                        corrupt_prob=0.4, max_retries=1)
+    return AsyncRoundEngine(
+        setup["algo"], state, setup["data"], setup["sizes"], KEY,
+        config=AsyncConfig(quorum_frac=0.8, deadline_rounds=2,
+                           max_staleness=3),
+        injector=inj)
+
+
+def test_chaos_crash_restore_replays_identical_run(setup, tmp_path):
+    """The chaos gate: crash+straggler+corrupt injection, coordinator
+    killed MID-BUFFER and restored into a fresh engine — the continued
+    run must match an unkilled twin event-for-event and bit-for-bit
+    (fault draws are counter hashes; the bundle carries the cursor)."""
+    data = setup["data"]
+    ref = _chaos_engine(setup, setup["algo"].init(KEY, setup["params"]))
+    eng = _chaos_engine(setup, setup["algo"].init(KEY, setup["params"]))
+    for t in range(3):
+        ref.tick(data)
+        eng.tick(data)
+    # kill mid-buffer: persist, throw the engine away, restore fresh
+    assert eng.buffer or eng.pending, "chaos seed must leave work"
+    path = str(tmp_path / "engine")
+    eng.save(path)
+    eng2 = _chaos_engine(setup,
+                         setup["algo"].init(KEY, setup["params"]))
+    eng2.restore(path)
+    assert eng2.tick_idx == ref.tick_idx
+    _assert_states_equal(eng2.state, ref.state)
+    ref_commits, new_commits = [], []
+    for t in range(3):
+        ref_commits += ref.tick(data)
+        new_commits += eng2.tick(data)
+    ref_commits += ref.flush()
+    new_commits += eng2.flush()
+    # identical replayed fault sequence and commit schedule
+    assert eng2.events == ref.events
+    assert len(new_commits) == len(ref_commits) >= 1
+    for a, b in zip(new_commits, ref_commits):
+        assert a["clients"] == b["clients"]
+        assert a["tick"] == b["tick"]
+        assert float(a["uplink_bpp"]) == float(b["uplink_bpp"])
+    _assert_states_equal(eng2.state, ref.state)
+    assert eng2.totals == ref.totals
+    # the run actually saw chaos, and survived it
+    kinds = {e["kind"] for e in eng2.events}
+    assert "drop" in kinds and "corrupt_reject" in kinds
+    assert eng2.totals["commits"] >= 1
+
+
+def test_save_restore_roundtrip_is_byte_identical(setup, tmp_path):
+    """restore() must rebuild EVERY field save() wrote: state leaves,
+    buffered payloads, in-flight WireMessages (words, sidecar, stamped
+    checksum), counters and totals."""
+    data = setup["data"]
+    eng = _chaos_engine(setup, setup["algo"].init(KEY, setup["params"]))
+    for t in range(3):
+        eng.tick(data)
+    path = str(tmp_path / "rt")
+    eng.save(path)
+    eng2 = _chaos_engine(setup,
+                         setup["algo"].init(KEY, setup["params"]))
+    eng2.restore(path)
+    _assert_states_equal(eng2.state, eng.state)
+    assert eng2.buffer_ones == eng.buffer_ones
+    assert eng2.totals == eng.totals
+    assert eng2._since_commit == eng._since_commit
+    assert len(eng2.buffer) == len(eng.buffer)
+    for a, b in zip(eng2.buffer, eng.buffer):
+        assert (a.client, a.version, a.round, a.size) == \
+            (b.client, b.version, b.round, b.size)
+        _assert_states_equal(a.payload, b.payload)
+    assert len(eng2.pending) == len(eng.pending)
+    for a, b in zip(eng2.pending, eng.pending):
+        assert (a.client, a.deliver, a.attempt) == \
+            (b.client, b.deliver, b.attempt)
+        assert a.msg.checksum == b.msg.checksum
+        for wa, wb in zip(a.msg.words, b.msg.words):
+            np.testing.assert_array_equal(np.asarray(wa),
+                                          np.asarray(wb))
+
+
+def test_stale_arrivals_discarded(setup):
+    """max_staleness=0 with multi-round stragglers: anything trained
+    against an old theta is dropped, never folded."""
+    algo, data, sizes = setup["algo"], setup["data"], setup["sizes"]
+    inj = FaultInjector(K, seed=11, straggler_prob=0.7,
+                        straggler_rounds_max=2)
+    eng = AsyncRoundEngine(algo, algo.init(KEY, setup["params"]),
+                           data, sizes, KEY,
+                           config=AsyncConfig(quorum_frac=0.5,
+                                              deadline_rounds=1,
+                                              max_staleness=0),
+                           injector=inj)
+    for t in range(5):
+        eng.tick(data)
+    eng.flush()
+    folds = [e for e in eng.events if e["kind"] == "fold"]
+    assert all(e["staleness"] == 0 for e in folds)
+    assert any(e["kind"] == "stale_drop" for e in eng.events)

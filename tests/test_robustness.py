@@ -1,0 +1,364 @@
+"""Robustness-layer tests: checkpoint atomicity/bf16/gc/error paths,
+restart-deterministic fault draws, elastic partial restore, and
+survivor-renormalized round aggregation (docs/DESIGN.md §5)."""
+import inspect
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import ckpt
+from repro.ckpt import checkpoint as ckptmod
+from repro.configs import get_config
+from repro.core import masking
+from repro.launch import steps as steplib
+from repro.models import build_model
+from repro.runtime import elastic, fault
+
+KEY = jax.random.PRNGKey(0)
+SPEC = masking.MaskSpec()
+
+
+# ---------------------------------------------------------------------------
+# ckpt/checkpoint.py
+# ---------------------------------------------------------------------------
+
+
+def test_leftover_tmp_files_never_shadow_a_checkpoint(tmp_path):
+    """Crash mid-write simulation: stray .tmp_* files (the atomic-write
+    staging names) must not be visible as checkpoints — LATEST, restore
+    and the gc all ignore them."""
+    d = str(tmp_path)
+    tree = {"a": jnp.arange(6.0), "b": None}
+    ckpt.save_checkpoint(d, 2, tree)
+    # a later save died before os.replace: garbage under the tmp names
+    for name in (".tmp_step_3.npz", ".tmp_manifest.json", ".tmp_latest"):
+        with open(os.path.join(d, name), "wb") as f:
+            f.write(b"\x00garbage")
+    assert ckpt.latest_step(d) == 2
+    restored, step = ckpt.restore_checkpoint(d, tree)
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.arange(6.0))
+
+
+def test_checkpoint_bf16_roundtrip(tmp_path):
+    """npz can't store bf16 — the uint16-view detour must round-trip
+    bit-exactly through save/restore AND load_raw."""
+    import ml_dtypes
+    d = str(tmp_path)
+    x = jnp.asarray(np.linspace(-3, 3, 16), jnp.bfloat16)
+    tree = {"w": x, "f32": jnp.ones((2,), jnp.float32)}
+    ckpt.save_checkpoint(d, 1, tree)
+    restored, _ = ckpt.restore_checkpoint(d, tree)
+    assert np.asarray(restored["w"]).dtype == ml_dtypes.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(restored["w"]).view(np.uint16),
+        np.asarray(x).view(np.uint16))
+    raw, manifest = ckpt.load_raw(d)
+    assert manifest["dtypes"] == {"w": "bfloat16"}
+    np.testing.assert_array_equal(raw["w"].view(np.uint16),
+                                  np.asarray(x).view(np.uint16))
+
+
+def test_async_checkpointer_surfaces_worker_errors(tmp_path):
+    """A background save that fails must raise on the NEXT save()/wait(),
+    not vanish in the worker thread."""
+    blocker = str(tmp_path / "not_a_dir")
+    with open(blocker, "w") as f:
+        f.write("file where a directory must go")
+    ac = ckpt.AsyncCheckpointer(blocker, keep=2)
+    ac.save(0, {"a": jnp.ones((2,))})
+    with pytest.raises(OSError):
+        ac.wait()
+    with pytest.raises(OSError):
+        ac.save(1, {"a": jnp.ones((2,))})
+
+
+def test_async_checkpointer_gc_removes_manifests_too(tmp_path):
+    d = str(tmp_path)
+    ac = ckpt.AsyncCheckpointer(d, keep=2)
+    for s in range(5):
+        ac.save(s, {"a": jnp.full((3,), s)})
+    ac.close()
+    steps = sorted(int(f[5:-4]) for f in os.listdir(d)
+                   if f.startswith("step_"))
+    manifests = sorted(int(f[9:-5]) for f in os.listdir(d)
+                       if f.startswith("manifest_"))
+    assert steps == manifests == [3, 4]
+    assert ckpt.latest_step(d) == 4
+    restored, step = ckpt.restore_checkpoint(d, {"a": jnp.zeros((3,))})
+    assert step == 4 and float(restored["a"][0]) == 4.0
+
+
+def test_restore_raises_on_missing_and_mismatched_leaves(tmp_path):
+    """The full-restore path must REFUSE structure drift loudly —
+    that's the trigger for the theta-only fallback in launch/train.py."""
+    d = str(tmp_path)
+    ckpt.save_checkpoint(d, 1, {"scores": {"w": jnp.ones((4, 3))}})
+    with pytest.raises(KeyError, match="missing leaf"):
+        ckpt.restore_checkpoint(d, {"scores": {"w": jnp.ones((4, 3)),
+                                               "extra": jnp.ones(2)}})
+    with pytest.raises(ValueError, match="shape"):
+        ckpt.restore_checkpoint(d, {"scores": {"w": jnp.ones((2, 3))}})
+
+
+def test_bundle_roundtrip_atomic_and_typed(tmp_path):
+    """save_bundle/load_bundle (the async engine's persistence): None
+    sentinels, bf16 leaves, '/'-keys, and the JSON extra all survive;
+    a bundle is only visible once its manifest landed."""
+    import ml_dtypes
+    p = str(tmp_path / "sub" / "bundle")
+    arrays = {"state/0": np.arange(5, dtype=np.uint32),
+              "state/1": None,
+              "buf0/w": jnp.asarray([1.5, -2.5], jnp.bfloat16)}
+    extra = {"tick": 7, "totals": {"commits": 2, "bits": 123.5}}
+    assert not ckpt.bundle_exists(p)
+    ckpt.save_bundle(p, arrays, extra)
+    assert ckpt.bundle_exists(p)
+    got, gextra = ckpt.load_bundle(p)
+    assert gextra == extra
+    np.testing.assert_array_equal(got["state/0"], arrays["state/0"])
+    assert got["state/1"] is None
+    assert got["buf0/w"].dtype == ml_dtypes.bfloat16
+    np.testing.assert_array_equal(
+        got["buf0/w"].view(np.uint16),
+        np.asarray(arrays["buf0/w"]).view(np.uint16))
+    # no staging files left behind
+    assert not [f for f in os.listdir(tmp_path / "sub") if ".tmp" in f]
+
+
+# ---------------------------------------------------------------------------
+# runtime/fault.py — restart determinism
+# ---------------------------------------------------------------------------
+
+
+def test_fault_draws_are_pure_functions_of_seed_and_round():
+    """No mutable generator: two simulators (or the same one twice)
+    produce identical draws for the same (seed, round) — the property a
+    coordinator restart relies on."""
+    a = fault.FaultSimulator(n_clients=50, fail_prob=0.3, seed=9)
+    b = fault.FaultSimulator(n_clients=50, fail_prob=0.3, seed=9)
+    for r in (0, 3, 17):
+        np.testing.assert_array_equal(a.sample_round(round_idx=r),
+                                      b.sample_round(round_idx=r))
+        np.testing.assert_array_equal(a.sample_round(round_idx=r),
+                                      a.sample_round(round_idx=r))
+    # cursor mode is just a default round index: resuming a fresh sim
+    # at cursor=r continues the identical sequence
+    seq = [a.sample_round() for _ in range(5)]
+    c = fault.FaultSimulator(n_clients=50, fail_prob=0.3, seed=9,
+                             cursor=3)
+    np.testing.assert_array_equal(c.sample_round(), seq[3])
+    np.testing.assert_array_equal(c.sample_round(), seq[4])
+    # different seeds decorrelate
+    d = fault.FaultSimulator(n_clients=50, fail_prob=0.3, seed=10)
+    assert not np.array_equal(d.sample_round(round_idx=0),
+                              b.sample_round(round_idx=0))
+
+
+def test_straggler_cut_takes_only_latencies():
+    """The cut is a pure deadline sort — the legacy rng parameter is
+    gone (it was never used and poisoned restart determinism)."""
+    params = inspect.signature(fault.StragglerPolicy.cut).parameters
+    assert list(params) == ["self", "latencies"]
+    pol = fault.StragglerPolicy(quorum_frac=0.5)
+    lat = np.asarray([3.0, 1.0, 2.0, 4.0])
+    keep = pol.cut(lat)
+    np.testing.assert_array_equal(keep, [False, True, True, False])
+
+
+def test_quorum_bounds_and_all_dead_rescue():
+    sim = fault.FaultSimulator(n_clients=100, fail_prob=0.2, seed=1)
+    pol = fault.StragglerPolicy(quorum_frac=0.7)
+    alive = sim.sample_round(pol, round_idx=0)
+    assert 1 <= alive.sum() <= 70
+    # fail_prob=1: the server never stalls — exactly one rescue survivor
+    dead = fault.FaultSimulator(n_clients=40, fail_prob=1.0, seed=2)
+    for r in range(4):
+        assert dead.sample_round(round_idx=r).sum() == 1
+
+
+def test_pod_outages_are_correlated():
+    """With per-client failures off, aliveness is constant WITHIN each
+    pod (whole failure domains drop together)."""
+    sim = fault.FaultSimulator(n_clients=40, fail_prob=0.0, pod_size=8,
+                               pod_outage_prob=0.5, seed=3)
+    saw_down = False
+    for r in range(6):
+        alive = sim.sample_round(round_idx=r)
+        if alive.sum() == 1:
+            continue  # all-dead rescue breaks within-pod uniformity
+        for p in range(5):
+            pod = alive[p * 8:(p + 1) * 8]
+            assert pod.all() or not pod.any()
+            saw_down |= not pod.any()
+    assert saw_down
+
+
+def test_injector_corruption_is_deterministic_and_single_bit():
+    inj = fault.FaultInjector(8, seed=4, crash_prob=0.25,
+                              straggler_prob=0.5, corrupt_prob=0.5)
+    inj2 = fault.FaultInjector(8, seed=4, crash_prob=0.25,
+                               straggler_prob=0.5, corrupt_prob=0.5)
+    for r in (0, 2):
+        np.testing.assert_array_equal(inj.dropped(r), inj2.dropped(r))
+        np.testing.assert_array_equal(inj.delay_rounds(r),
+                                      inj2.delay_rounds(r))
+        for c in range(8):
+            for a in range(2):
+                assert inj.corrupt_attempt(r, c, a) == \
+                    inj2.corrupt_attempt(r, c, a)
+    words = [np.arange(10, dtype=np.uint32), np.zeros(3, np.uint32)]
+    out = inj.corrupt_words(words, 0, 1, 0)
+    out2 = inj2.corrupt_words(words, 0, 1, 0)
+    flat = np.concatenate(words)
+    oflat = np.concatenate([np.asarray(w) for w in out])
+    diff = flat ^ oflat
+    assert np.count_nonzero(diff) == 1
+    assert bin(int(diff[diff != 0][0])).count("1") == 1
+    np.testing.assert_array_equal(oflat,
+                                  np.concatenate([np.asarray(w)
+                                                  for w in out2]))
+
+
+# ---------------------------------------------------------------------------
+# runtime/elastic.py
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k,s", [(32, 8), (32, 4), (7, 3), (5, 5),
+                                 (100, 7)])
+def test_cohort_plan_exactly_covers_all_clients(k, s):
+    plan = elastic.cohort_plan(k, s)
+    assert len(plan) == s
+    allc = np.concatenate(plan)
+    assert sorted(allc.tolist()) == list(range(k))
+
+
+def test_restore_theta_only_refits_cohorts_and_resets_optimizer(
+        tmp_path):
+    """The structure-mismatch fallback: scores carry over (cohort axis
+    refit by averaging), optimizer moments restart at zero, weights stay
+    the template's (seed-regenerated), step comes from the manifest."""
+    d = str(tmp_path)
+    old = {"scores": {"w": np.asarray([[0., 2.], [4., 6.], [2., 4.],
+                                       [2., 0.]], np.float32)},
+           "floats": {"b": np.full((4, 3), 5.0, np.float32)},
+           "opt_m": {"w": np.ones((4, 2), np.float32)},
+           "weights": {"w": np.asarray([1.5], np.float32)},
+           "step": np.asarray(40, np.int32)}
+    ckpt.save_checkpoint(d, 40, old)
+    like = {"scores": {"w": jnp.zeros((2, 2))},
+            "floats": {"b": jnp.zeros((2, 3))},
+            "opt_m": {"w": jnp.full((2, 2), 9.0)},
+            "weights": {"w": jnp.asarray([7.5])},
+            "step": jnp.asarray(0, jnp.int32)}
+    state, step = elastic.restore_theta_only(d, like)
+    assert step == 40
+    # cohort mean of the old scores, broadcast onto C=2
+    np.testing.assert_allclose(np.asarray(state["scores"]["w"]),
+                               [[2., 3.], [2., 3.]])
+    np.testing.assert_allclose(np.asarray(state["floats"]["b"]),
+                               np.full((2, 3), 5.0))
+    np.testing.assert_array_equal(np.asarray(state["opt_m"]["w"]),
+                                  np.zeros((2, 2)))
+    # weights are NOT taken from the checkpoint
+    np.testing.assert_array_equal(np.asarray(state["weights"]["w"]),
+                                  [7.5])
+    assert int(state["step"]) == 40
+    # same-shape leaves pass through bit-identically
+    state2, _ = elastic.restore_theta_only(d, old)
+    np.testing.assert_array_equal(state2["scores"]["w"],
+                                  old["scores"]["w"])
+
+
+def test_fit_cohort_rejects_incompatible_trailing_shape():
+    with pytest.raises(ValueError, match="cannot fit"):
+        elastic._fit_cohort(np.ones((4, 3)), np.ones((2, 5)))
+
+
+# ---------------------------------------------------------------------------
+# launch/steps.py — survivor-renormalized round aggregation
+# ---------------------------------------------------------------------------
+
+
+def _round_setup(C=4):
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    api = build_model(cfg)
+    state = steplib.init_fed_state(jax.random.PRNGKey(5), api, SPEC,
+                                   C=C)
+    state["scores"] = jax.tree_util.tree_map(
+        lambda s: None if s is None else s
+        + jax.random.normal(jax.random.PRNGKey(6), s.shape),
+        state["scores"], is_leaf=lambda x: x is None)
+    rs = jax.jit(steplib.make_round_step(api, steplib.StepConfig()))
+    return state, rs
+
+
+def test_round_step_participation_renormalizes_over_survivors():
+    """The --fail-prob wire: a participation vector gates which cohorts
+    the round folds. All-alive matches the legacy no-vector path; half
+    participation halves the measured uplink bits (dead cohorts never
+    touch the wire)."""
+    state, rs = _round_setup(C=4)
+    s_none, m_none = rs(state)
+    s_ones, m_ones = rs(state, jnp.ones((4,), bool))
+    for (_, a), (_, b) in zip(
+            masking.leaves_with_paths(s_none["scores"]),
+            masking.leaves_with_paths(s_ones["scores"])):
+        if a is None:
+            continue
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-2)  # bf16 psum rounding
+    assert float(m_ones["bits_measured"]) == \
+        float(m_none["bits_measured"])
+    s_half, m_half = rs(state, jnp.asarray([True, True, False, False]))
+    assert float(m_half["bits_measured"]) == pytest.approx(
+        0.5 * float(m_none["bits_measured"]))
+    assert 0.0 <= float(m_half["bpp"]) <= 1.0
+    # survivors' masks only: aggregating {0,1} vs all four differs
+    diff = any(
+        a is not None and not np.allclose(np.asarray(a), np.asarray(b),
+                                          atol=1e-4)
+        for (_, a), (_, b) in zip(
+            masking.leaves_with_paths(s_half["scores"]),
+            masking.leaves_with_paths(s_ones["scores"])))
+    assert diff
+
+
+def test_round_step_single_survivor_equals_its_own_mask():
+    """With one survivor the weighted mean is that cohort's mask alone —
+    the all-dead rescue path must stay numerically sane."""
+    state, rs = _round_setup(C=3)
+    s1, m1 = rs(state, jnp.asarray([False, True, False]))
+    for _, leaf in masking.leaves_with_paths(s1["scores"]):
+        if leaf is None:
+            continue
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+    assert float(m1["bits_measured"]) == pytest.approx(
+        float(rs(state, jnp.ones((3,), bool))[1]["bits_measured"]) / 3)
+
+
+# ---------------------------------------------------------------------------
+# launch/train.py — the ledger sidecar format the chaos smoke relies on
+# ---------------------------------------------------------------------------
+
+
+def test_comm_ledger_sidecar_roundtrip(tmp_path):
+    from repro import api as fedapi
+    ledger = fedapi.CommLedger()
+    ledger.update({"uplink_bits_measured": 1000.0,
+                   "downlink_bits": 2000.0})
+    p = str(tmp_path / "comm_ledger.json")
+    with open(p, "w") as f:
+        json.dump({"uplink_bits": ledger.uplink_bits,
+                   "downlink_bits": ledger.downlink_bits,
+                   "rounds": ledger.rounds}, f)
+    with open(p) as f:
+        back = fedapi.CommLedger(**json.load(f))
+    assert back.rounds == 1
+    assert back.total_mb == ledger.total_mb

@@ -1,0 +1,142 @@
+#!/usr/bin/env python
+"""Crash-restart chaos smoke: kill the trainer mid-run, resume, and
+assert crash consistency (the CI twin of docs/DESIGN.md §5).
+
+    PYTHONPATH=src python tools/chaos_smoke.py
+
+Drives `repro.launch.train` as a real subprocess with checkpointing and
+fault injection on, then:
+
+  1. waits for the FIRST round commit (checkpoint + ledger sidecar on
+     disk) and SIGKILLs the process — no atexit, no flush, exactly a
+     coordinator crash;
+  2. relaunches the identical command and lets it run to completion;
+  3. asserts STEP CONTINUITY (the resumed run starts from the
+     checkpointed step, never from 0) and a MONOTONE CommLedger (the
+     cumulative byte ledger resumes from the sidecar and only grows —
+     a crash must never under-report communication).
+
+Exit code 0 = pass; any assertion prints FAIL and exits 1 (the same
+convention as tools/check_bench.py / check_docs.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+
+STEPS = 12
+ROUND_EVERY = 4
+
+
+def _cmd(ckpt_dir: str) -> list:
+    return [
+        sys.executable, "-m", "repro.launch.train", "--smoke",
+        "--steps", str(STEPS), "--round-every", str(ROUND_EVERY),
+        "--cohorts", "4", "--fail-prob", "0.3", "--quorum-frac", "0.8",
+        "--ckpt-dir", ckpt_dir,
+    ]
+
+
+def _read_ledger(ckpt_dir: str) -> dict:
+    with open(os.path.join(ckpt_dir, "comm_ledger.json")) as f:
+        return json.load(f)
+
+
+def _fail(msg: str) -> None:
+    print(f"FAIL: {msg}")
+    sys.exit(1)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--timeout", type=float, default=600.0,
+                    help="per-phase wall clock limit (s)")
+    args = ap.parse_args(argv)
+
+    ckpt_dir = tempfile.mkdtemp(prefix="chaos_smoke_")
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    ledger_path = os.path.join(ckpt_dir, "comm_ledger.json")
+
+    # -- phase 1: run until the first round lands on disk, then KILL ----
+    print(f"[1/3] launch + kill after first commit  (ckpt={ckpt_dir})")
+    p = subprocess.Popen(_cmd(ckpt_dir), env=env,
+                         stdout=subprocess.PIPE,
+                         stderr=subprocess.STDOUT)
+    deadline = time.time() + args.timeout
+    try:
+        while time.time() < deadline:
+            if p.poll() is not None:
+                _fail(f"trainer exited (rc={p.returncode}) before the "
+                      "kill — round too fast or crashed; output:\n"
+                      + p.stdout.read().decode())
+            if (os.path.exists(os.path.join(ckpt_dir, "LATEST"))
+                    and os.path.exists(ledger_path)):
+                break
+            time.sleep(0.2)
+        else:
+            _fail("no checkpoint appeared within the timeout")
+        os.kill(p.pid, signal.SIGKILL)   # a real coordinator crash
+        p.wait(timeout=30)
+    finally:
+        if p.poll() is None:
+            p.kill()
+    with open(os.path.join(ckpt_dir, "LATEST")) as f:
+        killed_at = int(f.read().strip())
+    pre = _read_ledger(ckpt_dir)
+    print(f"      killed after step {killed_at}; "
+          f"ledger rounds={pre['rounds']} "
+          f"uplink_bits={pre['uplink_bits']:.0f}")
+    if killed_at < ROUND_EVERY:
+        _fail(f"checkpoint step {killed_at} before the first round")
+
+    # -- phase 2: resume the identical command to completion ------------
+    print("[2/3] resume to completion")
+    out = subprocess.run(_cmd(ckpt_dir), env=env, capture_output=True,
+                         text=True, timeout=args.timeout)
+    sys.stdout.write(out.stdout)
+    if out.returncode != 0:
+        _fail(f"resumed run failed (rc={out.returncode}):\n"
+              + out.stderr[-2000:])
+
+    # -- phase 3: continuity + monotone ledger --------------------------
+    print("[3/3] assert step continuity + monotone ledger")
+    m = re.search(r"resumed at step (\d+)", out.stdout)
+    if not m:
+        _fail("resumed run did not restore the checkpoint "
+              "(no 'resumed at step' line)")
+    resumed = int(m.group(1))
+    if resumed != killed_at:
+        _fail(f"step discontinuity: killed at {killed_at}, "
+              f"resumed at {resumed}")
+    if not re.search(r"resumed ledger:", out.stdout):
+        _fail("CommLedger sidecar was not resumed")
+    if "done" not in out.stdout:
+        _fail("resumed run did not reach 'done'")
+    post = _read_ledger(ckpt_dir)
+    for k in ("uplink_bits", "downlink_bits", "rounds"):
+        if post[k] < pre[k]:
+            _fail(f"ledger went BACKWARD across the crash: "
+                  f"{k} {pre[k]} -> {post[k]}")
+    if post["rounds"] <= pre["rounds"]:
+        _fail(f"no rounds after resume ({pre['rounds']} -> "
+              f"{post['rounds']})")
+    expect_rounds = STEPS // ROUND_EVERY
+    if post["rounds"] != expect_rounds:
+        _fail(f"resumed run re-counted rounds: total {post['rounds']} "
+              f"!= {expect_rounds} (double-counting a replayed round?)")
+    print(f"OK: killed at step {killed_at}, resumed at {resumed}, "
+          f"ledger {pre['rounds']} -> {post['rounds']} rounds "
+          f"monotone ({pre['uplink_bits']:.0f} -> "
+          f"{post['uplink_bits']:.0f} uplink bits)")
+
+
+if __name__ == "__main__":
+    main()
