@@ -1,0 +1,128 @@
+"""Multi-tenant serving benchmark: tokens/s vs resident sub-network
+count vs bytes, through `repro.runtime.serve_engine.ServeEngine`.
+
+The paper's serving claim (docs/DESIGN.md §3): every tenant is a 1-bit
+mask over ONE shared frozen random `w`, so weight HBM stays constant
+while the tenant count grows — only the bounded freeze-cache of
+materialized trees (<= --cache-capacity deltas) and the ~1 bit/param
+mask artifacts scale.  Each row of the sweep serves a different tenant
+count through the same engine (staggered prompt/generation lengths so
+continuous batching genuinely interleaves prefill and decode) and
+records the HBM ledger next to the measured throughput:
+
+    PYTHONPATH=src python benchmarks/serve_bench.py --smoke \
+        --json BENCH_serve.json
+
+`tools/check_serve.py` diffs the output against the committed
+baseline: the structural invariants (constant weight bytes, bounded
+cache occupancy, evictions once tenants exceed capacity) are asserted
+on any backend; throughput ratios are gated only on real hardware
+(interpret-mode timings are emulation artifacts).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import masking
+from repro.kernels import ops
+from repro.models import build_model
+from repro.runtime.serve_engine import ServeEngine
+
+
+def _staggered(i: int, prompt_len: int, tokens: int):
+    """Per-tenant (prompt, gen) lengths: stagger by tenant index so
+    slots free at different ticks and admission interleaves prefill
+    with decode (a uniform fleet finishes in lockstep and never mixes
+    phases)."""
+    p = max(2, prompt_len - (i % 3))
+    g = max(1, tokens - 2 + (i % 3))
+    return p, g
+
+
+def run_sweep(args):
+    cfg = get_config(args.arch, smoke=args.smoke)
+    api = build_model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    mp = masking.init_masked(key, api.init_params(key),
+                             masking.MaskSpec())
+    max_seq = args.prompt_len + args.tokens + 1
+    prompts = np.asarray(jax.random.randint(
+        key, (max(args.tenant_counts), args.prompt_len), 0, cfg.vocab))
+
+    rows = []
+    for tenants in args.tenant_counts:
+        eng = ServeEngine(api, mp, slots=args.slots,
+                          cache_capacity=args.cache_capacity,
+                          max_seq=max_seq)
+        for i in range(tenants):
+            p, g = _staggered(i, args.prompt_len, args.tokens)
+            eng.register_tenant(f"t{i}", seed=args.seed + i)
+            eng.submit(f"t{i}", prompts[i, :p], g)
+        done = eng.run()
+        st = eng.stats()
+        assert len(done) == tenants
+        rows.append({
+            "tenants": tenants,
+            "slots": args.slots,
+            "capacity": st["capacity"],
+            "occupancy": st["occupancy"],
+            "hits": st["hits"],
+            "misses": st["misses"],
+            "evictions": st["evictions"],
+            "mixed_ticks": st["mixed_ticks"],
+            "weight_bytes": st["weight_bytes"],
+            "delta_bytes_per_tree": st["delta_bytes_per_tree"],
+            "resident_bytes": st["resident_bytes"],
+            "mask_artifact_bytes": st["mask_artifact_bytes"],
+            "prefill_tokens": st["prefill_tokens"],
+            "decode_tokens": st["decode_tokens"],
+            "prefill_tok_s": st["prefill_tok_s"],
+            "decode_tok_s": st["decode_tok_s"],
+        })
+        print(f"tenants={tenants:2d}  occupancy={st['occupancy']}/"
+              f"{st['capacity']}  evictions={st['evictions']:2d}  "
+              f"weight={st['weight_bytes']} B  "
+              f"resident={st['resident_bytes']} B  "
+              f"decode {st['decode_tok_s']:.1f} tok/s")
+    return {
+        "arch": cfg.name,
+        "smoke": bool(args.smoke),
+        "backend": jax.default_backend(),
+        "interpret": bool(ops._use_interpret()),
+        "slots": args.slots,
+        "cache_capacity": args.cache_capacity,
+        "rows": rows,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--tokens", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--cache-capacity", type=int, default=2)
+    ap.add_argument("--tenant-counts", type=lambda s: [
+        int(x) for x in s.split(",")], default=[1, 2, 4, 6],
+        help="tenant counts per row; must cross --cache-capacity so "
+             "the sweep shows weight HBM constant past the cache bound")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    result = run_sweep(args)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,8 +28,9 @@ Two execution paths consume these primitives (docs/DESIGN.md §3):
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -421,6 +422,142 @@ def freeze_for_decode(tree: Pytree) -> Pytree:
         lambda p: materialize_leaf(p) if isinstance(p, MaskedLeaf)
         else p,
         tree, is_leaf=lambda x: x is None or isinstance(x, MaskedLeaf))
+
+
+# ---------------------------------------------------------------------------
+# Serving: per-tenant mask identities + the bounded freeze-cache
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskIdentity:
+    """Hashable identity of one tenant's sub-network for serving.
+
+    A deployed tenant differs from every other tenant ONLY by its mask
+    — the frozen random `w` is shared — so the identity is exactly the
+    mask-stream coordinates that regenerate the mask:
+
+      seed:   the artifact's run seed (`mask_stream_seed(..., run_seed)`)
+      mode:   "threshold" (the FedMask-style deployed artifact,
+              `launch/serve.py`'s convention) or "sample"
+      tau:    threshold for mode="threshold"
+      cohort: stream cohort coordinate (0 = the single-artifact default)
+      tag:    disambiguator for tenants that carry a per-tenant score
+              tree over the shared `w` (two identities with equal
+              coordinates but distinct scores MUST differ in `tag`,
+              or the freeze-cache would alias them)
+
+    `MaskIdentity` is the freeze-cache key (`FreezeCache`) and the
+    per-slot identity of the serving engine
+    (`repro.runtime.serve_engine.ServeEngine`).
+    """
+    seed: int
+    mode: str = "threshold"
+    tau: float = 0.5
+    cohort: int = 0
+    tag: str = ""
+
+
+def freeze_identity(mp: MaskedParams, ident: MaskIdentity,
+                    scores: Optional[Pytree] = None) -> Pytree:
+    """The per-slot freeze API: materialize the decode tree for ONE
+    tenant identity over the shared `MaskedParams`.
+
+    Builds the threshold/sample forward tree at the identity's stream
+    coordinates (step=0, dev=0 — the serving convention of
+    `launch/serve.py`) and freezes it once via `freeze_for_decode`.
+    ``scores`` optionally substitutes a per-tenant score tree (a
+    personalized artifact) over the SAME shared weights; the frozen
+    result is a plain-array params pytree ready for
+    `api.decode_step` — zero mask resampling afterwards.
+    """
+    if scores is not None:
+        mp = MaskedParams(mp.weights, scores, mp.floats)
+    seed_fn = lambda i: mask_stream_seed(0, 0, i, ident.cohort,
+                                         run_seed=ident.seed)
+    return freeze_for_decode(masked_forward_tree(
+        mp, seed_fn, mode=ident.mode, tau=ident.tau))
+
+
+class FreezeCache:
+    """Bounded LRU cache of materialized decode trees.
+
+    Serving keeps ONE copy of the frozen random weights and at most
+    ``capacity`` materialized per-tenant trees, so resident HBM is
+    ``1 x w + capacity x masked-leaf deltas`` regardless of how many
+    tenants rotate through the engine (docs/DESIGN.md §3).
+
+    Semantics (property-tested in tests/test_serving_property.py):
+
+      * ``get(key)`` returns the cached tree on a hit (moving the key
+        to most-recently-used) or builds one via ``build_fn(key)`` on
+        a miss, evicting the exact least-recently-used entry when
+        occupancy would exceed ``capacity``;
+      * occupancy NEVER exceeds ``capacity``;
+      * a hit is bit-identical to a fresh build of the same key (the
+        builder is deterministic: the mask stream is a pure function
+        of the identity).
+
+    ``hits`` / ``misses`` / ``evictions`` counters feed the serving
+    benchmark (`benchmarks/serve_bench.py`).
+    """
+
+    def __init__(self, build_fn: Callable[[Any], Pytree], capacity: int):
+        if capacity < 1:
+            raise ValueError(f"FreezeCache capacity must be >= 1, "
+                             f"got {capacity}")
+        self._build = build_fn
+        self.capacity = int(capacity)
+        self._store = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key) -> Pytree:
+        if key in self._store:
+            self._store.move_to_end(key)
+            self.hits += 1
+            return self._store[key]
+        self.misses += 1
+        tree = self._build(key)
+        self._store[key] = tree
+        if len(self._store) > self.capacity:
+            self._store.popitem(last=False)
+            self.evictions += 1
+        return tree
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __contains__(self, key) -> bool:
+        return key in self._store
+
+    def keys(self):
+        """Resident keys in LRU -> MRU order (eviction order)."""
+        return list(self._store.keys())
+
+    def stats(self) -> dict:
+        return {"capacity": self.capacity, "occupancy": len(self._store),
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions}
+
+
+def masked_delta_bytes(mp: MaskedParams) -> int:
+    """Bytes of ONE materialized per-tenant tree's masked leaves (the
+    per-cache-entry HBM delta: m ⊙ w at w's dtype; float leaves and
+    the shared `w` are counted once, engine-wide)."""
+    return sum(l.size * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(mp.weights)
+               if l is not None)
+
+
+def mask_artifact_bytes(mp: MaskedParams) -> int:
+    """Wire size of one tenant's packed 1-bit mask artifact (uint32
+    word-aligned per leaf) — what a tenant costs to SHIP, vs
+    `masked_delta_bytes` (what a resident tenant costs in HBM)."""
+    return sum(4 * ((l.size + 31) // 32)
+               for l in jax.tree_util.tree_leaves(mp.scores)
+               if l is not None)
 
 
 def final_mask(mp: MaskedParams, key: jax.Array) -> Pytree:

@@ -676,3 +676,23 @@ def make_serve_step(api):
     def serve_step(params, cache, token, pos):
         return api.decode_step(params, cache, token, pos)
     return serve_step
+
+
+def make_multi_serve_step(api):
+    """Slot-major multi-tenant decode: one vmapped step over B batch
+    slots, each carrying ITS OWN params tree (a gather over the
+    freeze-cache's materialized trees), KV cache, current token, and
+    position — the lockstep execution mode of
+    `repro.runtime.serve_engine.ServeEngine`.
+
+    Inputs are stacked with a leading slot axis: params/cache pytrees
+    `(B, ...)`, token `(B, 1)` (inner per-slot batch of 1), pos `(B,)`
+    — so slots at different sequence positions (prefill vs decode)
+    advance in ONE dispatch.  Numerically equivalent to B independent
+    `make_serve_step` calls but NOT bit-exact (batched-dot
+    reassociation); the engine's default per-slot mode is the
+    bit-identity contract (tests/test_serving.py).
+    """
+    def multi_serve_step(params, caches, tokens, poss):
+        return jax.vmap(api.decode_step)(params, caches, tokens, poss)
+    return multi_serve_step

@@ -8,3 +8,6 @@ from repro.runtime.elastic import (  # noqa: F401
 from repro.runtime.async_engine import (  # noqa: F401
     AsyncConfig, AsyncRoundEngine,
 )
+from repro.runtime.serve_engine import (  # noqa: F401
+    Completion, Request, ServeEngine,
+)

@@ -1,0 +1,381 @@
+"""Mask-native multi-tenant serving engine: continuous batching over
+ONE shared frozen weight copy.
+
+The paper's serving asset: a deployed tenant is a 1-bit mask over the
+SAME frozen random network `w` — a sub-network identity
+(`masking.MaskIdentity`), ~32x smaller on the wire than a float
+adapter and ZERO extra weight copies at rest.  This engine cashes that
+in:
+
+  * one `MaskedParams` (one `w` in HBM) is shared by every tenant;
+  * per-tenant decode trees are materialized ONCE by
+    `masking.freeze_identity` and held in a bounded
+    `masking.FreezeCache` (exact LRU), so resident HBM is
+    ``1 x w + min(tenants, capacity) x masked-leaf deltas`` — never
+    ``tenants x w`` — no matter how many tenants rotate through
+    (docs/DESIGN.md §3);
+  * a continuous-batching scheduler drives ``slots`` concurrent
+    requests: every engine tick advances EACH active slot by one
+    token, so newly admitted requests PREFILL (consume their next
+    prompt token) while resident slots keep DECODING, and a freed
+    slot admits the next queued request on the same tick — token-level
+    continuous batching with prefill/decode disaggregated in the
+    accounting (`prefill_s` / `decode_s` are separate clocks);
+  * slot execution is the bit-identity contract: by default every
+    slot steps through the SAME jitted single-request `serve_step`
+    (`launch.steps.make_serve_step`), so a tenant's logits are
+    bit-identical to that tenant decoded alone in a fresh single-slot
+    session REGARDLESS of what traffic shares the engine
+    (tests/test_serving.py).  ``lockstep=True`` instead gathers the
+    resident trees into a stacked slot-major batch and runs ONE
+    vmapped step for all slots per tick
+    (`launch.steps.make_multi_serve_step`) — fewer dispatches, but
+    batched-dot reassociation makes it numerically equivalent rather
+    than bit-exact, so it is opt-in.
+
+Timing discipline (the `launch/serve.py` fix, satellite of this PR):
+compilation is forced OFF the clock by a warmup step at first admit,
+and all timing uses `time.perf_counter` with prefill and decode
+accumulated separately.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import masking
+from repro.core.masking import FreezeCache, MaskedParams, MaskIdentity
+from repro.launch import steps as steplib
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request bound to a tenant identity."""
+    rid: int
+    tenant: str
+    prompt: np.ndarray           # (P,) int32 prompt token ids
+    max_new_tokens: int
+
+
+@dataclasses.dataclass
+class Completion:
+    """Finished request: generated ids plus the decode-step logits
+    that produced them (``decode_logits[i]`` -> ``tokens[i]``), for
+    the bit-identity harness."""
+    rid: int
+    tenant: str
+    prompt: np.ndarray
+    tokens: List[int]
+    decode_logits: List[np.ndarray]
+    prefill_steps: int
+    decode_steps: int
+
+
+class _Slot:
+    """One batch slot: its own KV cache + the tenant's frozen tree."""
+    __slots__ = ("req", "tree", "cache", "pos", "t", "tokens",
+                 "logits", "last_token")
+
+    def __init__(self):
+        self.req: Optional[Request] = None
+        self.tree = None
+        self.cache = None
+        self.pos = 0           # next cache write position
+        self.t = 0             # tokens consumed so far (prompt + gen)
+        self.tokens: List[int] = []
+        self.logits: List[np.ndarray] = []
+        self.last_token = 0
+
+    @property
+    def active(self) -> bool:
+        return self.req is not None
+
+    @property
+    def prefilling(self) -> bool:
+        # the step consuming the LAST prompt token emits the logits
+        # that start generation, so it already counts as decode work
+        return self.active and self.t < len(self.req.prompt) - 1
+
+    def free(self):
+        self.req = None
+        self.tree = None
+        self.cache = None
+        self.tokens = []
+        self.logits = []
+
+
+class ServeEngine:
+    """Continuous-batching scheduler over one shared frozen `w`.
+
+    Parameters
+    ----------
+    api:            `repro.models.ModelApi` for the served arch.
+    mp:             shared `MaskedParams` — ONE frozen weight copy; every
+                    tenant is a mask identity over it.
+    slots:          concurrent batch slots (in-flight requests).
+    cache_capacity: bound on resident materialized trees (exact LRU).
+    max_seq:        per-slot KV-cache length (>= prompt + generated).
+    lockstep:       False -> per-slot jitted single-request steps (the
+                    bit-identity contract); True -> one vmapped step
+                    for all slots per tick (throughput mode).
+    """
+
+    def __init__(self, api, mp: MaskedParams, *, slots: int = 4,
+                 cache_capacity: int = 2, max_seq: int = 64,
+                 lockstep: bool = False):
+        if slots < 1:
+            raise ValueError(f"need >= 1 slot, got {slots}")
+        self.api = api
+        self.mp = mp
+        self.max_seq = int(max_seq)
+        self.lockstep = bool(lockstep)
+        self._tenants: Dict[str, MaskIdentity] = {}
+        self._scores: Dict[MaskIdentity, Pytree] = {}
+        self.cache = FreezeCache(self._freeze, cache_capacity)
+        self._step = jax.jit(steplib.make_serve_step(api))
+        self._vstep = jax.jit(steplib.make_multi_serve_step(api))
+        self.slots = [_Slot() for _ in range(slots)]
+        self.queue: collections.deque = collections.deque()
+        self.completions: Dict[int, Completion] = {}
+        self._next_rid = 0
+        self._warm = False
+        # lockstep device state: slot-major stacked trees/caches
+        self._stacked_tree = None
+        self._stacked_cache = None
+        # stats
+        self.ticks = 0
+        self.mixed_ticks = 0       # ticks with prefill AND decode slots
+        self.prefill_s = 0.0
+        self.decode_s = 0.0
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
+
+    # -- tenants ------------------------------------------------------------
+
+    def register_tenant(self, name: str,
+                        ident: Optional[MaskIdentity] = None, *,
+                        seed: Optional[int] = None,
+                        mode: str = "threshold", tau: float = 0.5,
+                        scores: Optional[Pytree] = None) -> MaskIdentity:
+        """Bind ``name`` to a mask identity (built from ``seed`` when
+        not given explicitly).  ``scores`` optionally carries the
+        tenant's personal score tree over the shared `w`; distinct
+        score trees need distinct identities (use `MaskIdentity.tag`)."""
+        if ident is None:
+            if seed is None:
+                raise ValueError("register_tenant needs ident= or seed=")
+            ident = MaskIdentity(seed=int(seed), mode=mode, tau=tau,
+                                 tag=name if scores is not None else "")
+        if name in self._tenants:
+            raise ValueError(f"tenant {name!r} already registered")
+        if scores is not None and ident in self._scores \
+                and self._scores[ident] is not scores:
+            raise ValueError(
+                f"identity {ident} already bound to a different score "
+                "tree; disambiguate with MaskIdentity.tag")
+        self._tenants[name] = ident
+        if scores is not None:
+            self._scores[ident] = scores
+        return ident
+
+    def _freeze(self, ident: MaskIdentity) -> Pytree:
+        return masking.freeze_identity(self.mp, ident,
+                                       scores=self._scores.get(ident))
+
+    # -- requests -----------------------------------------------------------
+
+    def submit(self, tenant: str, prompt, max_new_tokens: int) -> int:
+        """Queue one request; returns the request id."""
+        if tenant not in self._tenants:
+            raise KeyError(f"unknown tenant {tenant!r}; "
+                           f"registered: {sorted(self._tenants)}")
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size < 1:
+            raise ValueError("empty prompt")
+        if prompt.size + max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new_tokens "
+                f"({max_new_tokens}) exceeds max_seq ({self.max_seq})")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, tenant, prompt,
+                                  int(max_new_tokens)))
+        return rid
+
+    # -- scheduling ---------------------------------------------------------
+
+    def _admit(self, i: int, req: Request):
+        slot = self.slots[i]
+        slot.req = req
+        slot.tree = self.cache.get(self._tenants[req.tenant])
+        slot.cache = self.api.init_cache(1, self.max_seq)
+        slot.pos = 0
+        slot.t = 0
+        slot.tokens = []
+        slot.logits = []
+        slot.last_token = int(req.prompt[0])
+        if self.lockstep:
+            self._scatter_slot(i, slot)
+        if not self._warm:
+            # compile OFF the clock: one throwaway step on a scratch
+            # cache (same shapes/dtypes as every later call)
+            scratch = self.api.init_cache(1, self.max_seq)
+            tok = jnp.asarray([slot.last_token], jnp.int32)
+            if self.lockstep:
+                B = len(self.slots)
+                out = self._vstep(
+                    self._stacked_tree, self._stacked_cache,
+                    jnp.zeros((B, 1), jnp.int32),
+                    jnp.zeros((B,), jnp.int32))
+            else:
+                out = self._step(slot.tree, scratch, tok,
+                                 jnp.asarray(0, jnp.int32))
+            jax.block_until_ready(out[0])
+            self._warm = True
+
+    def _scatter_slot(self, i: int, slot: _Slot):
+        """Gather the slot's cached tree/cache into the stacked
+        slot-major device state (lockstep mode)."""
+        if self._stacked_tree is None:
+            B = len(self.slots)
+            self._stacked_tree = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (B,) + a.shape),
+                slot.tree)
+            self._stacked_cache = jax.tree_util.tree_map(
+                lambda c: jnp.broadcast_to(c[None],
+                                           (B,) + c.shape).copy(),
+                slot.cache)
+            return
+        self._stacked_tree = jax.tree_util.tree_map(
+            lambda b, t: b.at[i].set(t), self._stacked_tree, slot.tree)
+        self._stacked_cache = jax.tree_util.tree_map(
+            lambda b, c: b.at[i].set(c), self._stacked_cache, slot.cache)
+
+    def step(self) -> bool:
+        """One engine tick: admit queued requests into free slots, then
+        advance every active slot by one token.  Returns False when
+        idle (no active slot and empty queue)."""
+        for i, slot in enumerate(self.slots):
+            if not slot.active and self.queue:
+                self._admit(i, self.queue.popleft())
+        phases = [slot.prefilling for slot in self.slots if slot.active]
+        if not phases:
+            return False
+        if any(phases) and not all(phases):
+            self.mixed_ticks += 1
+        if self.lockstep:
+            self._tick_lockstep()
+        else:
+            for slot in self.slots:
+                if slot.active:
+                    self._advance_exact(slot)
+        self.ticks += 1
+        return True
+
+    def run(self) -> Dict[int, Completion]:
+        """Drive ticks until queue and slots drain; returns
+        completions by request id."""
+        while self.step():
+            pass
+        return self.completions
+
+    # -- exact (per-slot) execution ----------------------------------------
+
+    def _advance_exact(self, slot: _Slot):
+        tok = jnp.asarray([slot.last_token], jnp.int32)
+        t0 = time.perf_counter()
+        logits, slot.cache = self._step(slot.tree, slot.cache, tok,
+                                        jnp.asarray(slot.pos, jnp.int32))
+        jax.block_until_ready(logits)
+        dt = time.perf_counter() - t0
+        self._consume(slot, np.asarray(logits[0]), dt)
+
+    # -- lockstep (vmapped) execution --------------------------------------
+
+    def _tick_lockstep(self):
+        B = len(self.slots)
+        toks = np.zeros((B, 1), np.int32)
+        poss = np.zeros((B,), np.int32)
+        for i, slot in enumerate(self.slots):
+            if slot.active:
+                toks[i, 0] = slot.last_token
+                poss[i] = slot.pos
+        t0 = time.perf_counter()
+        logits, self._stacked_cache = self._vstep(
+            self._stacked_tree, self._stacked_cache,
+            jnp.asarray(toks), jnp.asarray(poss))
+        jax.block_until_ready(logits)
+        dt = time.perf_counter() - t0
+        lg = np.asarray(logits)
+        active = [s for s in self.slots if s.active]
+        share = dt / max(len(active), 1)
+        for i, slot in enumerate(self.slots):
+            if slot.active:
+                self._consume(slot, lg[i, 0], share)
+
+    # -- shared per-token bookkeeping --------------------------------------
+
+    def _consume(self, slot: _Slot, logits_row: np.ndarray, dt: float):
+        req = slot.req
+        P = len(req.prompt)
+        if slot.t < P - 1:
+            # prefill: logits discarded, next input is the next prompt
+            # token
+            self.prefill_s += dt
+            self.prefill_tokens += 1
+            slot.t += 1
+            slot.pos += 1
+            slot.last_token = int(req.prompt[slot.t])
+            return
+        # decode: these logits produce the next generated token
+        self.decode_s += dt
+        self.decode_tokens += 1
+        nxt = int(np.argmax(logits_row))
+        slot.logits.append(logits_row)
+        slot.tokens.append(nxt)
+        slot.t += 1
+        slot.pos += 1
+        slot.last_token = nxt
+        if len(slot.tokens) >= req.max_new_tokens:
+            self.completions[req.rid] = Completion(
+                rid=req.rid, tenant=req.tenant, prompt=req.prompt,
+                tokens=slot.tokens, decode_logits=slot.logits,
+                prefill_steps=P - 1, decode_steps=len(slot.tokens))
+            slot.free()
+
+    # -- accounting ---------------------------------------------------------
+
+    def hbm_report(self) -> dict:
+        """Resident-HBM decomposition: ONE shared `w` + at most
+        ``capacity`` masked-leaf deltas, independent of tenant count."""
+        delta = masking.masked_delta_bytes(self.mp)
+        occ = len(self.cache)
+        return {
+            "weight_bytes": delta,
+            "delta_bytes_per_tree": delta,
+            "resident_tree_count": occ,
+            "resident_bytes": delta + occ * delta,
+            "mask_artifact_bytes": masking.mask_artifact_bytes(self.mp),
+            "tenants": len(self._tenants),
+        }
+
+    def stats(self) -> dict:
+        out = {"ticks": self.ticks, "mixed_ticks": self.mixed_ticks,
+               "prefill_s": self.prefill_s, "decode_s": self.decode_s,
+               "prefill_tokens": self.prefill_tokens,
+               "decode_tokens": self.decode_tokens,
+               "prefill_tok_s": (self.prefill_tokens / self.prefill_s
+                                 if self.prefill_s > 0 else 0.0),
+               "decode_tok_s": (self.decode_tokens / self.decode_s
+                                if self.decode_s > 0 else 0.0)}
+        out.update(self.cache.stats())
+        out.update(self.hbm_report())
+        return out

@@ -1,0 +1,337 @@
+"""Serving-path tests: tenant-isolation bit-identity through the
+multi-tenant continuous-batching engine, freeze-cache LRU semantics
+(fixed-seed twins of tests/test_serving_property.py), the
+frozen-decode vs fused-training-forward equivalence regression (the
+formerly untested `conv1d_step` decode residue), and the
+launch/serve.py prefill/decode timing split."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import masking
+from repro.models import build_model
+from repro.runtime.serve_engine import ServeEngine
+
+
+def _build(name="internlm2-1.8b", seed=0):
+    cfg = get_config(name, smoke=True)
+    api = build_model(cfg)
+    key = jax.random.PRNGKey(seed)
+    mp = masking.init_masked(key, api.init_params(key),
+                             masking.MaskSpec())
+    return cfg, api, key, mp
+
+
+def _solo_completion(api, mp, seed, prompt, gen, max_seq, mode="sample"):
+    """The reference: the SAME tenant decoded alone in a fresh
+    single-slot session."""
+    eng = ServeEngine(api, mp, slots=1, cache_capacity=1,
+                      max_seq=max_seq)
+    eng.register_tenant("solo", seed=seed, mode=mode)
+    rid = eng.submit("solo", prompt, gen)
+    return eng.run()[rid]
+
+
+# ---------------------------------------------------------------------------
+# Tenant isolation: the bit-identity contract
+# ---------------------------------------------------------------------------
+
+
+def test_tenant_isolation_bit_identity():
+    """Interleave decode steps from 3 tenants (distinct mask seeds,
+    staggered prompt/generation lengths so admission and completion
+    never line up) through the continuous-batching engine: each
+    tenant's logits must be BIT-identical to that tenant decoded alone
+    in a fresh single-slot session."""
+    cfg, api, key, mp = _build()
+    prompts = np.asarray(jax.random.randint(key, (3, 10), 0, cfg.vocab))
+    lens = [(10, 6), (7, 8), (4, 5)]          # staggered (prompt, gen)
+    max_seq = 18
+
+    eng = ServeEngine(api, mp, slots=2, cache_capacity=3,
+                      max_seq=max_seq)
+    rids = []
+    for i, (P, G) in enumerate(lens):
+        eng.register_tenant(f"t{i}", seed=100 + i, mode="sample")
+        rids.append(eng.submit(f"t{i}", prompts[i, :P], G))
+    done = eng.run()
+    assert sorted(done) == sorted(rids)
+
+    for i, (P, G) in enumerate(lens):
+        solo = _solo_completion(api, mp, 100 + i, prompts[i, :P], G,
+                                max_seq)
+        got = done[rids[i]]
+        assert got.tokens == solo.tokens, f"tenant {i} tokens diverged"
+        assert len(got.decode_logits) == G
+        for t, (a, b) in enumerate(zip(got.decode_logits,
+                                       solo.decode_logits)):
+            assert np.array_equal(a, b), \
+                f"tenant {i} logits differ at decode step {t}"
+
+
+def test_tenant_isolation_under_cache_thrash():
+    """capacity=1 with 3 live tenants forces evictions mid-traffic;
+    re-freezing an evicted identity must reproduce the identical tree,
+    so isolation stays bit-exact even while the cache thrashes."""
+    cfg, api, key, mp = _build(seed=1)
+    prompts = np.asarray(jax.random.randint(key, (3, 6), 0, cfg.vocab))
+    eng = ServeEngine(api, mp, slots=2, cache_capacity=1, max_seq=12)
+    rids = []
+    for i in range(3):
+        eng.register_tenant(f"t{i}", seed=7 * (i + 1), mode="threshold")
+        rids.append(eng.submit(f"t{i}", prompts[i], 4))
+    done = eng.run()
+    assert eng.cache.evictions >= 1
+    assert len(eng.cache) <= 1
+    for i in range(3):
+        solo = _solo_completion(api, mp, 7 * (i + 1), prompts[i], 4, 12,
+                                mode="threshold")
+        got = done[rids[i]]
+        assert got.tokens == solo.tokens
+        assert all(np.array_equal(a, b) for a, b in
+                   zip(got.decode_logits, solo.decode_logits))
+
+
+def test_continuous_batching_mixes_prefill_and_decode():
+    """More requests than slots with staggered lengths: the engine
+    must admit new requests into freed slots while other slots keep
+    decoding (ticks where PREFILL and DECODE phases coexist), and
+    every request must complete with exactly its requested tokens."""
+    cfg, api, key, mp = _build(seed=2)
+    prompts = np.asarray(jax.random.randint(key, (4, 9), 0, cfg.vocab))
+    eng = ServeEngine(api, mp, slots=2, cache_capacity=2, max_seq=16)
+    lens = [(9, 4), (3, 9), (6, 6), (4, 8)]
+    rids = []
+    for i, (P, G) in enumerate(lens):
+        eng.register_tenant(f"t{i}", seed=i + 1)
+        rids.append(eng.submit(f"t{i}", prompts[i, :P], G))
+    done = eng.run()
+    assert sorted(done) == sorted(rids)
+    assert eng.mixed_ticks > 0, \
+        "no tick ever interleaved prefill with decode"
+    for rid, (P, G) in zip(rids, lens):
+        assert len(done[rid].tokens) == G
+        assert done[rid].prefill_steps == P - 1
+    st = eng.stats()
+    assert st["prefill_tokens"] == sum(P - 1 for P, _ in lens)
+    assert st["decode_tokens"] == sum(G for _, G in lens)
+
+
+def test_lockstep_mode_matches_exact_mode():
+    """The vmapped lockstep step (one dispatch for all slots) is the
+    throughput mode: tokens must agree with the exact per-slot mode
+    and logits must be numerically equivalent (batched-dot
+    reassociation only)."""
+    cfg, api, key, mp = _build(seed=3)
+    prompts = np.asarray(jax.random.randint(key, (3, 6), 0, cfg.vocab))
+
+    def run(lockstep):
+        eng = ServeEngine(api, mp, slots=2, cache_capacity=3,
+                          max_seq=12, lockstep=lockstep)
+        rids = []
+        for i in range(3):
+            eng.register_tenant(f"t{i}", seed=50 + i)
+            rids.append(eng.submit(f"t{i}", prompts[i], 5))
+        return eng.run(), rids
+
+    exact, rids_e = run(False)
+    lock, rids_l = run(True)
+    for re_, rl in zip(rids_e, rids_l):
+        assert exact[re_].tokens == lock[rl].tokens
+        for a, b in zip(exact[re_].decode_logits, lock[rl].decode_logits):
+            np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+
+def test_engine_input_validation():
+    cfg, api, key, mp = _build(seed=4)
+    eng = ServeEngine(api, mp, slots=1, cache_capacity=1, max_seq=8)
+    eng.register_tenant("a", seed=1)
+    with pytest.raises(ValueError):
+        eng.register_tenant("a", seed=2)       # duplicate name
+    with pytest.raises(KeyError):
+        eng.submit("ghost", [1, 2], 2)         # unknown tenant
+    with pytest.raises(ValueError):
+        eng.submit("a", list(range(7)), 4)     # overflows max_seq
+    with pytest.raises(ValueError):
+        eng.submit("a", [], 2)                 # empty prompt
+    with pytest.raises(ValueError):
+        masking.FreezeCache(lambda k: k, capacity=0)
+
+
+# ---------------------------------------------------------------------------
+# Freeze-cache LRU semantics (fixed-seed twin of the hypothesis suite)
+# ---------------------------------------------------------------------------
+
+
+def _tiny_mp():
+    key = jax.random.PRNGKey(0)
+    params_like = {"w_x": jnp.zeros((16, 8)), "bias": jnp.zeros((8,))}
+    return masking.init_masked(key, params_like, masking.MaskSpec())
+
+
+def test_freeze_cache_exact_lru():
+    mp = _tiny_mp()
+    built = []
+
+    def build(ident):
+        built.append(ident.seed)
+        return masking.freeze_identity(mp, ident)
+
+    cache = masking.FreezeCache(build, capacity=2)
+    ids = [masking.MaskIdentity(seed=s) for s in range(4)]
+
+    cache.get(ids[0])
+    cache.get(ids[1])
+    cache.get(ids[0])                  # hit: 0 becomes MRU
+    assert [i.seed for i in cache.keys()] == [1, 0]
+    cache.get(ids[2])                  # evicts 1 (exact LRU), not 0
+    assert [i.seed for i in cache.keys()] == [0, 2]
+    assert ids[1] not in cache and ids[0] in cache
+    assert cache.stats() == {"capacity": 2, "occupancy": 2, "hits": 1,
+                             "misses": 3, "evictions": 1}
+    # a hit returns a tree bit-identical to a fresh freeze of the
+    # same identity (the builder is deterministic)
+    hit = cache.get(ids[0])
+    fresh = masking.freeze_identity(mp, ids[0])
+    for a, b in zip(jax.tree_util.tree_leaves(hit),
+                    jax.tree_util.tree_leaves(fresh)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert built == [0, 1, 2]          # hits never rebuild
+
+
+def test_freeze_identity_distinct_tenants_distinct_masks():
+    """Two identities over the SAME shared weights must decode through
+    different sub-networks (distinct masks), while equal identities
+    are bit-identical."""
+    mp = _tiny_mp()
+    a = masking.freeze_identity(mp, masking.MaskIdentity(seed=1,
+                                                        mode="sample"))
+    b = masking.freeze_identity(mp, masking.MaskIdentity(seed=2,
+                                                        mode="sample"))
+    a2 = masking.freeze_identity(mp, masking.MaskIdentity(seed=1,
+                                                         mode="sample"))
+    assert not np.array_equal(np.asarray(a["w_x"]), np.asarray(b["w_x"]))
+    assert np.array_equal(np.asarray(a["w_x"]), np.asarray(a2["w_x"]))
+    # every tenant shares the SAME frozen w: where both masks are on,
+    # the effective weights agree
+    wa, wb = np.asarray(a["w_x"], np.float32), np.asarray(b["w_x"],
+                                                          np.float32)
+    both = (wa != 0) & (wb != 0)
+    assert both.any()
+    assert np.array_equal(wa[both], wb[both])
+
+
+def test_hbm_accounting_helpers():
+    mp = _tiny_mp()
+    # one masked (16, 8) bf16 leaf -> 16*8*2 bytes delta; packed mask
+    # artifact: ceil(128/32) = 4 words = 16 bytes
+    assert masking.masked_delta_bytes(mp) == 16 * 8 * 2
+    assert masking.mask_artifact_bytes(mp) == 16
+
+
+# ---------------------------------------------------------------------------
+# Decode vs fused training forward (the frozen-decode residue)
+# ---------------------------------------------------------------------------
+
+# one family per decode code path: dense attention, ssm (conv1d_step),
+# hybrid (conv1d_step + attention mix)
+DECODE_FAMILIES = ("internlm2-1.8b", "mamba2-370m", "recurrentgemma-9b")
+
+
+@pytest.mark.parametrize("name", DECODE_FAMILIES)
+@pytest.mark.parametrize("mode", ("sample", "threshold"))
+def test_frozen_decode_matches_fused_training_forward(name, mode):
+    """`freeze_for_decode(masked_forward_tree(...))` full-sequence
+    decode must match the fused training-path forward on the same
+    tokens — decode correctness as a tested property instead of a
+    docstring claim (covers the `conv1d_step` frozen-decode
+    residue)."""
+    cfg, api, key, mp = _build(name, seed=5)
+    B, S = 2, 10
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    seed_fn = lambda i: masking.mask_stream_seed(0, 0, i, 0, run_seed=9)
+
+    fused_tree = masking.masked_forward_tree(mp, seed_fn, mode=mode)
+    ref_logits = api.forward(fused_tree, {"tokens": tokens})[0]
+
+    frozen = masking.freeze_for_decode(fused_tree)
+    cache = api.init_cache(B, S)
+    dec = jax.jit(api.decode_step)
+    errs = []
+    for t in range(S):
+        logits, cache = dec(frozen, cache, tokens[:, t],
+                            jnp.asarray(t, jnp.int32))
+        errs.append(float(jnp.max(jnp.abs(logits - ref_logits[:, t]))))
+    # hybrid crosses TWO implementation boundaries (frozen plain
+    # matmuls compiled by XLA vs the fused Pallas kernels, whose f32
+    # tile accumulation orders differ at bf16 precision) on top of the
+    # bf16 ring-buffer KV cache: measured drift reaches ~0.09, while a
+    # genuinely wrong mask shows O(1) logit changes.
+    tol = 0.15 if cfg.family == "hybrid" else 0.02
+    assert max(errs) < tol, f"{name}/{mode}: {errs}"
+
+
+@pytest.mark.parametrize("name,tol", (("mamba2-370m", None),
+                                      ("recurrentgemma-9b", 0.15)))
+def test_unfrozen_masked_decode_matches_frozen(name, tol):
+    """Decoding straight through the UNFROZEN MaskedLeaf tree (the
+    per-token `conv1d_step` -> `effective_weight` materializing
+    residue plus fused dense kernels) samples the SAME mask stream as
+    `freeze_for_decode`: ssm decode is bit-identical, and the hybrid
+    stays within accumulation noise.
+
+    The hybrid is NOT bit-exact: its layer scan compiles the frozen
+    path's plain bf16 matmuls into XLA fusions whose accumulation
+    order differs from the Pallas kernels' fixed f32 tile loop
+    (verified leaf-by-leaf that the masks themselves are identical —
+    `materialize_leaf` == fused kernel output outside the scan).  A
+    wrong mask would show O(1) logit changes; the measured
+    accumulation drift is <= ~0.09."""
+    cfg, api, key, mp = _build(name, seed=6)
+    B, S = 1, 6
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    seed_fn = lambda i: masking.mask_stream_seed(0, 0, i, 0, run_seed=4)
+    tree = masking.masked_forward_tree(mp, seed_fn, mode="sample")
+    frozen = masking.freeze_for_decode(tree)
+
+    c1, c2 = api.init_cache(B, S), api.init_cache(B, S)
+    for t in range(S):
+        l1, c1 = api.decode_step(frozen, c1, tokens[:, t],
+                                 jnp.asarray(t, jnp.int32))
+        l2, c2 = api.decode_step(tree, c2, tokens[:, t],
+                                 jnp.asarray(t, jnp.int32))
+        if tol is None:
+            assert np.array_equal(np.asarray(l1), np.asarray(l2)), \
+                f"{name}: frozen vs unfrozen decode diverged at t={t}"
+        else:
+            np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                       atol=tol, rtol=0)
+
+
+# ---------------------------------------------------------------------------
+# launch/serve.py smoke: prefill/decode split + multi-tenant invocation
+# ---------------------------------------------------------------------------
+
+
+def test_serve_main_single_tenant_timing_split(capsys):
+    from repro.launch import serve
+    serve.main(["--arch", "internlm2-1.8b", "--smoke", "--batch", "2",
+                "--prompt-len", "6", "--tokens", "4"])
+    out = capsys.readouterr().out
+    assert "prefill" in out and "decode" in out
+    assert "tok/s" in out
+
+
+def test_serve_main_multi_tenant(capsys):
+    from repro.launch import serve
+    serve.main(["--arch", "internlm2-1.8b", "--smoke",
+                "--prompt-len", "6", "--tokens", "4", "--tenants", "3",
+                "--slots", "2", "--cache-capacity", "2"])
+    out = capsys.readouterr().out
+    assert "3/3 tenants served" in out
+    assert "freeze-cache" in out and "evictions" in out
+    assert "resident HBM: 1 x w" in out

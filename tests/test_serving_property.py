@@ -1,0 +1,84 @@
+"""Randomized property sweeps for the serving freeze-cache.
+
+Requires `hypothesis` (the `test` extra); the module skips cleanly
+when it is absent — fixed-seed versions of the same properties live in
+test_serving.py (`test_freeze_cache_exact_lru`).
+"""
+import collections
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masking
+
+
+def _tiny_mp():
+    key = jax.random.PRNGKey(0)
+    params_like = {"w_x": jnp.zeros((16, 8)), "bias": jnp.zeros((8,))}
+    return masking.init_masked(key, params_like, masking.MaskSpec())
+
+
+_MP = _tiny_mp()
+
+
+@given(st.integers(1, 4),
+       st.lists(st.integers(0, 5), min_size=1, max_size=24))
+@settings(max_examples=25, deadline=None)
+def test_freeze_cache_is_exact_lru(capacity, accesses):
+    """Under ARBITRARY access sequences: occupancy never exceeds
+    capacity, the resident set and its recency order match an exact
+    LRU oracle, hit/miss/eviction counters are exact, and a cache hit
+    returns a tree bit-identical to a fresh `freeze_identity` of the
+    same identity."""
+    cache = masking.FreezeCache(
+        lambda ident: masking.freeze_identity(_MP, ident), capacity)
+    oracle = collections.OrderedDict()
+    hits = misses = evictions = 0
+
+    for seed in accesses:
+        ident = masking.MaskIdentity(seed=seed)
+        was_hit = ident in oracle
+        tree = cache.get(ident)
+
+        if was_hit:
+            hits += 1
+            oracle.move_to_end(ident)
+        else:
+            misses += 1
+            oracle[ident] = True
+            if len(oracle) > capacity:
+                oracle.popitem(last=False)
+                evictions += 1
+
+        assert len(cache) <= capacity
+        assert cache.keys() == list(oracle.keys()), \
+            "resident set / recency order diverged from the LRU oracle"
+        assert (cache.hits, cache.misses, cache.evictions) == \
+            (hits, misses, evictions)
+
+        if was_hit:
+            fresh = masking.freeze_identity(_MP, ident)
+            for a, b in zip(jax.tree_util.tree_leaves(tree),
+                            jax.tree_util.tree_leaves(fresh)):
+                assert np.array_equal(np.asarray(a), np.asarray(b)), \
+                    "cache hit is not bit-identical to a fresh freeze"
+
+
+@given(st.integers(0, 2 ** 16), st.sampled_from(["sample", "threshold"]))
+@settings(max_examples=15, deadline=None)
+def test_freeze_identity_deterministic(seed, mode):
+    """freeze_identity is a pure function of (mp, identity): two
+    independent builds are bit-identical (the property the cache's
+    hit-equals-fresh guarantee rests on)."""
+    ident = masking.MaskIdentity(seed=seed, mode=mode)
+    a = masking.freeze_identity(_MP, ident)
+    b = masking.freeze_identity(_MP, ident)
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        assert np.array_equal(np.asarray(la), np.asarray(lb))

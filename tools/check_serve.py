@@ -1,0 +1,111 @@
+#!/usr/bin/env python3
+"""Serving-benchmark regression gate: compare a freshly written
+``BENCH_serve.json`` against the committed baseline.
+
+Two kinds of check (same convention as ``check_bench.py``):
+
+  * STRUCTURAL (always asserted): the sweep must prove the
+    one-shared-`w` HBM claim — ``weight_bytes`` identical across every
+    row while the tenant count grows, at least one row with
+    ``tenants > capacity``, freeze-cache occupancy never above
+    capacity, evictions observed once tenants exceed capacity, and the
+    resident-bytes ledger arithmetically consistent
+    (``weight + occupancy * delta``).
+
+  * TIMING (asserted only on real hardware): per-row
+    ``decode_tok_s`` must not regress below ``1 / --max-ratio`` of the
+    baseline row.  Under Pallas interpret mode (CPU CI) the engine
+    runs emulated kernels, so throughput is printed informationally
+    and never fails.
+
+Usage:
+    python tools/check_serve.py --fresh BENCH_serve.json \
+        --baseline /tmp/BENCH_serve_baseline.json [--max-ratio 2.0]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from _ci import finish  # noqa: E402
+
+
+def structural_errors(fresh: dict):
+    rows = fresh.get("rows") or []
+    if not rows:
+        yield "no rows in fresh BENCH_serve.json"
+        return
+    weights = {r["weight_bytes"] for r in rows}
+    if len(weights) != 1:
+        yield (f"weight_bytes varies across rows ({sorted(weights)}): "
+               "resident weight HBM must be ONE shared w regardless of "
+               "tenant count")
+    if not any(r["tenants"] > r["capacity"] for r in rows):
+        yield ("no row exercises tenants > cache capacity; the sweep "
+               "must cross the freeze-cache bound")
+    for r in rows:
+        t = r["tenants"]
+        if r["occupancy"] > r["capacity"]:
+            yield (f"tenants={t}: occupancy {r['occupancy']} exceeds "
+                   f"cache capacity {r['capacity']}")
+        if t > r["capacity"] and r["evictions"] < 1:
+            yield (f"tenants={t} > capacity {r['capacity']} but no "
+                   "evictions: LRU bound not exercised")
+        want = r["weight_bytes"] + r["occupancy"] * \
+            r["delta_bytes_per_tree"]
+        if r["resident_bytes"] != want:
+            yield (f"tenants={t}: resident_bytes {r['resident_bytes']} "
+                   f"!= weight + occupancy*delta ({want})")
+        if r["decode_tokens"] <= 0 or r["decode_tok_s"] <= 0:
+            yield f"tenants={t}: no decode throughput recorded"
+        if r["misses"] + r["hits"] < t:
+            yield (f"tenants={t}: cache saw fewer lookups "
+                   f"({r['hits']}+{r['misses']}) than tenants")
+
+
+def timing_errors(fresh: dict, base: dict, max_ratio: float):
+    base_rows = {r["tenants"]: r for r in base.get("rows", [])}
+    for r in fresh.get("rows", []):
+        b = base_rows.get(r["tenants"])
+        if not b or not b.get("decode_tok_s"):
+            continue
+        ratio = b["decode_tok_s"] / max(r["decode_tok_s"], 1e-9)
+        if ratio > max_ratio:
+            yield (f"tenants={r['tenants']}: decode {r['decode_tok_s']:.1f}"
+                   f" tok/s is {ratio:.2f}x slower than baseline "
+                   f"{b['decode_tok_s']:.1f} tok/s (limit {max_ratio}x)")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--max-ratio", type=float, default=2.0)
+    args = ap.parse_args(argv)
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    errors = list(structural_errors(fresh))
+
+    interpret = bool(fresh.get("interpret")) or bool(base.get("interpret"))
+    t_errs = list(timing_errors(fresh, base, args.max_ratio))
+    if interpret:
+        for e in t_errs:
+            print(f"# (informational, interpret mode) {e}")
+        print(f"# interpret mode: {len(t_errs)} timing deviation(s) "
+              "not asserted (emulated kernels)")
+    else:
+        errors.extend(t_errs)
+
+    return finish("check_serve", errors)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
