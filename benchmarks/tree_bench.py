@@ -1,0 +1,191 @@
+#!/usr/bin/env python
+"""Root-traffic scaling of the aggregator tree -> BENCH_tree.json.
+
+The claim (docs/DESIGN.md §5, README Robustness): per commit, the
+hierarchical aggregator tree forwards ONE `PooledFoldRecord` per edge,
+so the edge -> root hop costs O(params) x n_edges bits — INDEPENDENT of
+the client count — while the flat path's root ingests
+O(clients x params).
+
+This bench simulates 10^4..10^6 clients uplinking a synthetic
+8192-parameter Bernoulli(0.5) mask leaf into a 16-edge tree:
+
+  * every client's packed words are FOLDED into its edge's exact
+    integer per-bit-position count accumulator (chunked host
+    `np.unpackbits`, the same bit order as `aggregation.pack_bits`);
+  * each edge serializes a REAL `PooledFoldRecord`
+    (`aggregation.pack_counts` wire form, CRC32 fold checksum) and the
+    record's wire+sidecar bits are metered into a real `CommLedger`
+    exactly like `TreeRoundEngine._commit` does;
+  * the root DESERIALIZES the records (`aggregation.unpack_counts` —
+    the packed form is load-bearing) and the bench asserts the pooled
+    counts reproduce the client-side popcount total computed through an
+    independent byte-popcount path — exactness, not tolerance;
+  * the measured ledger bits are cross-checked EXACTLY against the
+    static `analysis.comm_model.tree_root_round_bits` table.
+
+CI (the ``lint`` job) validates the committed JSON with
+``tools/check_tree.py`` (static recompute + O(params) invariants);
+regenerating the baseline:
+
+    PYTHONPATH=src python benchmarks/tree_bench.py --json BENCH_tree.json
+
+Usage:
+    PYTHONPATH=src python benchmarks/tree_bench.py \
+        [--n-params 8192] [--edges 16] [--clients 10000 100000 1000000] \
+        [--acc-bits 16] [--seed 0] [--json BENCH_tree.json]
+"""
+import argparse
+import json
+import sys
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.analysis import comm_model               # noqa: E402
+from repro.api.codecs import CommLedger             # noqa: E402
+from repro.core import aggregation                  # noqa: E402
+from repro.runtime.agg_tree import PooledFoldRecord, _ClassAcc, \
+    _Edge                                           # noqa: E402
+
+# byte-wise popcount lookup: the INDEPENDENT client-side ones total the
+# pooled counts must reproduce exactly
+_POP8 = np.unpackbits(np.arange(256, dtype=np.uint8)[:, None],
+                      axis=1).sum(axis=1).astype(np.int64)
+
+CHUNK = 8192  # clients folded per unpackbits batch
+
+
+def _client_words(rng: np.random.Generator, n: int, n_words: int
+                  ) -> np.ndarray:
+    """(n, n_words) uint32 — n clients' packed Bernoulli(0.5) masks."""
+    return rng.integers(0, 1 << 32, size=(n, n_words), dtype=np.uint64
+                        ).astype(np.uint32)
+
+
+def fold_edge(rng: np.random.Generator, n_clients: int, n_words: int
+              ) -> tuple:
+    """Fold one edge's cohort into exact integer bit counts.
+
+    Returns (counts int64[32*n_words], independent popcount total)."""
+    P = 32 * n_words
+    counts = np.zeros((P,), np.int64)
+    total_pop = 0
+    done = 0
+    while done < n_clients:
+        m = min(CHUNK, n_clients - done)
+        words = _client_words(rng, m, n_words)
+        u8 = np.ascontiguousarray(words.astype("<u4")).view(np.uint8)
+        bits = np.unpackbits(u8.reshape(m, -1), axis=1,
+                             bitorder="little")
+        counts += bits.sum(axis=0, dtype=np.int64)
+        total_pop += int(_POP8[u8.reshape(-1)].sum())
+        done += m
+    return counts, total_pop
+
+
+def run_row(n_clients: int, n_edges: int, n_words: int, acc_bits: int,
+            seed: int) -> dict:
+    per_edge = n_clients // n_edges
+    assert per_edge * n_edges == n_clients, "client count must split"
+    assert per_edge < (1 << acc_bits), \
+        f"{per_edge} clients/edge overflows acc_bits={acc_bits}"
+    P = 32 * n_words
+    ledger = CommLedger()
+    pooled = np.zeros((P,), np.int64)
+    client_side_pop = 0
+    root_count = 0
+    for eid in range(n_edges):
+        rng = np.random.default_rng([seed, n_clients, eid])
+        counts, pop = fold_edge(rng, per_edge, n_words)
+        client_side_pop += pop
+        # the real wire record, exactly as TreeRoundEngine._commit
+        acc = _ClassAcc(size=100.0, version=0, count=per_edge,
+                        counts=[counts], fsums=[], msums={},
+                        bpp_sum=float(per_edge), clients=[])
+        rec = PooledFoldRecord.from_edge(
+            eid, _Edge(classes={(100.0, 0): acc}, log=[]), acc_bits)
+        assert rec.verify(), "fold checksum must round-trip"
+        ledger.update({"root_bits_measured":
+                       float(rec.wire_bits + rec.sidecar_bits)})
+        # root side: the packed stream is load-bearing — deserialize
+        back = aggregation.unpack_counts(rec.classes[0].count_words[0],
+                                         P, acc_bits)
+        np.testing.assert_array_equal(back, counts)
+        pooled += back
+        root_count += rec.classes[0].count
+    # exactness gate: pooled integer counts == the independent
+    # byte-popcount total over every client's words
+    assert int(pooled.sum()) == client_side_pop, \
+        (int(pooled.sum()), client_side_pop)
+    assert root_count == n_clients
+    static = comm_model.tree_root_round_bits(
+        [P], n_edges, acc_bits=acc_bits, n_classes=1,
+        float_elems=0, n_metrics=0)
+    measured = int(ledger.root_bits)
+    assert measured == static["root_bits"], (measured, static)
+    # the flat path: every client's padded words cross to the root
+    flat_bits = n_clients * P
+    return {
+        "clients": n_clients,
+        "clients_per_edge": per_edge,
+        "root_bits_measured": measured,
+        "static_root_bits": static["root_bits"],
+        "root_header_bits": static["root_header_bits"],
+        "flat_root_bits": flat_bits,
+        "flat_over_tree": round(flat_bits / measured, 2),
+        "total_popcount": client_side_pop,
+        "ledger": ledger.as_dict(),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-params", type=int, default=8192)
+    ap.add_argument("--edges", type=int, default=16)
+    ap.add_argument("--clients", type=int, nargs="+",
+                    default=[10_000, 100_000, 1_000_000])
+    ap.add_argument("--acc-bits", type=int, default=16,
+                    choices=(8, 16, 32))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    if args.n_params % 32:
+        print("FAIL --n-params must be word-aligned")
+        return 1
+    n_words = args.n_params // 32
+    doc = {
+        "meta": {
+            "n_params": args.n_params, "n_edges": args.edges,
+            "acc_bits": args.acc_bits, "seed": args.seed,
+            "numpy": np.__version__,
+        },
+        "static_record": comm_model.tree_root_record_bits(
+            [args.n_params], acc_bits=args.acc_bits, n_classes=1,
+            float_elems=0, n_metrics=0),
+        "rows": [],
+    }
+    for n in sorted(args.clients):
+        row = run_row(n, args.edges, n_words, args.acc_bits, args.seed)
+        doc["rows"].append(row)
+        print(f"# tree_bench clients={n:>9}: root={row['root_bits_measured']}b "
+              f"(static match), flat={row['flat_root_bits']}b, "
+              f"flat/tree={row['flat_over_tree']}x")
+    roots = {r["root_bits_measured"] for r in doc["rows"]}
+    if len(roots) != 1:
+        print(f"FAIL root bits varied with client count: {sorted(roots)}")
+        return 1
+    print(f"# tree_bench: root traffic O(params) — {roots.pop()} bits "
+          f"at every client count")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"# tree_bench: wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

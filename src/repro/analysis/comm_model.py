@@ -276,6 +276,57 @@ def round_comm_model(jaxpr, state_shapes, state_sh, mesh, scfg) -> dict:
     }
 
 
+def tree_root_record_bits(leaf_params: Sequence[int], *,
+                          acc_bits: int = 16, n_classes: int = 1,
+                          float_elems: int = 0,
+                          n_metrics: int = 0) -> dict:
+    """Static wire cost of ONE edge aggregator's `PooledFoldRecord`
+    (`runtime.agg_tree`) — the ONLY bytes that cross the edge -> root
+    hop per commit.
+
+    ``leaf_params`` are the true mask-leaf parameter counts; each leaf's
+    count accumulator covers the word-padded bit domain
+    (32 * ceil(n/32) positions) at ``acc_bits`` per position
+    (`aggregation.packed_count_bits`).  Every weight class adds its
+    packed counts plus a (size, version, count) header; the sidecar is
+    the pooled float sums, pooled metric sums, and the entropy sum; the
+    record header is the CRC32 fold checksum.  Nothing here depends on
+    how many clients folded — that is the O(params) root-traffic claim,
+    and `benchmarks/tree_bench.py` cross-validates this table against
+    the CommLedger's measured ``root_bits`` exactly."""
+    from repro.core import aggregation
+    from repro.runtime.agg_tree import CLASS_HEADER_BITS
+    from repro.api.codecs import HEADER_BITS
+
+    wire = 0
+    for n in leaf_params:
+        padded = 32 * ((int(n) + 31) // 32)
+        wire += aggregation.packed_count_bits(padded, acc_bits)
+    wire = n_classes * (wire + CLASS_HEADER_BITS)
+    sidecar = 32 * n_classes * (int(float_elems) + int(n_metrics) + 1)
+    return {"wire_bits": int(wire), "sidecar_bits": int(sidecar),
+            "header_bits": int(HEADER_BITS),
+            "total_bits": int(wire + sidecar + HEADER_BITS)}
+
+
+def tree_root_round_bits(leaf_params: Sequence[int], n_edges: int, *,
+                         acc_bits: int = 16, n_classes: int = 1,
+                         float_elems: int = 0,
+                         n_metrics: int = 0) -> dict:
+    """Per-commit root traffic of the whole aggregator tree: one pooled
+    record per edge, O(params) x n_edges, independent of client count."""
+    rec = tree_root_record_bits(leaf_params, acc_bits=acc_bits,
+                                n_classes=n_classes,
+                                float_elems=float_elems,
+                                n_metrics=n_metrics)
+    return {"n_edges": int(n_edges),
+            "record_bits": rec,
+            "root_bits": int(n_edges * (rec["wire_bits"]
+                                        + rec["sidecar_bits"])),
+            "root_header_bits": int(n_edges * rec["header_bits"]),
+            "root_total_bits": int(n_edges * rec["total_bits"])}
+
+
 def arch_round_comm_model(arch: str, algo: str = "fedpm_reg", *,
                           mesh=None, C: Optional[int] = None,
                           smoke: bool = True, codec: str = "bitpack",

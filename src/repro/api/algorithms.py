@@ -103,6 +103,20 @@ def _fedpm_family(name, apply_fn, loss_fn, *, spec=None, cfg=None,
             theta=theta, floats=floats, weights=state.weights,
             seed=state.seed, round=state.round + 1)
 
+    def pooled_aggregate(state, q, floats, k):
+        # same transition as `aggregate` given q = weighted mask mean
+        # (the aggregator tree already reduced the pooled counts)
+        if cfg.bayesian:
+            k = jnp.asarray(k, jnp.float32)
+            theta = jax.tree_util.tree_map(
+                lambda t: None if t is None else
+                (1.0 + t * k) / (2.0 + k), q, is_leaf=_NONE)
+        else:
+            theta = q
+        return federated.ServerState(
+            theta=theta, floats=floats, weights=state.weights,
+            seed=state.seed, round=state.round + 1)
+
     def eval_params(state, key):
         scores = masking.scores_from_theta(state.theta)
         mp = masking.MaskedParams(state.weights, scores, state.floats)
@@ -111,7 +125,8 @@ def _fedpm_family(name, apply_fn, loss_fn, *, spec=None, cfg=None,
     return FedAlgorithm(name, init=init, client_update=client_update,
                         aggregate=aggregate, eval_params=eval_params,
                         payload_spec=MASK_SPEC, codec=codec,
-                        downlink=_prob_downlink(downlink_bits))
+                        downlink=_prob_downlink(downlink_bits),
+                        pooled_aggregate=pooled_aggregate)
 
 
 @register("fedpm_reg", payload_spec=MASK_SPEC,
@@ -152,6 +167,14 @@ def _mask_init(spec):
 def _mask_aggregate(state, payloads, wn, participation):
     theta = plds.batched_packed_mean(payloads, wn)
     scores = masking.scores_from_theta(theta)
+    return MaskState(scores, state.floats, state.weights,
+                     state.round + 1)
+
+
+def _mask_pooled_aggregate(state, q, floats, k):
+    # `_mask_aggregate` given the already-reduced mask mean; payload
+    # floats are ignored on this family, exactly as in the flat path
+    scores = masking.scores_from_theta(q)
     return MaskState(scores, state.floats, state.weights,
                      state.round + 1)
 
@@ -204,7 +227,8 @@ def fedmask(apply_fn, loss_fn, *, spec=None, tau=0.5, lr=0.1,
                         client_update=client_update,
                         aggregate=_mask_aggregate,
                         eval_params=eval_params, payload_spec=MASK_SPEC,
-                        codec=codec, downlink=_SCORE_DOWNLINK)
+                        codec=codec, downlink=_SCORE_DOWNLINK,
+                        pooled_aggregate=_mask_pooled_aggregate)
 
 
 # ---------------------------------------------------------------------------
@@ -264,7 +288,8 @@ def topk(apply_fn, loss_fn, *, spec=None, k_frac=0.3, lr=0.1,
                         client_update=client_update,
                         aggregate=_mask_aggregate,
                         eval_params=eval_params, payload_spec=MASK_SPEC,
-                        codec=codec, downlink=_SCORE_DOWNLINK)
+                        codec=codec, downlink=_SCORE_DOWNLINK,
+                        pooled_aggregate=_mask_pooled_aggregate)
 
 
 # ---------------------------------------------------------------------------
@@ -324,11 +349,20 @@ def mv_signsgd(apply_fn, loss_fn, *, spec=None, lr=1e-3, local_steps=3,
             state.params, q)
         return FloatState(params, state.round + 1)
 
+    def pooled_aggregate(state, q, floats, k):
+        # `aggregate` given the already-reduced vote fraction
+        params = jax.tree_util.tree_map(
+            lambda p, qi: (p - lr * jnp.sign(2.0 * qi - 1.0)
+                           ).astype(p.dtype),
+            state.params, q)
+        return FloatState(params, state.round + 1)
+
     return FedAlgorithm("mv_signsgd", init=_float_init,
                         client_update=client_update, aggregate=aggregate,
                         eval_params=lambda s, k: s.params,
                         payload_spec=SIGN_SPEC, codec=codec,
-                        downlink=_float_downlink(lambda s: s.params))
+                        downlink=_float_downlink(lambda s: s.params),
+                        pooled_aggregate=pooled_aggregate)
 
 
 # ---------------------------------------------------------------------------

@@ -851,11 +851,15 @@ class CommLedger:
     uplink_bits: float = 0.0
     downlink_bits: float = 0.0
     rounds: int = 0
+    # aggregator-tree root traffic (pooled fold records crossing the
+    # edge -> root hop); O(params) per round, see runtime/agg_tree.py
+    root_bits: float = 0.0
 
     def update(self, metrics: Dict[str, Any]) -> "CommLedger":
         self.uplink_bits += float(metrics.get("uplink_bits_measured",
                                               0.0))
         self.downlink_bits += float(metrics.get("downlink_bits", 0.0))
+        self.root_bits += float(metrics.get("root_bits_measured", 0.0))
         self.rounds += 1
         return self
 
@@ -871,8 +875,13 @@ class CommLedger:
     def total_mb(self) -> float:
         return self.uplink_mb + self.downlink_mb
 
+    @property
+    def root_mb(self) -> float:
+        return self.root_bits / 8e6
+
     def as_dict(self) -> Dict[str, float]:
         return {"rounds": self.rounds,
                 "cumulative_uplink_mb": self.uplink_mb,
                 "cumulative_downlink_mb": self.downlink_mb,
+                "cumulative_root_mb": self.root_mb,
                 "cumulative_total_mb": self.total_mb}

@@ -75,6 +75,26 @@ def mean_from_words(words: jax.Array, n: int,
     return jnp.tensordot(weights, bits, axes=(0, 0))
 
 
+def mean_from_counts(counts: jax.Array, n: int,
+                     weights: jax.Array) -> jax.Array:
+    """Weighted mean from pooled per-bit counts: (C, P) integer counts
+    + (C,) per-client class weights -> (n,) f32.
+
+    ``counts[c][p]`` is how many clients of weight class c set bit p
+    (P covers the padded word domain; positions past n are dropped).
+    With every client in class c carrying normalized weight
+    ``weights[c]``, eq. 8's weighted mean collapses to
+    ``sum_c weights[c] * counts[c]`` — the O(params)-per-class twin of
+    `mean_from_words` the aggregator tree's root reduces through.
+    Because pooled counts are exact integers, a dyadic weight vector
+    (equal sizes, power-of-two cohort) makes this bit-identical to the
+    flat `mean_from_words` path under ANY client-to-edge grouping.
+    """
+    c = jnp.asarray(counts).astype(jnp.float32)
+    w = jnp.asarray(weights, jnp.float32)
+    return jnp.tensordot(w, c, axes=(0, 0))[:n]
+
+
 def _popcount_sum(words: jax.Array) -> jax.Array:
     return jnp.sum(jax.lax.population_count(words).astype(jnp.float32))
 

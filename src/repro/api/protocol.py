@@ -142,12 +142,24 @@ class FedAlgorithm:
     round engine meters uplinks with; defaults to the payload spec's
     `default_codec`.  `downlink` is the per-round server broadcast:
     fn(state, key) -> (DownlinkPayload, client_state).
+
+    `pooled_aggregate` (optional) is the hierarchical-aggregation seam:
+    ``fn(state, q, floats, k) -> state`` where ``q`` is the
+    weighted-mean mask tree an aggregator tree already reduced from
+    pooled popcount records (`payloads.mean_from_counts`), ``floats``
+    the pooled float sidecar and ``k`` the number of folded clients.
+    It must implement the SAME state transition as `aggregate` given
+    ``q = batched_packed_mean(payloads, wn)`` — the tree engine's
+    zero-fault bit-identity gate holds the two to each other.
+    Algorithms whose payload has no packed words (e.g. fedavg) leave it
+    None and cannot ride the tree.
     """
 
     def __init__(self, name: str, *, init: Callable,
                  client_update: Callable, aggregate: Callable,
                  eval_params: Callable, payload_spec: PayloadSpec,
-                 codec=None, downlink: Optional[Callable] = None):
+                 codec=None, downlink: Optional[Callable] = None,
+                 pooled_aggregate: Optional[Callable] = None):
         self.name = name
         # The state must own its buffers: `round` donates them, and an
         # init that aliases the caller's params template (float leaves
@@ -161,6 +173,7 @@ class FedAlgorithm:
         self.payload_spec = payload_spec
         self.codec = codecs_lib.resolve(codec, payload_spec)
         self.downlink = downlink
+        self.pooled_aggregate = pooled_aggregate
         self._round = jax.jit(
             lambda state, data, part, sizes, key: run_round(
                 self, state, data, part, sizes, key),

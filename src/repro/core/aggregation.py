@@ -212,6 +212,72 @@ def fold_popcount(acc_ones, words) -> int:
     return int(acc_ones) + int(ones)
 
 
+def fold_bit_counts(acc, words):
+    """Per-bit-position count fold: add one (or a batch of) client's
+    packed uint32 words into an integer per-parameter count accumulator
+    — the edge aggregator's O(params) pooled state.
+
+    ``acc`` is int32[P] over the padded word domain (P = 32 * n_words);
+    ``words`` is uint32[W] (one client) or uint32[B, W] (a chunk of B
+    clients, summed in one pass).  Counts are exact integers, so the
+    fold is associative and lossless: ANY grouping of clients into
+    edges produces the identical accumulator — the property the
+    aggregator tree's bit-identity gate rests on.
+    """
+    w = jnp.asarray(words, jnp.uint32)
+    if w.ndim == 1:
+        w = w[None, :]
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((w[:, :, None] >> shifts) & jnp.uint32(1)).astype(jnp.int32)
+    return jnp.asarray(acc, jnp.int32) + bits.reshape(w.shape[0], -1
+                                                      ).sum(axis=0)
+
+
+_COUNT_DTYPES = {8: "<u1", 16: "<u2", 32: "<u4"}
+
+
+def pack_counts(counts, acc_bits: int = 16) -> np.ndarray:
+    """Fixed-width serialization of a count accumulator into uint32
+    words (host-side, little-endian): each per-bit count rides in an
+    ``acc_bits``-wide field, so the record size depends ONLY on the
+    parameter count and the field width — never on how many clients
+    were folded.  ``acc_bits`` must be 8, 16 or 32; a count that does
+    not fit the field is a hard error (silent truncation would forge
+    the fold)."""
+    if acc_bits not in _COUNT_DTYPES:
+        raise ValueError(f"acc_bits must be one of 8/16/32, "
+                         f"got {acc_bits}")
+    c = np.asarray(counts).reshape(-1)
+    if c.size and (int(c.max()) >> acc_bits or int(c.min()) < 0):
+        raise OverflowError(
+            f"count {int(c.max())} does not fit {acc_bits}-bit "
+            f"accumulator field")
+    per = 32 // acc_bits
+    pad = (-c.size) % per
+    c = c.astype(np.uint64)
+    if pad:
+        c = np.concatenate([c, np.zeros((pad,), np.uint64)])
+    return np.ascontiguousarray(
+        c.astype(_COUNT_DTYPES[acc_bits])).view("<u4").astype(np.uint32)
+
+
+def unpack_counts(words, n: int, acc_bits: int = 16) -> np.ndarray:
+    """Inverse of `pack_counts`: uint32 word stream -> int64[n] counts
+    (padding fields beyond n are dropped)."""
+    if acc_bits not in _COUNT_DTYPES:
+        raise ValueError(f"acc_bits must be one of 8/16/32, "
+                         f"got {acc_bits}")
+    w = np.ascontiguousarray(np.asarray(words, np.uint32).astype("<u4"))
+    return w.view(_COUNT_DTYPES[acc_bits])[:n].astype(np.int64)
+
+
+def packed_count_bits(n_positions: int, acc_bits: int = 16) -> int:
+    """Exact serialized size in bits of one `pack_counts` stream over
+    ``n_positions`` count fields (word-aligned)."""
+    per = 32 // acc_bits
+    return 32 * ((n_positions + per - 1) // per)
+
+
 def words_checksum(arrays) -> int:
     """CRC32 checksum over serialized uint32 word streams — the
     per-message integrity header `repro.api.codecs.WireMessage` carries

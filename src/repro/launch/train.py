@@ -22,6 +22,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import api as fedapi
 from repro.api import codecs as codecs_lib
@@ -75,7 +76,18 @@ def main(argv=None):
                     help="straggler cut: keep the fastest fraction of "
                          "surviving cohorts each round (1.0 = wait "
                          "for everyone)")
+    ap.add_argument("--tree-fanout", type=int, default=0,
+                    help="cohorts per edge aggregator (0 = flat "
+                         "aggregation); with a tree, each round's root "
+                         "traffic is one O(params) pooled fold record "
+                         "per surviving edge (runtime/agg_tree.py)")
+    ap.add_argument("--agg-fault-prob", type=float, default=0.0,
+                    help="per-round edge-aggregator crash probability "
+                         "(requires --tree-fanout); cohorts of a "
+                         "crashed edge miss the barrier round")
     args = ap.parse_args(argv)
+    if args.agg_fault_prob > 0 and args.tree_fanout <= 0:
+        ap.error("--agg-fault-prob requires --tree-fanout > 0")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     api = build_model(cfg)
@@ -89,6 +101,36 @@ def main(argv=None):
         api, scfg, key=key, cohorts=args.cohorts,
         optimizer=args.score_opt, codec=args.codec)
     state, step_fn, round_fn = plan.state, plan.step_fn, plan.round_fn
+
+    # hierarchical aggregator tree (runtime/agg_tree.py): the barrier
+    # round has no retransmit window, so edge faults collapse to
+    # participation masking, and the edge -> root hop is metered from
+    # the static cost model — one O(params) pooled record per
+    # surviving edge, independent of the cohort count
+    topo, tree_edge_bits = None, 0
+    if args.tree_fanout > 0:
+        from repro.analysis import comm_model
+        from repro.runtime import agg_tree
+        if not (isinstance(state, dict) and "scores" in state):
+            ap.error(f"--tree-fanout: algo '{args.algo}' carries no "
+                     "mask scores to pool at an edge")
+        _leaves = lambda t: (
+            l for l in jax.tree_util.tree_leaves(
+                t, is_leaf=lambda x: x is None) if l is not None)
+        leaf_params = [int(np.prod(l.shape[1:]))
+                       for l in _leaves(state["scores"])]
+        float_elems = sum(int(np.prod(l.shape[1:]))
+                          for l in _leaves(state.get("floats")))
+        topo = agg_tree.TreeTopology(args.cohorts, args.tree_fanout,
+                                     agg_fault_prob=args.agg_fault_prob,
+                                     seed=args.seed)
+        rec = comm_model.tree_root_record_bits(
+            leaf_params, acc_bits=topo.cfg.acc_bits, n_classes=1,
+            float_elems=float_elems, n_metrics=0)
+        tree_edge_bits = rec["wire_bits"] + rec["sidecar_bits"]
+        print(f"tree: {topo.n_edges} edge(s) at fanout "
+              f"{args.tree_fanout}, root record "
+              f"{tree_edge_bits}b/edge (static)")
 
     start = 0
     saver = None
@@ -141,18 +183,33 @@ def main(argv=None):
             round_idx = (step + 1) // args.round_every
             alive = (sim.sample_round(policy, round_idx=round_idx)
                      if sim is not None else None)
+            if topo is not None:
+                base = (np.asarray(alive, bool) if alive is not None
+                        else np.ones(args.cohorts, bool))
+                masked = topo.round_mask(base, round_idx)
+                # rescue: a round never folds an empty cohort — if
+                # aggregator faults orphan every surviving client,
+                # the root adopts them directly this round
+                alive = masked if masked.any() else base
             # survivor-renormalized aggregation: the participation
             # vector gates which cohorts' masks the round folds
             state, rm = (round_fn(state) if alive is None
                          else round_fn(state, jnp.asarray(alive)))
-            ledger.update({"uplink_bits_measured": rm["bits_measured"],
-                           "downlink_bits": rm["downlink_bits"]})
+            upd = {"uplink_bits_measured": rm["bits_measured"],
+                   "downlink_bits": rm["downlink_bits"]}
+            if topo is not None:
+                upd["root_bits_measured"] = float(
+                    topo.surviving_edges(round_idx) * tree_edge_bits)
+            ledger.update(upd)
             msg = (f"step {step+1}: loss={float(m['loss']):.3f} "
                    f"uplink={float(rm['bpp']):.3f}Bpp "
                    f"(wire {float(rm['bpp_measured']):.3f}Bpp "
                    f"{args.codec}) cum={ledger.total_mb:.2f}MB")
             if alive is not None:
                 msg += f" alive={alive.sum()}/{args.cohorts}"
+            if topo is not None:
+                msg += (f" edges={topo.surviving_edges(round_idx)}"
+                        f"/{topo.n_edges} root={ledger.root_mb:.3f}MB")
             print(msg + f" ({time.time()-t0:.0f}s)", flush=True)
             if saver:
                 saver.save(step + 1, state)
@@ -161,6 +218,7 @@ def main(argv=None):
                 with open(tmp, "w") as f:
                     json.dump({"uplink_bits": ledger.uplink_bits,
                                "downlink_bits": ledger.downlink_bits,
+                               "root_bits": ledger.root_bits,
                                "rounds": ledger.rounds}, f)
                 os.replace(tmp, ledger_path)
         elif (step + 1) % 10 == 0:
@@ -169,10 +227,13 @@ def main(argv=None):
     if saver:
         saver.close()
     if ledger.rounds:
-        print(f"comm: {ledger.rounds} rounds, "
-              f"up={ledger.uplink_mb:.2f}MB "
-              f"down={ledger.downlink_mb:.2f}MB "
-              f"total={ledger.total_mb:.2f}MB")
+        msg = (f"comm: {ledger.rounds} rounds, "
+               f"up={ledger.uplink_mb:.2f}MB "
+               f"down={ledger.downlink_mb:.2f}MB "
+               f"total={ledger.total_mb:.2f}MB")
+        if ledger.root_bits:
+            msg += f" root={ledger.root_mb:.3f}MB"
+        print(msg)
     print("done")
 
 

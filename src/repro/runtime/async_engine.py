@@ -152,6 +152,7 @@ class AsyncRoundEngine:
         self.buffer: List[_Buffered] = []
         self.pending: List[_InFlight] = []
         self.events: List[dict] = []
+        self._event_seq = 0         # monotone event ordering cursor
         self.buffer_ones = 0        # running popcount over the buffer
         self.totals = {"uplink_bits_measured": 0.0,
                        "uplink_header_bits": 0.0,
@@ -195,11 +196,13 @@ class AsyncRoundEngine:
             lambda sd: jnp.zeros(sd.shape, sd.dtype), pshape)
         tleaves, tdef = jax.tree_util.tree_flatten(template,
                                                    is_leaf=_NONE)
+        self._payload_template = template
         self._payload_treedef = tdef
         self._payload_none = tuple(l is None for l in tleaves)
         tmsg = self.codec.encode(template)
         self._wire_meta = tmsg.meta
         self._payload_cls = tmsg.payload_cls
+        self._degraded_restore = False
 
     # -- policy shorthands ------------------------------------------------
 
@@ -208,7 +211,15 @@ class AsyncRoundEngine:
         return self.config.quorum_count(self.n_clients)
 
     def _event(self, kind: str, **kw):
-        self.events.append(dict(kind=kind, tick=self.tick_idx, **kw))
+        """Append an event record.  Every record carries a monotone
+        ``seq`` (total order over the engine's whole life, survives
+        save/restore) so a crash-restart consumer can assert
+        exactly-once semantics instead of matching on event counts;
+        per-delivery events additionally carry the transmission
+        ``attempt`` for (round, client) idempotency keys."""
+        self.events.append(dict(kind=kind, seq=self._event_seq,
+                                tick=self.tick_idx, **kw))
+        self._event_seq += 1
 
     # -- tick: launch -> deliver -> maybe commit --------------------------
 
@@ -306,7 +317,8 @@ class AsyncRoundEngine:
             staleness = self.version - e.version
             if staleness > self.config.max_staleness:
                 self._event("stale_drop", client=e.client,
-                            round=e.round, staleness=staleness)
+                            round=e.round, staleness=staleness,
+                            attempt=e.attempt)
                 continue
             payload = self.codec.decode(msg)
             acc = self.buffer_ones
@@ -320,7 +332,8 @@ class AsyncRoundEngine:
                 client=e.client, version=e.version, round=e.round,
                 size=e.size, payload=payload, metrics=e.metrics))
             self._event("fold", client=e.client, round=e.round,
-                        staleness=staleness, ones=ones)
+                        staleness=staleness, ones=ones,
+                        attempt=e.attempt)
         self.pending = still
 
     def _maybe_commit(self, t: int, force: bool = False) -> List[dict]:
@@ -377,6 +390,20 @@ class AsyncRoundEngine:
 
     # -- crash-consistent checkpointing -----------------------------------
 
+    @staticmethod
+    def _payload_checksum(payload) -> int:
+        """`aggregation.words_checksum` over a buffered payload's raw
+        leaf bytes (uint32 words AND float sidecar alike) — the
+        integrity tag `restore` re-verifies before trusting a saved
+        buffer entry."""
+        leaves = []
+        for l in jax.tree_util.tree_leaves(payload, is_leaf=_NONE):
+            if l is None:
+                continue
+            b = np.ascontiguousarray(np.asarray(jax.device_get(l)))
+            leaves.append(np.frombuffer(b.tobytes(), dtype=np.uint8))
+        return aggregation.words_checksum(leaves)
+
     def save(self, path: str) -> str:
         """Atomically persist the WHOLE engine: server state, buffered
         payloads, in-flight wire messages, counters, comm totals.  A
@@ -384,6 +411,11 @@ class AsyncRoundEngine:
         (`restore`), and because every fault draw is a counter hash of
         (seed, round, client, attempt), the replayed fault sequence is
         identical too."""
+        arrays, extra = self._save_payload()
+        return ckptlib.save_bundle(path, arrays, extra)
+
+    def _save_payload(self):
+        """(arrays, extra) the bundle persists — subclasses extend."""
         arrays: Dict[str, Any] = {}
         sleaves, _ = jax.tree_util.tree_flatten(self.state,
                                                 is_leaf=_NONE)
@@ -407,9 +439,12 @@ class AsyncRoundEngine:
             "since_commit": self._since_commit,
             "last_downlink_bpp": self._last_downlink_bpp,
             "events": self.events,
+            "event_seq": self._event_seq,
             "buffer": [{"client": e.client, "version": e.version,
                         "round": e.round, "size": e.size,
-                        "metrics": e.metrics} for e in self.buffer],
+                        "metrics": e.metrics,
+                        "checksum": self._payload_checksum(e.payload)}
+                       for e in self.buffer],
             "pending": [{"client": e.client, "version": e.version,
                          "round": e.round, "deliver": e.deliver,
                          "attempt": e.attempt, "size": e.size,
@@ -419,12 +454,25 @@ class AsyncRoundEngine:
                          "n_side": len(e.msg.sidecar)}
                         for e in self.pending],
         }
-        return ckptlib.save_bundle(path, arrays, extra)
+        return arrays, extra
 
     def restore(self, path: str) -> "AsyncRoundEngine":
         """Inverse of `save` onto a freshly constructed engine (same
-        algo / sizes / key / config / injector)."""
+        algo / sizes / key / config / injector).
+
+        Every buffered payload is re-verified against the checksum
+        `save` stored for it (`aggregation.words_checksum` over the raw
+        leaf bytes).  On ANY mismatch the engine refuses to resume from
+        the silently-corrupt buffer and falls back to the degraded
+        theta-only path (`runtime.elastic.restore_theta_only`'s bundle
+        twin): server state + counters survive, the buffer and in-flight
+        queue are dropped, and the cut clients simply re-enter at their
+        next launch — the same elasticity the protocol already has."""
         arrays, extra = ckptlib.load_bundle(path)
+        return self._load_payload(arrays, extra)
+
+    def _load_payload(self, arrays, extra) -> "AsyncRoundEngine":
+        self._degraded_restore = False
         sdef = jax.tree_util.tree_structure(self.state, is_leaf=_NONE)
         nstate = sdef.num_leaves
         self.state = jax.tree_util.tree_unflatten(
@@ -437,6 +485,7 @@ class AsyncRoundEngine:
         self._since_commit = dict(extra["since_commit"])
         self._last_downlink_bpp = float(extra["last_downlink_bpp"])
         self.events = list(extra["events"])
+        self._event_seq = int(extra.get("event_seq", len(self.events)))
         nleaf = len(self._payload_none)
         self.buffer = []
         for i, meta in enumerate(extra["buffer"]):
@@ -444,6 +493,10 @@ class AsyncRoundEngine:
                       else arrays[f"buf{i}/{j}"] for j in range(nleaf)]
             payload = jax.tree_util.tree_unflatten(
                 self._payload_treedef, leaves)
+            stored = meta.get("checksum")
+            if stored is not None and \
+                    self._payload_checksum(payload) != int(stored):
+                return self._restore_degraded(meta, i)
             self.buffer.append(_Buffered(
                 client=int(meta["client"]),
                 version=int(meta["version"]),
@@ -465,4 +518,19 @@ class AsyncRoundEngine:
                 deliver=int(meta["deliver"]),
                 attempt=int(meta["attempt"]), size=float(meta["size"]),
                 msg=msg, metrics=dict(meta["metrics"])))
+        return self
+
+    def _restore_degraded(self, meta: dict, slot: int
+                          ) -> "AsyncRoundEngine":
+        """Checksum-mismatch fallback: keep the restored server state
+        and counters (theta is what matters — `elastic` doctrine), but
+        refuse the buffered payloads and in-flight queue wholesale.
+        Dropped contributors re-enter at their next launch; staleness
+        weighting absorbs the lost partial round."""
+        self.buffer = []
+        self.pending = []
+        self.buffer_ones = 0
+        self._degraded_restore = True
+        self._event("restore_degraded", client=int(meta["client"]),
+                    round=int(meta["round"]), slot=int(slot))
         return self

@@ -38,6 +38,8 @@ _S_DELAY = 8
 _S_DELAY_N = 9
 _S_CORRUPT = 10
 _S_BITFLIP = 11
+_S_AGG_CRASH = 12
+_S_AGG_PART = 13
 
 
 def _splitmix64(x: np.ndarray) -> np.ndarray:
@@ -181,6 +183,8 @@ class FaultInjector:
     corrupt_prob: float = 0.0       # per delivery attempt
     max_retries: int = 2
     backoff_rounds: float = 0.5     # extra delay per retransmit
+    agg_crash_prob: float = 0.0     # per-tick edge-aggregator crash
+    agg_partition_prob: float = 0.0  # per-tick edge-aggregator partition
 
     def dropped(self, round_idx: int) -> np.ndarray:
         """bool[n_clients]: uplink never arrives (crash or partition)."""
@@ -206,6 +210,18 @@ class FaultInjector:
         k = 1 + (extra * self.straggler_rounds_max).astype(np.int64)
         return np.where(late, np.minimum(k, self.straggler_rounds_max),
                         0).astype(np.int64)
+
+    def agg_crashed(self, round_idx: int, n_aggs: int) -> np.ndarray:
+        """bool[n_aggs]: edge aggregator crashes this tick, losing its
+        uncommitted partial fold (an aggregator-level failure domain)."""
+        u = counter_uniform(self.seed, round_idx, _S_AGG_CRASH, n_aggs)
+        return u < self.agg_crash_prob
+
+    def agg_partitioned(self, round_idx: int, n_aggs: int) -> np.ndarray:
+        """bool[n_aggs]: edge aggregator unreachable this tick —
+        deliveries destined for it are delayed one tick, not lost."""
+        u = counter_uniform(self.seed, round_idx, _S_AGG_PART, n_aggs)
+        return u < self.agg_partition_prob
 
     def corrupt_attempt(self, round_idx: int, client: int,
                         attempt: int) -> bool:

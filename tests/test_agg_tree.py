@@ -1,0 +1,482 @@
+"""Aggregator-tree gates (repro.runtime.agg_tree).
+
+The hard invariants from docs/DESIGN.md §5:
+
+  * IDENTITY: at zero faults / zero adversaries the tree path commits
+    bit-identically to the flat `AsyncRoundEngine` — theta AND the
+    measured wire bits (dyadic cohort: equal sizes, power-of-two K).
+  * O(params): the pooled root record's size matches
+    `analysis.comm_model.tree_root_record_bits` exactly and does not
+    depend on how many clients folded.
+  * BYZANTINE: density bombs, all-zero uplinks, and forged-checksum
+    bit-flips are quarantined BEFORE they enter a fold; the commit
+    aggregates exactly the honest cohort.
+  * FAILURE DOMAINS: an edge-aggregator crash replays its uncommitted
+    fold deterministically; the crashed run's theta equals the
+    uncrashed run's bitwise; crash-consistent save/restore continues a
+    faulted run event-identically.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.analysis import comm_model
+from repro.core import aggregation, masking
+from repro.models import cnn
+from repro.data import synthetic, partition
+from repro.runtime.async_engine import AsyncConfig, AsyncRoundEngine
+from repro.runtime.agg_tree import ByzantineFilter, TreeConfig, \
+    TreeRoundEngine, TreeTopology
+from repro.runtime.fault import FaultInjector
+from repro.api import payloads as plds
+
+KEY = jax.random.PRNGKey(0)
+CFG = cnn.ConvConfig("t", (8, 8), (16,), n_classes=4, img_size=8)
+SPEC = masking.MaskSpec()
+# dyadic cohort: 4 EQUAL-size clients so the commit weights are exactly
+# 0.25 in f32 and the flat tensordot's partial sums are exact — the
+# precondition for the tree-vs-flat bit-identity gate
+K, H, B = 4, 2, 8
+
+_NONE = lambda x: x is None
+
+
+@pytest.fixture(scope="module")
+def setup():
+    task = synthetic.make_image_task(KEY, n=256, img=8, n_classes=4,
+                                     noise=0.3)
+    params = cnn.init_params(KEY, CFG)
+    apply_fn = lambda p, b: cnn.forward(p, CFG, b["images"])
+    loss_fn = lambda out, b: cnn.ce_loss(out, b)
+    rng = np.random.default_rng(0)
+    cidx = partition.partition_iid(rng, np.asarray(task.y), K)
+    assert len({len(c) for c in cidx}) == 1, "cohort must be equal-size"
+    data = synthetic.federated_batches(KEY, task, cidx, K, H, B)
+    sizes = jnp.asarray([len(c) for c in cidx], jnp.float32)
+    algo = api.get_algorithm("fedpm_reg", apply_fn, loss_fn, spec=SPEC,
+                             local_steps=H)
+    return dict(algo=algo, params=params, data=data, sizes=sizes,
+                apply_fn=apply_fn, loss_fn=loss_fn)
+
+
+def _leaves(tree):
+    return jax.tree_util.tree_leaves(tree, is_leaf=_NONE)
+
+
+def _assert_trees_equal(a, b):
+    for la, lb in zip(_leaves(a), _leaves(b)):
+        if la is None:
+            assert lb is None
+            continue
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def _assert_trees_close(a, b, **kw):
+    for la, lb in zip(_leaves(a), _leaves(b)):
+        if la is None:
+            assert lb is None
+            continue
+        np.testing.assert_allclose(np.asarray(la, np.float32),
+                                   np.asarray(lb, np.float32), **kw)
+
+
+def _tree_engine(setup, **kw):
+    kw.setdefault("tree", TreeConfig(fanout=2))
+    return TreeRoundEngine(setup["algo"],
+                           setup["algo"].init(KEY, setup["params"]),
+                           setup["data"], setup["sizes"], KEY, **kw)
+
+
+# ---------------------------------------------------------------------------
+# unit: the exact-count kernel and its wire form
+# ---------------------------------------------------------------------------
+
+
+def test_mean_from_counts_matches_mean_from_words_dyadic():
+    """Pooled integer counts + dyadic weights reproduce the flat
+    bit-matrix tensordot BITWISE, under any client->edge grouping."""
+    rng = np.random.default_rng(3)
+    n, Kc = 70, 4
+    bits = rng.integers(0, 2, size=(Kc, n)).astype(np.uint8)
+    words = jnp.stack([plds.pack_leaf(jnp.asarray(b)) for b in bits])
+    w = jnp.full((Kc,), 0.25, jnp.float32)
+    flat = plds.mean_from_words(words, n, w)
+    # pool counts over an uneven grouping {0,2} | {1} | {3}
+    P = 32 * ((n + 31) // 32)
+    groups = [[0, 2], [1], [3]]
+    counts = np.zeros((1, P), np.int64)
+    for g in groups:
+        for i in g:
+            counts[0] += np.pad(bits[i], (0, P - n)).astype(np.int64)
+    pooled = plds.mean_from_counts(jnp.asarray(counts), n,
+                                   jnp.asarray([0.25], jnp.float32))
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(pooled))
+
+
+def test_pack_counts_roundtrip_and_overflow():
+    rng = np.random.default_rng(0)
+    for acc_bits in (8, 16, 32):
+        c = rng.integers(0, 2 ** acc_bits, size=71).astype(np.int64)
+        words = aggregation.pack_counts(c, acc_bits)
+        assert words.dtype == np.uint32
+        assert 32 * words.size == aggregation.packed_count_bits(
+            71, acc_bits)
+        back = aggregation.unpack_counts(words, 71, acc_bits)
+        np.testing.assert_array_equal(back, c)
+    with pytest.raises(OverflowError):
+        aggregation.pack_counts(np.asarray([256], np.int64), 8)
+    with pytest.raises(OverflowError):
+        aggregation.pack_counts(np.asarray([-1], np.int64), 16)
+
+
+def test_byzantine_filter_zscore_and_trim():
+    cfg = TreeConfig(min_cohort=8, z_thresh=4.0, z_floor=0.02,
+                     trim_frac=0.25)
+    byz = ByzantineFilter(cfg)
+    # warm-up: no decisions before min_cohort admitted folds
+    assert byz.zscore(0.99) == 0.0
+    rng = np.random.default_rng(1)
+    for d in rng.normal(0.5, 0.01, size=32):
+        byz.admit(float(d))
+    assert byz.zscore(0.5) < 1.0
+    assert byz.zscore(0.9) > cfg.z_thresh
+    # one outlier in a clean cohort: quarantined, not trimmed
+    adm, quar, trimmed = byz.screen([0.5, 0.51, 0.9, 0.49])
+    assert not trimmed and list(quar) == [2] and adm == [0, 1, 3]
+    # half the cohort "anomalous": the statistics are suspect ->
+    # trimmed fallback keeps all but the ceil(trim_frac * m) extremes
+    adm, quar, trimmed = byz.screen([0.9, 0.5, 0.95, 0.85, 0.92, 0.5])
+    assert trimmed
+    assert len(quar) == 2                      # ceil(0.25 * 6)
+    assert list(sorted(quar)) == [2, 4]        # the two largest z
+    assert adm == [0, 1, 3, 5]
+    # state round-trips exactly
+    byz2 = ByzantineFilter(cfg)
+    byz2.load_state(byz.state_dict())
+    assert byz2.state_dict() == byz.state_dict()
+
+
+def test_fedavg_cannot_ride_the_tree(setup):
+    algo = api.get_algorithm("fedavg", setup["apply_fn"],
+                             setup["loss_fn"], local_steps=H)
+    with pytest.raises(ValueError, match="pooled_aggregate"):
+        TreeRoundEngine(algo, algo.init(KEY, setup["params"]),
+                        setup["data"], setup["sizes"], KEY)
+
+
+def test_tree_topology_round_mask():
+    topo = TreeTopology(8, fanout=2, agg_fault_prob=0.5, seed=3)
+    alive = np.ones(8, bool)
+    crashed_rounds = [r for r in range(20)
+                      if topo.crashed_edges(r).any()]
+    assert crashed_rounds, "fault draws must fire at p=0.5"
+    r = crashed_rounds[0]
+    masked = topo.round_mask(alive, r)
+    crashed = topo.crashed_edges(r)
+    for c in range(8):
+        assert masked[c] == (alive[c] and not crashed[c // 2])
+    # all-crash rescue: the lowest edge is adopted, never an empty round
+    topo_all = TreeTopology(4, fanout=2, agg_fault_prob=1.0, seed=0)
+    assert topo_all.surviving_edges(0) == 1
+    assert topo_all.round_mask(np.ones(4, bool), 0).sum() == 2
+
+
+# ---------------------------------------------------------------------------
+# the identity gate: tree == flat at zero faults / zero adversaries
+# ---------------------------------------------------------------------------
+
+
+def test_zero_fault_tree_bit_identical_to_flat(setup):
+    """ISSUE gate: with no faults and no adversaries the tree path is
+    bit-identical to the flat `AsyncRoundEngine` commit — theta AND the
+    measured wire bits — and its event stream stays {fold, commit}."""
+    algo, data, sizes = setup["algo"], setup["data"], setup["sizes"]
+    flat = AsyncRoundEngine(algo, algo.init(KEY, setup["params"]),
+                            data, sizes, KEY)
+    tree = _tree_engine(setup)
+    for t in range(3):
+        cf = flat.tick(data)
+        ct = tree.tick(data)
+        assert len(cf) == len(ct) == 1
+        assert cf[0]["uplink_bits_measured"] \
+            == ct[0]["uplink_bits_measured"]
+        assert cf[0]["uplink_header_bits"] \
+            == ct[0]["uplink_header_bits"]
+        assert cf[0]["n_folded"] == ct[0]["n_folded"] == K
+        _assert_trees_equal(flat.state.theta, tree.state.theta)
+        # float sidecar / weighted metrics pool in a different
+        # association order — equal to tolerance, not bitwise
+        _assert_trees_close(flat.state.floats, tree.state.floats,
+                            rtol=1e-5, atol=1e-6)
+        assert ct[0]["uplink_bpp"] == pytest.approx(
+            cf[0]["uplink_bpp"], rel=1e-5)
+        assert ct[0]["loss"] == pytest.approx(cf[0]["loss"], rel=1e-4)
+    assert {e["kind"] for e in flat.events} == {"fold", "commit"}
+    assert {e["kind"] for e in tree.events} == {"fold", "commit"}
+    assert tree.totals["root_bits_measured"] > 0
+
+
+def test_root_record_bits_match_static_model(setup):
+    """CommLedger-side root traffic == the static `comm_model` table,
+    exactly, and per-record size is independent of the folded count."""
+    tree = _tree_engine(setup)
+    c = tree.tick(setup["data"])[0]
+    tmpl = tree._payload_template
+    leaf_params = [plds._prod(sh) for sh in tmpl.shapes]
+    float_elems = sum(int(f.size) for f in _leaves(tmpl.floats)
+                      if f is not None)
+    # metric count from a real launch record
+    probe = _tree_engine(setup)
+    probe._launch(setup["data"], 0)
+    n_metrics = len(probe.pending[0].metrics)
+    st = comm_model.tree_root_round_bits(
+        leaf_params, tree.n_edges, acc_bits=tree.tree.acc_bits,
+        n_classes=1, float_elems=float_elems, n_metrics=n_metrics)
+    assert st["root_bits"] == c["root_bits_measured"]
+    assert st["root_header_bits"] == c["root_header_bits"]
+
+
+# ---------------------------------------------------------------------------
+# Byzantine quarantine
+# ---------------------------------------------------------------------------
+
+
+def _honest_oracle(setup, eng, honest, t=0):
+    """Reference aggregate over the honest slice of tick t's launch."""
+    algo, sizes = setup["algo"], setup["sizes"]
+    state0 = algo.init(KEY, setup["params"])
+    key = jax.random.fold_in(KEY, t)
+    _, payloads, _ = eng._client_phase(state0, setup["data"], key)
+    sel = [plds.slice_payload(payloads, c) for c in honest]
+    batched = plds.stack_payloads(sel)
+    w = jnp.asarray([float(sizes[c]) for c in honest], jnp.float32)
+    wn = w / jnp.sum(w)
+    return algo.aggregate(state0, batched, wn,
+                          jnp.ones((len(honest),), bool))
+
+
+@pytest.mark.parametrize("role,reason", [("ones", "density"),
+                                         ("zeros", "density"),
+                                         ("flip", "decl_mismatch")])
+def test_adversary_quarantined_before_fold(setup, role, reason):
+    """Density bombs are caught by the absolute bounds, forged-CRC
+    bit-flips by the pre-decode popcount declaration; either way the
+    commit aggregates exactly the honest cohort."""
+    eng = _tree_engine(setup, adversary={1: role},
+                       config=AsyncConfig(quorum_frac=0.5))
+    commits = eng.tick(setup["data"])
+    assert len(commits) == 1
+    q = [e for e in eng.events if e["kind"] == "byz_quarantine"]
+    assert [(e["client"], e["reason"]) for e in q] == [(1, reason)]
+    assert eng.byz_quarantined == {reason: 1}
+    honest = [c for c in range(K) if c != 1]
+    assert commits[0]["clients"] == honest
+    assert commits[0]["n_folded"] == K - 1
+    ref = _honest_oracle(setup, eng, honest)
+    _assert_trees_close(eng.state.theta, ref.theta,
+                        rtol=1e-5, atol=1e-6)
+    # the tamper passed CRC verification — the declaration caught it
+    assert not any(e["kind"] == "corrupt_reject" for e in eng.events)
+
+
+def test_flip_without_declaration_would_fold(setup):
+    """Sanity on the threat model: the forged-CRC flip is INVISIBLE to
+    checksum verification — remove the declaration and it folds.
+    (Bitpack codec: a one-bit flip shifts density by 1/n, so no other
+    filter stage can catch it either.)"""
+    eng = _tree_engine(setup, adversary={1: "flip"}, codec="bitpack",
+                       config=AsyncConfig(quorum_frac=0.5))
+    eng._launch(setup["data"], 0)
+    assert all(e.msg.verify() for e in eng.pending)
+    eng._decl.clear()
+    eng._deliver(0)
+    assert not any(e["kind"] == "byz_quarantine" for e in eng.events)
+    assert sum(e["kind"] == "fold" for e in eng.events) == K
+
+
+# ---------------------------------------------------------------------------
+# failure domains: crash, failover, replay, partition
+# ---------------------------------------------------------------------------
+
+
+def _force_edge_faults(eng, schedule):
+    """Deterministically override the per-tick aggregator fault draws:
+    schedule[t] = (crashed_edges, partitioned_edges)."""
+    def fake(t):
+        crashed = np.zeros(eng.n_edges, bool)
+        parted = np.zeros(eng.n_edges, bool)
+        cr, pa = schedule.get(t, ((), ()))
+        crashed[list(cr)] = True
+        parted[list(pa)] = True
+        return crashed, parted
+    eng._edge_alive = fake
+
+
+def _partial_fold_engine(setup, eng):
+    """Launch tick 0 and deliver everyone EXCEPT client 3 (delayed one
+    tick), leaving an uncommitted partial fold on the edges."""
+    eng._launch(setup["data"], 0)
+    eng.pending[3].deliver = 1
+    eng._deliver(0)
+    assert not eng._maybe_commit(0)      # 3 < quorum of 4
+    eng.tick_idx = 1
+
+
+def test_edge_crash_replay_is_lossless(setup):
+    """A crash destroys edge 0's buffered partial fold (clients 0, 1);
+    replay from the fold log + failover to the sibling reconstructs it
+    EXACTLY: the crashed run commits theta bitwise equal to the
+    uncrashed run's, and the replayed deliveries are re-metered as real
+    wire traffic."""
+    mk = lambda: _tree_engine(
+        setup, config=AsyncConfig(quorum_frac=1.0, deadline_rounds=10))
+    ref, eng = mk(), mk()
+    _force_edge_faults(ref, {})
+    _force_edge_faults(eng, {1: ((0,), ())})   # edge 0 dies at tick 1
+    _partial_fold_engine(setup, ref)
+    _partial_fold_engine(setup, eng)
+    c_ref = ref.flush()
+    c_eng = eng.flush()
+    assert not any(e["kind"] == "agg_crash" for e in ref.events)
+    crash = [e for e in eng.events if e["kind"] == "agg_crash"]
+    assert crash and crash[0]["lost"] == 2     # fanout-2 edge was full
+    replays = [e for e in eng.events if e["kind"] == "replay"]
+    assert {e["client"] for e in replays} == {0, 1}
+    fo = [e for e in eng.events if e["kind"] == "failover"]
+    assert {e["client"] for e in fo} == {0, 1}
+    # integer count pooling is grouping-invariant: the re-routed fold
+    # commits the identical theta
+    assert len(c_ref) == len(c_eng) == 1
+    _assert_trees_equal(ref.state.theta, eng.state.theta)
+    _assert_trees_close(ref.state.floats, eng.state.floats,
+                        rtol=1e-5, atol=1e-6)
+    assert c_eng[0]["uplink_bits_measured"] \
+        > c_ref[0]["uplink_bits_measured"]
+    assert c_eng[0]["n_folded"] == c_ref[0]["n_folded"] == K
+    assert eng.buffer_ones == ref.buffer_ones == 0
+
+
+def test_edge_crash_without_failover_requeues(setup):
+    eng = _tree_engine(
+        setup, tree=TreeConfig(fanout=2, failover=False),
+        config=AsyncConfig(quorum_frac=1.0, deadline_rounds=10))
+    _force_edge_faults(eng, {0: ((0,), ())})
+    eng.tick(setup["data"])
+    ua = [e for e in eng.events if e["kind"] == "agg_unavailable"]
+    assert {e["client"] for e in ua} == {0, 1}
+    assert not any(e["kind"] == "failover" for e in eng.events)
+    # the requeued uplinks consumed no wire this tick
+    folded_now = [e for e in eng.events if e["kind"] == "fold"]
+    assert {e["client"] for e in folded_now} == {2, 3}
+    eng._edge_alive = lambda t: (np.zeros(2, bool), np.zeros(2, bool))
+    commits = eng.flush()
+    assert commits and commits[0]["n_folded"] == K
+
+
+def test_edge_partition_delays_without_wire(setup):
+    """A partitioned edge delays its deliveries one tick; they hit the
+    wire exactly once, so the run's totals and committed state match a
+    fault-free run bitwise."""
+    ref = _tree_engine(
+        setup, config=AsyncConfig(quorum_frac=1.0, deadline_rounds=10))
+    eng = _tree_engine(
+        setup, config=AsyncConfig(quorum_frac=1.0, deadline_rounds=10))
+    _force_edge_faults(ref, {})
+    _force_edge_faults(eng, {0: ((), (1,))})
+    c_ref = ref.tick(setup["data"])
+    assert len(c_ref) == 1
+    c_eng = eng.tick(setup["data"])
+    assert not c_eng                      # folded 2 < quorum 4
+    pa = [e for e in eng.events if e["kind"] == "agg_partition"]
+    assert {e["client"] for e in pa} == {2, 3}
+    c_eng = eng.flush()
+    assert c_eng and c_eng[0]["n_folded"] == K
+    assert eng.totals["uplink_bits_measured"] \
+        == ref.totals["uplink_bits_measured"]
+    _assert_trees_equal(ref.state.theta, eng.state.theta)
+    _assert_trees_equal(ref.state.floats, eng.state.floats)
+
+
+def test_faulted_run_is_deterministic(setup):
+    def run():
+        inj = FaultInjector(K, seed=7, agg_crash_prob=0.3,
+                            agg_partition_prob=0.15, corrupt_prob=0.1)
+        eng = _tree_engine(
+            setup, injector=inj,
+            config=AsyncConfig(quorum_frac=0.75, deadline_rounds=2))
+        for _ in range(6):
+            eng.tick(setup["data"])
+        eng.flush()
+        return eng
+    a, b = run(), run()
+    assert a.events == b.events
+    _assert_trees_equal(a.state, b.state)
+    assert a.totals == b.totals
+    assert a.byz.state_dict() == b.byz.state_dict()
+
+
+# ---------------------------------------------------------------------------
+# crash-consistent save / restore
+# ---------------------------------------------------------------------------
+
+
+def _faulted_pair(setup):
+    def mk():
+        inj = FaultInjector(K, seed=7, agg_crash_prob=0.3,
+                            agg_partition_prob=0.15)
+        return _tree_engine(
+            setup, injector=inj,
+            config=AsyncConfig(quorum_frac=0.75, deadline_rounds=2))
+    return mk(), mk()
+
+
+def test_save_restore_continues_identically(setup, tmp_path):
+    ref, eng = _faulted_pair(setup)
+    for t in range(3):
+        ref.tick(setup["data"])
+        eng.tick(setup["data"])
+    path = os.path.join(tmp_path, "eng")
+    eng.save(path)
+    _, fresh = _faulted_pair(setup)
+    fresh.restore(path)
+    assert not fresh._degraded_restore
+    assert fresh.byz.state_dict() == eng.byz.state_dict()
+    for t in range(3, 6):
+        ref.tick(setup["data"])
+        fresh.tick(setup["data"])
+    ref.flush()
+    fresh.flush()
+    assert fresh.events == ref.events
+    _assert_trees_equal(fresh.state, ref.state)
+    assert fresh.totals == ref.totals
+
+
+def test_corrupt_fold_log_degrades_restore(setup, tmp_path):
+    """A tampered fold-log checksum must refuse the buffered state and
+    fall back to the degraded theta-only restore (base-engine
+    doctrine), clearing the tree accumulators."""
+    eng = _tree_engine(
+        setup, config=AsyncConfig(quorum_frac=1.0, deadline_rounds=10))
+    _partial_fold_engine(setup, eng)     # folds logged, no commit
+    assert any(edge.log for edge in eng.edges)
+    path = os.path.join(tmp_path, "eng")
+    eng.save(path)
+    man = json.load(open(path + ".json"))
+    logs = man["extra"]["tree"]["edges"][0]["log"]
+    assert logs
+    logs[0]["checksum"] = (logs[0]["checksum"] + 1) % (1 << 32)
+    with open(path + ".json", "w") as f:
+        json.dump(man, f)
+    fresh = _tree_engine(
+        setup, config=AsyncConfig(quorum_frac=1.0, deadline_rounds=10))
+    fresh.restore(path)
+    assert fresh._degraded_restore
+    assert fresh.events[-1]["kind"] == "restore_degraded"
+    assert not fresh.pending
+    assert all(not e.log and not e.classes for e in fresh.edges)
+    _assert_trees_equal(fresh.state, eng.state)

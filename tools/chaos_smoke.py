@@ -18,6 +18,16 @@ fault injection on, then:
 
 Exit code 0 = pass; any assertion prints FAIL and exits 1 (the same
 convention as tools/check_bench.py / check_docs.py).
+
+``--tree`` runs the AGGREGATOR-TREE chaos gate instead: it drives
+`repro.runtime.agg_tree`'s CLI (a `TreeRoundEngine` with live edge
+crash/partition faults, per-tick crash-consistent saves), SIGKILLs the
+coordinator mid-round after the first commit is durable, resumes, and
+asserts EXACTLY-ONCE commits: every version printed by the killed run
+was durably saved before it was announced, the resumed run continues
+strictly after the restored version with monotone event ``seq``, the
+union of committed versions equals an uninterrupted reference run's,
+and the final theta digest matches the reference bit-for-bit.
 """
 from __future__ import annotations
 
@@ -54,11 +64,140 @@ def _fail(msg: str) -> None:
     sys.exit(1)
 
 
+def _tree_cmd(ckpt_dir: str, marker: str = "",
+              tick_sleep: float = 0.0) -> list:
+    cmd = [
+        sys.executable, "-m", "repro.runtime.agg_tree",
+        "--ticks", "8", "--clients", "8", "--fanout", "2",
+        "--agg-fault-prob", "0.3", "--quorum-frac", "0.75",
+        "--deadline", "2", "--seed", "0", "--ckpt-dir", ckpt_dir,
+    ]
+    if marker:
+        cmd += ["--marker", marker]
+    if tick_sleep:
+        cmd += ["--tick-sleep", str(tick_sleep)]
+    return cmd
+
+
+def _commits(text: str) -> list:
+    """[(version, seq)] in print order."""
+    return [(int(v), int(s)) for v, s in
+            re.findall(r"commit v=(\d+) seq=(\d+)", text)]
+
+
+def _digest(text: str) -> str:
+    m = re.search(r"theta digest ([0-9a-f]{8}) version (\d+)", text)
+    return m and (m.group(1), int(m.group(2)))
+
+
+def tree_main(args) -> None:
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+
+    # -- reference: one uninterrupted run -------------------------------
+    print("[1/3] uninterrupted reference run")
+    ref_dir = tempfile.mkdtemp(prefix="chaos_tree_ref_")
+    ref = subprocess.run(_tree_cmd(ref_dir), env=env,
+                         capture_output=True, text=True,
+                         timeout=args.timeout)
+    if ref.returncode != 0:
+        _fail(f"reference run failed (rc={ref.returncode}):\n"
+              + ref.stdout[-2000:] + ref.stderr[-2000:])
+    ref_commits = _commits(ref.stdout)
+    ref_digest = _digest(ref.stdout)
+    if not ref_commits or ref_digest is None:
+        _fail("reference run produced no commits/digest:\n" + ref.stdout)
+    print(f"      reference: versions "
+          f"{[v for v, _ in ref_commits]}, digest {ref_digest[0]}")
+
+    # -- phase 2: run with per-tick saves, SIGKILL an edge mid-round ----
+    print("[2/3] launch + SIGKILL after first durable commit")
+    ckpt_dir = tempfile.mkdtemp(prefix="chaos_tree_")
+    marker = os.path.join(ckpt_dir, "COMMITTED")
+    p = subprocess.Popen(_tree_cmd(ckpt_dir, marker, tick_sleep=0.4),
+                         env=env, stdout=subprocess.PIPE,
+                         stderr=subprocess.STDOUT)
+    deadline = time.time() + args.timeout
+    try:
+        while time.time() < deadline:
+            if p.poll() is not None:
+                _fail(f"tree driver exited (rc={p.returncode}) before "
+                      "the kill; output:\n" + p.stdout.read().decode())
+            if os.path.exists(marker):
+                break
+            time.sleep(0.1)
+        else:
+            _fail("no durable commit within the timeout")
+        # let it get ~mid-tick so the kill lands between save points
+        time.sleep(0.2)
+        os.kill(p.pid, signal.SIGKILL)
+        p.wait(timeout=30)
+    finally:
+        if p.poll() is None:
+            p.kill()
+    out1 = p.stdout.read().decode()
+    v1 = _commits(out1)
+    print(f"      killed; announced versions {[v for v, _ in v1]}")
+    if not v1:
+        _fail("marker existed but no commit line was printed")
+
+    # -- phase 3: resume + exactly-once assertions ----------------------
+    print("[3/3] resume + assert exactly-once commits")
+    out = subprocess.run(_tree_cmd(ckpt_dir), env=env,
+                         capture_output=True, text=True,
+                         timeout=args.timeout)
+    sys.stdout.write(out.stdout)
+    if out.returncode != 0:
+        _fail(f"resumed run failed (rc={out.returncode}):\n"
+              + out.stdout[-2000:] + out.stderr[-2000:])
+    m = re.search(r"resumed at tick (\d+) \(version (\d+), seq (\d+)\)",
+                  out.stdout)
+    if not m:
+        _fail("resumed run did not restore the bundle "
+              "(no 'resumed at tick' line)")
+    v_r, seq_r = int(m.group(2)), int(m.group(3))
+    v2 = _commits(out.stdout)
+    digest2 = _digest(out.stdout)
+    # every commit the killed run ANNOUNCED was saved first, so the
+    # restored version is at least the last announced one ...
+    if v_r < max(v for v, _ in v1):
+        _fail(f"announced commit v{max(v for v, _ in v1)} was not "
+              f"durable (resumed at v{v_r}) — the driver printed "
+              "before saving")
+    # ... and the resumed run must never re-commit an announced version
+    if any(v <= v_r for v, _ in v2):
+        _fail(f"version replayed after restore: resumed at v{v_r}, "
+              f"recommitted {[v for v, _ in v2 if v <= v_r]}")
+    seqs = [s for _, s in v2]
+    if seqs != sorted(seqs) or (seqs and seqs[0] <= seq_r):
+        _fail(f"event seq not monotone across the crash: restored "
+              f"seq {seq_r}, then {seqs}")
+    # exactly-once over the whole history: durable prefix + resumed
+    # tail == the uninterrupted reference, and the final theta matches
+    got = sorted({v for v, _ in v1 if v <= v_r} | {v for v, _ in v2})
+    want = sorted({v for v, _ in ref_commits})
+    if got != want:
+        _fail(f"committed versions diverged: {got} vs reference {want}")
+    if digest2 is None:
+        _fail("resumed run printed no theta digest")
+    if digest2 != ref_digest:
+        _fail(f"theta digest diverged across the crash: {digest2} vs "
+              f"reference {ref_digest}")
+    print(f"OK: killed at v{max(v for v, _ in v1)}, resumed at v{v_r}, "
+          f"versions {got} == reference, digest {digest2[0]} matches")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--timeout", type=float, default=600.0,
                     help="per-phase wall clock limit (s)")
+    ap.add_argument("--tree", action="store_true",
+                    help="run the aggregator-tree exactly-once gate "
+                         "instead of the trainer gate")
     args = ap.parse_args(argv)
+    if args.tree:
+        tree_main(args)
+        return
 
     ckpt_dir = tempfile.mkdtemp(prefix="chaos_smoke_")
     env = dict(os.environ)

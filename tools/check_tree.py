@@ -1,0 +1,105 @@
+#!/usr/bin/env python
+"""Validate the committed BENCH_tree.json against the static model.
+
+The aggregator tree's headline claim — per-commit root traffic is
+O(params), independent of client count — is checked without re-running
+the 10^6-client fold: the static `analysis.comm_model` table is
+DETERMINISTIC given (n_params, n_edges, acc_bits), so this gate
+recomputes it from the baseline's own meta and requires:
+
+  * every row's measured ledger bits == the recomputed static bits,
+    EXACTLY (the bench already asserted measured == static at
+    generation time; this catches a drifted cost model or a hand-edited
+    baseline);
+  * root bits are IDENTICAL across every client count (the O(params)
+    invariant), while the flat column grows as clients x params;
+  * the sweep actually spans the claim (>= 10^4 through >= 10^6
+    clients) and no row's per-edge cohort overflows the packed count
+    field width.
+
+Regenerate after an intentional wire-format change:
+
+    PYTHONPATH=src python benchmarks/tree_bench.py --json BENCH_tree.json
+
+Usage:
+    PYTHONPATH=src python tools/check_tree.py [--baseline BENCH_tree.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "tools"))
+sys.path.insert(0, str(ROOT / "src"))
+
+from _ci import finish                    # noqa: E402
+from repro.analysis import comm_model     # noqa: E402
+
+
+def check(doc: dict) -> list:
+    errors = []
+    meta = doc.get("meta", {})
+    n_params = int(meta.get("n_params", 0))
+    n_edges = int(meta.get("n_edges", 0))
+    acc_bits = int(meta.get("acc_bits", 0))
+    rows = doc.get("rows", [])
+    if not (n_params and n_edges and acc_bits and rows):
+        return [f"baseline incomplete: meta={meta}, {len(rows)} row(s)"]
+
+    static_rec = comm_model.tree_root_record_bits(
+        [n_params], acc_bits=acc_bits, n_classes=1, float_elems=0,
+        n_metrics=0)
+    if doc.get("static_record") != static_rec:
+        errors.append(f"static record drift: baseline "
+                      f"{doc.get('static_record')} vs recomputed "
+                      f"{static_rec} — regenerate BENCH_tree.json")
+    static = comm_model.tree_root_round_bits(
+        [n_params], n_edges, acc_bits=acc_bits, n_classes=1,
+        float_elems=0, n_metrics=0)
+
+    roots = set()
+    for r in rows:
+        n = r.get("clients")
+        if r.get("root_bits_measured") != static["root_bits"]:
+            errors.append(
+                f"clients={n}: measured {r.get('root_bits_measured')}b "
+                f"!= static {static['root_bits']}b")
+        if r.get("static_root_bits") != static["root_bits"]:
+            errors.append(f"clients={n}: baseline static column "
+                          f"{r.get('static_root_bits')} drifted from "
+                          f"recomputed {static['root_bits']}")
+        if r.get("flat_root_bits") != n * n_params:
+            errors.append(f"clients={n}: flat column "
+                          f"{r.get('flat_root_bits')} != clients x "
+                          f"params = {n * n_params}")
+        if r.get("clients_per_edge", 0) >= (1 << acc_bits):
+            errors.append(f"clients={n}: {r['clients_per_edge']} "
+                          f"clients/edge overflows acc_bits={acc_bits}")
+        roots.add(r.get("root_bits_measured"))
+    if len(roots) != 1:
+        errors.append(f"root bits vary with client count: "
+                      f"{sorted(roots)} — the O(params) claim broke")
+    counts = [r.get("clients", 0) for r in rows]
+    if min(counts) > 10_000 or max(counts) < 1_000_000:
+        errors.append(f"sweep {sorted(counts)} does not span "
+                      "10^4..10^6 clients")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=str(ROOT / "BENCH_tree.json"))
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        doc = json.load(f)
+    errors = check(doc)
+    print(f"# check_tree: {len(doc.get('rows', []))} row(s) validated "
+          f"against the static model")
+    return finish("check_tree", errors)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
